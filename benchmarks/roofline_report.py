@@ -1,0 +1,93 @@
+"""Roofline report: aggregates the dry-run cell JSONs into the
+EXPERIMENTS.md tables (per (arch x shape x mesh): the three terms, the
+dominant bottleneck, MODEL_FLOPS ratio, memory plan, fit verdicts)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun")
+
+
+def load_cells(results_dir: str = RESULTS_DIR) -> List[Dict]:
+    cells = []
+    for mesh in sorted(os.listdir(results_dir)) \
+            if os.path.isdir(results_dir) else []:
+        d = os.path.join(results_dir, mesh)
+        if not os.path.isdir(d):
+            continue
+        for f in sorted(os.listdir(d)):
+            if f.endswith(".json"):
+                with open(os.path.join(d, f)) as fh:
+                    cells.append(json.load(fh))
+    return cells
+
+
+def fmt_row(c: Dict) -> str:
+    a, s, m = c["arch"], c["shape"], c["mesh"]
+    if not c.get("runnable", True):
+        return f"| {a} | {s} | {m} | — | — | — | — | SKIP (sub-quadratic n/a) |"
+    if not c.get("ok"):
+        return f"| {a} | {s} | {m} | — | — | — | — | FAIL: {c.get('error','')[:60]} |"
+    r = c["roofline"]
+    mp = c.get("memory_plan", {})
+    fit = "fits" if mp.get("fits_16gib") else "OVER"
+    return (f"| {a} | {s} | {m} | {r['t_compute']:.3g} | {r['t_memory']:.3g}"
+            f" | {r['t_collective']:.3g} | **{r['dominant']}** "
+            f"{r['roofline_fraction']:.3f} | {mp.get('total_gib', 0):.1f}GiB"
+            f" {fit}; useful={c.get('useful_flops_ratio', 0):.2f} |")
+
+
+def markdown_table(cells: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | t_comp(s) | t_mem(s) | t_coll(s) | "
+           "dominant / roofline-frac | memory plan |\n"
+           "|---|---|---|---|---|---|---|---|")
+    return "\n".join([hdr] + [fmt_row(c) for c in cells])
+
+
+def pick_hillclimb_cells(cells: List[Dict]) -> Dict[str, Optional[Dict]]:
+    ok = [c for c in cells if c.get("ok") and c.get("runnable", True)
+          and c["mesh"] == "single"]
+    if not ok:
+        return {}
+    worst = min(ok, key=lambda c: c["roofline"]["roofline_fraction"])
+    coll = max(ok, key=lambda c: c["roofline"]["t_collective"]
+               / max(c["roofline"]["t_bound"], 1e-12))
+    # most representative of the paper: the biggest TRAIN cell (DP gradient
+    # shuffle across pods is the paper's mechanism)
+    train = [c for c in ok if c["shape"] == "train_4k"]
+    rep = max(train, key=lambda c: c["roofline"]["t_collective"]) \
+        if train else None
+    return {"worst_fraction": worst, "most_collective": coll,
+            "paper_representative": rep}
+
+
+def run(verbose: bool = True) -> List[Dict]:
+    cells = load_cells()
+    if verbose:
+        print(markdown_table(cells))
+        picks = pick_hillclimb_cells(cells)
+        for k, c in picks.items():
+            if c:
+                print(f"\nhillclimb[{k}]: {c['arch']} x {c['shape']} "
+                      f"(frac {c['roofline']['roofline_fraction']:.3f})")
+    return cells
+
+
+def main() -> None:
+    cells = load_cells()
+    for c in cells:
+        if c.get("ok"):
+            print(f"roofline_{c['mesh']}_{c['arch']}_{c['shape']},"
+                  f"{c.get('elapsed_s', 0) * 1e6:.0f},"
+                  f"dom={c['roofline']['dominant']}:"
+                  f"frac={c['roofline']['roofline_fraction']:.3f}")
+        else:
+            print(f"roofline_{c['mesh']}_{c['arch']}_{c['shape']},0,"
+                  f"{'skip' if not c.get('runnable', True) else 'fail'}")
+
+
+if __name__ == "__main__":
+    run()

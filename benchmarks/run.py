@@ -1,0 +1,43 @@
+"""Benchmark aggregator: one section per paper table + the systems benches.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--section table1|table2|shuffle|
+                                                      roofline|all]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import roofline_report, shuffle_bench, table1_costs, table2_locality
+
+SECTIONS = {
+    "table1": table1_costs.main,
+    "table2": table2_locality.main,
+    "shuffle": shuffle_bench.main,
+    "roofline": roofline_report.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--section", default="all",
+                    choices=["all"] + sorted(SECTIONS))
+    args = ap.parse_args()
+    names = sorted(SECTIONS) if args.section == "all" else [args.section]
+    failed = []
+    for name in names:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            SECTIONS[name]()
+        except Exception:                                    # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        sys.exit(f"benchmark sections failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Section IV walkthrough: why random hybrid assignments waste locality and
+how the exact min-cost-flow solver recovers it — with the optimizer's
+assignment verified against Theorem IV.1's four structural constraints.
+
+    PYTHONPATH=src python examples/locality_optimization.py
+"""
+import numpy as np
+
+from repro.core.assignment import check_hybrid_constraints, hybrid_assignment
+from repro.core.locality import (greedy_perm, locality_matrix,
+                                 locality_of_perm, optimal_perm,
+                                 place_replicas, random_perm)
+from repro.core.params import SchemeParams
+
+p = SchemeParams(K=16, P=4, Q=16, N=192, r=2, r_f=3)
+rng = np.random.default_rng(0)
+
+print(f"K={p.K} servers in P={p.P} racks; N={p.N} subfiles stored with "
+      f"r_f={p.r_f} HDFS-style replicas; map replication r={p.r}")
+
+replicas = place_replicas(p, rng, policy="hdfs")
+C = locality_matrix(p, replicas, lam=0.8)
+
+perms = {
+    "random": random_perm(p, rng),
+    "greedy": greedy_perm(p, C),
+    "optimal (min-cost flow)": optimal_perm(p, C),
+}
+print(f"\n{'assignment':26s} {'node locality':>14s} {'rack locality':>14s}")
+for name, perm in perms.items():
+    node, rack = locality_of_perm(p, replicas, perm)
+    print(f"{name:26s} {100 * node:13.1f}% {100 * rack:13.1f}%")
+    # every permutation must still be a VALID hybrid scheme (Thm IV.1)
+    check_hybrid_constraints(hybrid_assignment(p, perm=perm.tolist()))
+print("\nall three assignments satisfy Theorem IV.1's constraints "
+      "(no intra-rack replication; 0-or-M shared files; degree P-1; "
+      "layer transitivity) — locality is a FREE degree of freedom")
+
+print("\nthe flow solver is EXACT: LP integrality of transportation "
+      "polytopes makes the relaxation tight (DESIGN.md §2)")

@@ -1,0 +1,193 @@
+"""Map-task (subfile -> server set) assignment designs.
+
+Three designs from the paper:
+
+  * uncoded — each subfile mapped exactly once; server s gets the s-th block
+    of N/K subfiles.
+  * coded   — Coded MapReduce [Li-Maddah-Ali-Avestimehr]: each r-subset of the
+    K servers is assigned J = N / C(K, r) unique subfiles.
+  * hybrid  — the paper's scheme: subfiles are split into Kr layers of NP/K;
+    within layer j, each r-subset T of the P racks gets M unique subfiles,
+    mapped at servers {S_{t j} : t in T} (replication across racks only).
+
+An assignment is represented as
+
+  ``Assignment(scheme, params, servers_of_subfile, meta)``
+
+where ``servers_of_subfile[i]`` is the sorted tuple of flat server ids that
+map subfile i.  For the hybrid scheme, ``meta['slot_of_subfile'][i]`` gives
+the structural slot (layer, rack_subset_index, w) of subfile i, and a
+*permutation* of subfiles over slots yields every other valid hybrid
+assignment (the degree of freedom exploited by the Section-IV locality
+optimizer).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from math import comb
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from .params import SchemeParams
+
+
+@dataclasses.dataclass(frozen=True)
+class Assignment:
+    scheme: str                                   # 'uncoded' | 'coded' | 'hybrid'
+    params: SchemeParams
+    servers_of_subfile: Tuple[Tuple[int, ...], ...]
+    meta: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    @property
+    def subfiles_of_server(self) -> List[List[int]]:
+        out: List[List[int]] = [[] for _ in range(self.params.K)]
+        for i, servers in enumerate(self.servers_of_subfile):
+            for s in servers:
+                out[s].append(i)
+        return out
+
+    def map_load(self) -> np.ndarray:
+        """Number of map tasks executed at each server."""
+        load = np.zeros(self.params.K, dtype=np.int64)
+        for servers in self.servers_of_subfile:
+            for s in servers:
+                load[s] += 1
+        return load
+
+
+# ---------------------------------------------------------------------------
+# Structural enumerations
+# ---------------------------------------------------------------------------
+
+def rack_subsets(P: int, r: int) -> List[Tuple[int, ...]]:
+    """All r-subsets of the P racks, in deterministic (lexicographic) order."""
+    return list(itertools.combinations(range(P), r))
+
+
+def hybrid_slots(params: SchemeParams) -> List[Tuple[int, int, int]]:
+    """All (layer, rack_subset_index, w) slots of the hybrid design.
+
+    One slot per subfile; slot order is the canonical subfile order used by
+    :func:`hybrid_assignment` when ``perm`` is None.
+    """
+    params.validate_hybrid()
+    slots = []
+    n_subsets = comb(params.P, params.r)
+    for layer in range(params.n_layers):
+        for t_idx in range(n_subsets):
+            for w in range(params.M):
+                slots.append((layer, t_idx, w))
+    return slots
+
+
+def slot_servers(params: SchemeParams, layer: int, t_idx: int) -> Tuple[int, ...]:
+    """Servers mapping the subfiles of slot (layer, t_idx, *)."""
+    T = rack_subsets(params.P, params.r)[t_idx]
+    return tuple(params.server_id(rack, layer) for rack in T)
+
+
+# ---------------------------------------------------------------------------
+# Assignment constructors
+# ---------------------------------------------------------------------------
+
+def uncoded_assignment(params: SchemeParams) -> Assignment:
+    params.validate_uncoded()
+    per = params.N // params.K
+    servers = tuple((i // per,) for i in range(params.N))
+    return Assignment("uncoded", params, servers)
+
+
+def coded_assignment(params: SchemeParams) -> Assignment:
+    params.validate_coded()
+    subsets = list(itertools.combinations(range(params.K), params.r))
+    J = params.J
+    servers: List[Tuple[int, ...]] = []
+    subset_of_subfile: List[int] = []
+    for t_idx, T in enumerate(subsets):
+        for _ in range(J):
+            servers.append(tuple(T))
+            subset_of_subfile.append(t_idx)
+    assert len(servers) == params.N
+    return Assignment("coded", params, tuple(servers),
+                      meta={"subset_of_subfile": tuple(subset_of_subfile)})
+
+
+def hybrid_assignment(params: SchemeParams,
+                      perm: Sequence[int] | None = None) -> Assignment:
+    """Hybrid Coded MapReduce assignment.
+
+    ``perm`` is a permutation of range(N): subfile ``perm[slot_index]`` is
+    placed into the slot with that index (identity if None).  Any permutation
+    yields a valid hybrid scheme — this is the locality-optimization degree of
+    freedom of Section IV.
+    """
+    params.validate_hybrid()
+    slots = hybrid_slots(params)
+    if perm is None:
+        perm = list(range(params.N))
+    if sorted(perm) != list(range(params.N)):
+        raise ValueError("perm must be a permutation of range(N)")
+
+    servers: List[Tuple[int, ...] | None] = [None] * params.N
+    slot_of_subfile: List[Tuple[int, int, int] | None] = [None] * params.N
+    for slot_index, (layer, t_idx, w) in enumerate(slots):
+        subfile = perm[slot_index]
+        servers[subfile] = slot_servers(params, layer, t_idx)
+        slot_of_subfile[subfile] = (layer, t_idx, w)
+    return Assignment("hybrid", params, tuple(servers),  # type: ignore[arg-type]
+                      meta={"slot_of_subfile": tuple(slot_of_subfile),
+                            "perm": tuple(perm)})
+
+
+# ---------------------------------------------------------------------------
+# Validation of the structural constraints (Theorem IV.1, conditions 1-4)
+# ---------------------------------------------------------------------------
+
+def pair_common_counts(assignment: Assignment) -> np.ndarray:
+    """C[j, k] = number of subfiles mapped at both servers j and k."""
+    K = assignment.params.K
+    X = np.zeros((assignment.params.N, K), dtype=np.int64)
+    for i, servers in enumerate(assignment.servers_of_subfile):
+        for s in servers:
+            X[i, s] = 1
+    common = X.T @ X
+    np.fill_diagonal(common, 0)
+    return common
+
+
+def check_hybrid_constraints(assignment: Assignment) -> None:
+    """Assert Theorem IV.1's four constraints hold for a hybrid assignment."""
+    p = assignment.params
+    common = pair_common_counts(assignment)
+    K, M = p.K, p.M
+    Y = (common > 0).astype(np.int64)
+
+    # (1) no common files within a rack
+    for j in range(K):
+        for k in range(K):
+            if j != k and p.rack_of(j) == p.rack_of(k):
+                assert common[j, k] == 0, (j, k, common[j, k])
+    # (2) any pair of servers shares 0 or exactly M subfiles  (r = 2 reading;
+    #     for general r the common count over a co-assigned pair is a multiple
+    #     of M given by the number of r-subsets containing both racks)
+    expected = M * comb(p.P - 2, p.r - 2) if p.r >= 2 else 0
+    for j in range(K):
+        for k in range(K):
+            if j == k:
+                continue
+            assert common[j, k] in (0, expected), (j, k, common[j, k], expected)
+    # (3) degree: each server shares files with exactly (P-1)*[structure] peers
+    #     (for r=2 this is P-1; generally the other r-subset members across
+    #      all subsets containing the server's rack collapse to the P-1 other
+    #      layer members)
+    if p.r >= 2:
+        deg = Y.sum(axis=1)
+        assert (deg == p.P - 1).all(), deg
+    # (4) transitivity within a layer
+    for i in range(K):
+        for j in range(K):
+            for k in range(K):
+                if len({i, j, k}) == 3:
+                    assert Y[i, j] + Y[j, k] + Y[i, k] != 2, (i, j, k)

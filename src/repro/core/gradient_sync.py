@@ -1,0 +1,180 @@
+"""Gradient aggregation with Hybrid-Coded-MapReduce structure.
+
+The paper's map-replication + two-stage shuffle maps onto data-parallel
+gradient synchronization as follows (racks = slow-tier groups, e.g. TPU pods;
+servers = chips):
+
+  * map task            = computing one microbatch-chunk's gradient
+  * replication r = 2   = every chunk {a, b} is computed by racks a AND b
+  * cross-rack stage    = coded reduce-scatter over the slow axis: each rack
+    pre-sums the chunks it *owns* (unique owner per chunk), omitting chunks
+    the destination already has — delivering the receive-side optimum
+    G * (1 - r/P) cross-rack bytes per rack instead of uncoded G * (1 - 1/P)
+  * intra-rack stage    = ordinary fast-axis reduce-scatter / all-gather
+
+Because gradient aggregation is SUM-reducible, the linear-combining function
+f(.) of the paper is realized *natively on the wire* (partial sums), and the
+same replication yields STRAGGLER TOLERANCE: any single rack's chunks are
+recoverable from its pair partners (:func:`coded_reduce_scatter_r2` with
+``failed``).
+
+Three pjit-level modes (chosen purely via shardings; see launch/dryrun.py):
+  dp_flat       — batch sharded over ('pod','data'); XLA all-reduces over both
+  dp_hybrid_r2  — batch replicated over 'pod' (r = P = 2 full map replication
+                  across pods): ZERO cross-pod gradient traffic, 2x map FLOPs
+                  — the paper's L_cro = QN/r (1 - r/P) = 0 corner, exactly
+  fsdp          — params/optimizer sharded over 'data' (ZeRO-3): all-gather /
+                  reduce-scatter; composes with either of the above
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# shard_map-level collectives (manual axes)
+# ---------------------------------------------------------------------------
+
+def hierarchical_allreduce(x: jax.Array, fast_axis: str, slow_axis: str,
+                           scatter_dim: int = 0) -> jax.Array:
+    """Two-stage all-reduce: intra-rack reduce-scatter (fast links), cross-rack
+    all-reduce on 1/Kr-sized shards (slow links, all layers in parallel —
+    the paper's per-layer decomposition of the cross-rack stage), intra-rack
+    all-gather.  Mathematically identical to psum over both axes."""
+    x = jax.lax.psum_scatter(x, fast_axis, scatter_dimension=scatter_dim,
+                             tiled=True)
+    x = jax.lax.psum(x, slow_axis)
+    return jax.lax.all_gather(x, fast_axis, axis=scatter_dim, tiled=True)
+
+
+def _chunk_pairs(P_: int) -> list[tuple[int, int]]:
+    return [(a, b) for a in range(P_) for b in range(a + 1, P_)]
+
+
+def chunk_index_table(P_: int) -> np.ndarray:
+    """T[a] = indices (into the pair list) of chunks containing rack a, in
+    ascending partner order; shape [P, P-1]."""
+    pairs = _chunk_pairs(P_)
+    out = np.zeros((P_, P_ - 1), dtype=np.int64)
+    for a in range(P_):
+        out[a] = [i for i, pr in enumerate(pairs) if a in pr]
+    return out
+
+
+def batch_chunk_for_rack(batch: np.ndarray | jax.Array, P_: int,
+                         rack: int) -> list:
+    """Split a global batch into C(P,2) chunks and return the P-1 chunks that
+    rack `rack` must map (replication r=2).  Host-side helper for the data
+    pipeline."""
+    pairs = _chunk_pairs(P_)
+    n = len(pairs)
+    chunks = np.array_split(np.asarray(batch), n)
+    return [chunks[i] for i, pr in enumerate(pairs) if rack in pr]
+
+
+def coded_reduce_scatter_r2(chunk_grads: jax.Array, axis: str,
+                            P_: int, failed: int | None = None) -> jax.Array:
+    """Cross-rack stage of hybrid-coded gradient sync (r = 2).
+
+    chunk_grads: [P-1, G] — this rack's per-chunk gradient partials, rows
+      ordered by ascending partner rack (see :func:`chunk_index_table`).
+      G must be divisible by P.
+    Returns [G/P]: this rack's shard of the TOTAL gradient sum over all
+      C(P,2) chunks (each chunk counted exactly once).
+
+    Cross-rack bytes per rack: (P-1) * (P-2)/(P-1) * G/P = G (1 - 2/P),
+    the receive-side optimum with r = 2 — vs uncoded G (1 - 1/P).
+
+    ``failed``: id of a straggling/failed rack whose transmissions are lost.
+    Ownership of its chunks transparently falls back to the partner rack, so
+    the result is STILL the exact full-batch gradient (r=2 erasure tolerance).
+    The failed rack's own return value is garbage; survivors are exact.
+    """
+    me = jax.lax.axis_index(axis)
+    G = chunk_grads.shape[-1]
+    assert G % P_ == 0, (G, P_)
+    shard = G // P_
+    partners = _partners_matrix(P_)            # [P, P-1] partner of each row
+
+    part = jnp.asarray(partners)[me]           # [P-1] partner rack per chunk
+    # ownership: chunk {a,b} owned by min(a,b); if owner failed, partner owns
+    own = part > me
+    if failed is not None:
+        own = jnp.where(part == failed, me != failed, own)
+        own = jnp.where(me == failed, False, own)
+
+    # send buffer: for each destination z, sum of my OWNED chunks not
+    # containing z, restricted to z's shard.
+    x = chunk_grads.reshape(P_ - 1, P_, shard)          # split into shards
+    def block_for(z):
+        sel = own & (part != z)                          # [P-1]
+        return jnp.einsum("c,cs->s", sel.astype(x.dtype), x[:, z, :])
+    sends = jax.vmap(block_for)(jnp.arange(P_))          # [P, shard]
+    recvd = jax.lax.all_to_all(sends, axis, split_axis=0, concat_axis=0,
+                               tiled=True)               # [P, shard]
+    if failed is not None:
+        recvd = recvd * (jnp.arange(P_) != failed).astype(recvd.dtype)[:, None]
+    far = recvd.sum(axis=0) - recvd[me]                  # exclude self slot
+    # local part: ALL chunks containing me, each counted once (I am in them)
+    local = x[:, :, :].sum(axis=0)[me]                   # sum over my chunks
+    return far + local
+
+
+def _partners_matrix(P_: int) -> np.ndarray:
+    pairs = _chunk_pairs(P_)
+    out = np.zeros((P_, P_ - 1), dtype=np.int64)
+    for a in range(P_):
+        out[a] = [pr[0] if pr[1] == a else pr[1]
+                  for pr in pairs if a in pr]
+    return out
+
+
+def uncoded_reduce_scatter(grad: jax.Array, axis: str, P_: int) -> jax.Array:
+    """Baseline: plain reduce-scatter of a full local gradient [G] -> [G/P]."""
+    return jax.lax.psum_scatter(grad, axis, scatter_dimension=0, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# pjit-level sharding policies (used by trainer / dryrun)
+# ---------------------------------------------------------------------------
+
+DP_MODES = ("dp_flat", "dp_hybrid_r2")
+
+
+def batch_pspec(mode: str, multi_pod: bool) -> P:
+    """PartitionSpec of the token batch under a DP sync mode.
+
+    dp_flat      — shard over every data-parallel axis.
+    dp_hybrid_r2 — replicate over 'pod' (the paper's map replication with
+                   r = P: every pod maps every chunk => zero cross-pod
+                   shuffle), shard over 'data' only.
+    """
+    if mode not in DP_MODES:
+        raise ValueError(f"unknown DP mode {mode}")
+    if not multi_pod:
+        return P("data")
+    return P(("pod", "data")) if mode == "dp_flat" else P("data")
+
+
+def grad_sync_cost(G_bytes: float, P_: int, r: int, mode: str) -> dict:
+    """Analytic slow-tier byte cost per rack of one gradient sync (for the
+    roofline's collective term and EXPERIMENTS.md).  Receive-side accounting,
+    point-to-point links."""
+    if mode == "uncoded":
+        rs = G_bytes * (1 - 1 / P_)
+    elif mode == "coded_r":
+        rs = G_bytes * (1 - r / P_)
+    elif mode == "full_replication":
+        rs = 0.0
+    else:
+        raise ValueError(mode)
+    return {"cross_rack_bytes_per_rack": rs,
+            "map_flops_multiplier": {"uncoded": 1, "coded_r": r,
+                                     "full_replication": P_}[mode]}

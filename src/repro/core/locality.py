@@ -1,0 +1,271 @@
+"""Section IV — data-locality-aware Map-task assignment.
+
+Valid Hybrid-Coded-MapReduce assignments are exactly the permutations of
+subfiles over the structural slots (layer, rack-subset, w); Theorem IV.1's
+four constraints characterize them.  Choosing the permutation that maximizes
+
+    sum_i C(i, pair_i),   C(i,j,k) = lam*NodeLocality + (1-lam)*RackLocality
+
+is a transportation problem: N subfiles -> (layer, rack-subset) groups of
+capacity M, with a per-(subfile, group) score.  Flow integrality makes the
+LP optimum integral, so min-cost max-flow solves the integer program of
+Theorem IV.1 EXACTLY (the paper leaves the solver unspecified).
+
+A greedy solver and the random baseline of Table II are also provided.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from math import comb
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from .assignment import hybrid_slots, rack_subsets, slot_servers
+from .params import SchemeParams
+
+
+# ---------------------------------------------------------------------------
+# Storage replica placement (HDFS-style)
+# ---------------------------------------------------------------------------
+
+def place_replicas(p: SchemeParams, rng: np.random.Generator,
+                   policy: str = "uniform") -> np.ndarray:
+    """Replica locations, shape [N, r_f]; no two replicas share a server.
+
+    ``uniform``: r_f distinct servers uniformly at random (the paper's model).
+    ``hdfs``: first replica uniform; second in a different rack; third in the
+    second's rack on a different server (Hadoop default for r_f = 3).
+    """
+    out = np.zeros((p.N, p.r_f), dtype=np.int64)
+    for i in range(p.N):
+        if policy == "uniform":
+            out[i] = rng.choice(p.K, size=p.r_f, replace=False)
+        elif policy == "hdfs":
+            first = int(rng.integers(p.K))
+            chosen = [first]
+            if p.r_f >= 2:
+                other_racks = [x for x in range(p.K)
+                               if p.rack_of(x) != p.rack_of(first)]
+                second = int(rng.choice(other_racks))
+                chosen.append(second)
+            if p.r_f >= 3:
+                same_rack = [x for x in range(p.K)
+                             if p.rack_of(x) == p.rack_of(chosen[1])
+                             and x != chosen[1]]
+                chosen.append(int(rng.choice(same_rack)))
+            while len(chosen) < p.r_f:
+                rest = [x for x in range(p.K) if x not in chosen]
+                chosen.append(int(rng.choice(rest)))
+            out[i] = chosen[:p.r_f]
+        else:
+            raise ValueError(policy)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Locality measure  C(i, j, k)
+# ---------------------------------------------------------------------------
+
+def group_servers(p: SchemeParams) -> List[Tuple[int, ...]]:
+    """Server tuple of every (layer, rack-subset) group, group-major order
+    matching :func:`repro.core.assignment.hybrid_slots`."""
+    subsets = rack_subsets(p.P, p.r)
+    out = []
+    for layer in range(p.n_layers):
+        for t_idx in range(len(subsets)):
+            out.append(slot_servers(p, layer, t_idx))
+    return out
+
+
+def locality_matrix(p: SchemeParams, replicas: np.ndarray,
+                    lam: float = 0.8) -> np.ndarray:
+    """C[i, g] = lam*NodeLocality + (1-lam)*RackLocality of assigning subfile
+    i to group g's server set (Section V's measure, generalized to r >= 2)."""
+    if not (0.5 < lam <= 1.0):
+        raise ValueError("paper requires lam in (0.5, 1]")
+    groups = group_servers(p)
+    C = np.zeros((p.N, len(groups)))
+    replica_racks = [set(p.rack_of(int(s)) for s in replicas[i])
+                     for i in range(p.N)]
+    replica_servers = [set(int(s) for s in replicas[i]) for i in range(p.N)]
+    for g, servers in enumerate(groups):
+        racks = [p.rack_of(s) for s in servers]
+        for i in range(p.N):
+            node = sum(1 for s in servers if s in replica_servers[i])
+            rack = sum(1 for rk in racks if rk in replica_racks[i])
+            C[i, g] = lam * node + (1.0 - lam) * rack
+    return C
+
+
+def locality_of_perm(p: SchemeParams, replicas: np.ndarray,
+                     perm: Sequence[int]) -> Tuple[float, float]:
+    """(node_locality, rack_locality) in [0, 1] — Table II's percentages:
+    fraction of (map-replica, server) placements that are local."""
+    groups = group_servers(p)
+    slots = hybrid_slots(p)
+    subsets = rack_subsets(p.P, p.r)
+    node_hits = 0
+    rack_hits = 0
+    for slot_index, (layer, t_idx, _w) in enumerate(slots):
+        i = perm[slot_index]
+        g = layer * len(subsets) + t_idx
+        servers = groups[g]
+        rset = set(int(s) for s in replicas[i])
+        rracks = set(p.rack_of(int(s)) for s in replicas[i])
+        node_hits += sum(1 for s in servers if s in rset)
+        rack_hits += sum(1 for s in servers if p.rack_of(s) in rracks)
+    denom = p.N * p.r
+    return node_hits / denom, rack_hits / denom
+
+
+# ---------------------------------------------------------------------------
+# Solvers
+# ---------------------------------------------------------------------------
+
+def random_perm(p: SchemeParams, rng: np.random.Generator) -> np.ndarray:
+    """Table II's 'Ran' baseline: an arbitrary valid hybrid assignment."""
+    return rng.permutation(p.N)
+
+
+def greedy_perm(p: SchemeParams, C: np.ndarray) -> np.ndarray:
+    """Greedy: repeatedly place the highest-scoring (subfile, group) pair
+    into a free slot.  Fast, near-optimal; used as a scalable fallback."""
+    n_groups = C.shape[1]
+    cap = np.full(n_groups, p.M, dtype=np.int64)
+    order = np.argsort(-C, axis=None)
+    assigned = np.full(p.N, -1, dtype=np.int64)
+    placed = 0
+    for flat in order:
+        i, g = divmod(int(flat), n_groups)
+        if assigned[i] >= 0 or cap[g] == 0:
+            continue
+        assigned[i] = g
+        cap[g] -= 1
+        placed += 1
+        if placed == p.N:
+            break
+    return _groups_to_perm(p, assigned)
+
+
+def optimal_perm(p: SchemeParams, C: np.ndarray) -> np.ndarray:
+    """Exact solution of Theorem IV.1 via min-cost max-flow (SSP + Dijkstra
+    with Johnson potentials).  Integral by flow integrality."""
+    n, n_groups = C.shape
+    # node ids: 0 = source, 1..n subfiles, n+1..n+n_groups groups, last = sink
+    S, T = 0, n + n_groups + 1
+    n_nodes = T + 1
+    graph: List[List[int]] = [[] for _ in range(n_nodes)]
+    # edge arrays
+    to: List[int] = []
+    cap: List[int] = []
+    cost: List[float] = []
+
+    def add_edge(u: int, v: int, c: int, w: float) -> None:
+        graph[u].append(len(to)); to.append(v); cap.append(c); cost.append(w)
+        graph[v].append(len(to)); to.append(u); cap.append(0); cost.append(-w)
+
+    cmax = float(C.max()) if C.size else 0.0
+    for i in range(n):
+        add_edge(S, 1 + i, 1, 0.0)
+        for g in range(n_groups):
+            # shift costs so all are >= 0 for Dijkstra (maximize C == minimize
+            # cmax - C); the shift is constant per unit flow, so argmin is
+            # unchanged.
+            add_edge(1 + i, 1 + n + g, 1, cmax - float(C[i, g]))
+    for g in range(n_groups):
+        add_edge(1 + n + g, T, p.M, 0.0)
+
+    potential = np.zeros(n_nodes)
+    flow_assigned = np.full(n, -1, dtype=np.int64)
+    INF = float("inf")
+    for _ in range(n):  # one augmentation per subfile (unit flows)
+        dist = np.full(n_nodes, INF)
+        dist[S] = 0.0
+        prev_edge = np.full(n_nodes, -1, dtype=np.int64)
+        pq = [(0.0, S)]
+        while pq:
+            d, u = heapq.heappop(pq)
+            if d > dist[u] + 1e-12:
+                continue
+            for eid in graph[u]:
+                if cap[eid] <= 0:
+                    continue
+                v = to[eid]
+                nd = d + cost[eid] + potential[u] - potential[v]
+                if nd < dist[v] - 1e-12:
+                    dist[v] = nd
+                    prev_edge[v] = eid
+                    heapq.heappush(pq, (nd, v))
+        assert dist[T] < INF, "flow infeasible: check divisibility of N"
+        finite = dist < INF
+        potential[finite] += dist[finite]
+        # augment one unit along S->T
+        v = T
+        while v != S:
+            eid = int(prev_edge[v])
+            cap[eid] -= 1
+            cap[eid ^ 1] += 1
+            v = to[eid ^ 1]
+    # read off subfile -> group assignment
+    for i in range(n):
+        for eid in graph[1 + i]:
+            if to[eid] != S and cap[eid ^ 1] > 0 and eid % 2 == 0:
+                flow_assigned[i] = to[eid] - 1 - n
+                break
+    assert (flow_assigned >= 0).all()
+    return _groups_to_perm(p, flow_assigned)
+
+
+def _groups_to_perm(p: SchemeParams, group_of_subfile: np.ndarray) -> np.ndarray:
+    """Convert a subfile->group map into a slot permutation (slot_index ->
+    subfile), filling each group's M slots in subfile order."""
+    n_groups = int(group_of_subfile.max()) + 1 if len(group_of_subfile) else 0
+    subsets = rack_subsets(p.P, p.r)
+    n_groups = max(n_groups, p.n_layers * len(subsets))
+    perm = np.full(p.N, -1, dtype=np.int64)
+    next_w = np.zeros(n_groups, dtype=np.int64)
+    for i in range(p.N):
+        g = int(group_of_subfile[i])
+        w = int(next_w[g]); next_w[g] += 1
+        assert w < p.M, "group over capacity"
+        slot_index = g * p.M + w
+        perm[slot_index] = i
+    assert (perm >= 0).all()
+    return perm
+
+
+# ---------------------------------------------------------------------------
+# Table II driver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LocalityResult:
+    node_random: float
+    rack_random: float
+    node_opt: float
+    rack_opt: float
+    node_greedy: float
+    rack_greedy: float
+
+
+def table2_experiment(p: SchemeParams, lam: float = 0.8, seed: int = 0,
+                      trials: int = 5, policy: str = "uniform",
+                      solver: str = "optimal") -> LocalityResult:
+    """Run Table II's comparison for one row, averaged over ``trials``
+    random replica placements."""
+    rng = np.random.default_rng(seed)
+    acc = np.zeros(6)
+    for _ in range(trials):
+        replicas = place_replicas(p, rng, policy)
+        C = locality_matrix(p, replicas, lam)
+        rp = random_perm(p, rng)
+        op = optimal_perm(p, C) if solver == "optimal" else greedy_perm(p, C)
+        gp = greedy_perm(p, C)
+        nr, rr = locality_of_perm(p, replicas, rp)
+        no, ro = locality_of_perm(p, replicas, op)
+        ng, rg = locality_of_perm(p, replicas, gp)
+        acc += np.array([nr, rr, no, ro, ng, rg])
+    acc /= trials
+    return LocalityResult(*acc.tolist())

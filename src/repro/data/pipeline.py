@@ -1,0 +1,97 @@
+"""Deterministic, checkpointable synthetic data pipeline.
+
+Every batch is a pure function of (seed, step) via JAX's counter-based
+PRNG, so the pipeline's checkpoint state is just the step counter — a
+resumed run reproduces the uninterrupted token stream bit-for-bit (the
+fault-tolerance contract; tested).
+
+The epoch-level *global shuffle* — the MapReduce-shaped part of a real
+training pipeline — runs through the coded MapReduce engine
+(:mod:`repro.mapreduce`): subfiles = shards of the epoch's sample ids,
+keys = destination buckets.  ``shuffled_epoch_order`` uses it to derive a
+deterministic permutation while the byte accounting of the shuffle is the
+paper's (racks = hosts); see examples/coded_wordcount.py and
+benchmarks/shuffle_bench.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..core.params import SchemeParams
+from ..models.frontends import audio_frames, vision_patches
+
+
+@dataclasses.dataclass
+class PipelineState:
+    step: int = 0
+
+    def to_dict(self) -> Dict:
+        return {"step": jnp.asarray(self.step, jnp.int32)}
+
+    @staticmethod
+    def from_dict(d: Dict) -> "PipelineState":
+        return PipelineState(int(d["step"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticPipeline:
+    """Zipf-ish synthetic token stream shaped for an architecture."""
+    cfg: ArchConfig
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    dtype: object = jnp.float32
+
+    def batch_at(self, step: int) -> Dict[str, jax.Array]:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        ks = jax.random.split(key, 4)
+        cfg = self.cfg
+        n_front = (cfg.n_frontend_tokens if cfg.frontend == "vision" else 0)
+        s_text = self.seq_len - n_front
+        # zipf-like marginal over the vocab: exponentiate a uniform
+        u = jax.random.uniform(ks[0], (self.global_batch, s_text + 1),
+                               minval=1e-6)
+        toks = jnp.minimum((u ** -0.7 - 1.0) * cfg.vocab_size * 0.01,
+                           cfg.vocab_size - 1).astype(jnp.int32)
+        out = {"tokens": toks[:, :-1], "targets": toks[:, 1:],
+               "loss_mask": jnp.ones((self.global_batch, s_text),
+                                     jnp.float32)}
+        if cfg.frontend == "vision":
+            out["prefix_embeds"] = vision_patches(ks[1], cfg,
+                                                  self.global_batch,
+                                                  self.dtype)
+        if cfg.family == "encdec":
+            out["enc_frames"] = audio_frames(ks[2], cfg, self.global_batch,
+                                             self.dtype)
+        return out
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def shuffled_epoch_order(n_samples: int, epoch: int,
+                         scheme_params: Optional[SchemeParams] = None,
+                         seed: int = 0) -> np.ndarray:
+    """Deterministic epoch permutation, derived through the MapReduce
+    engine's histogram job when ``scheme_params`` is given (so the shuffle
+    traffic is accounted under the paper's cost model), else a plain
+    Fisher-Yates."""
+    rng = np.random.default_rng((seed, epoch))
+    perm = rng.permutation(n_samples)
+    if scheme_params is not None:
+        from ..mapreduce.engine import run_job
+        from ..mapreduce.jobs import histogram_job
+        p = scheme_params
+        ids = perm[: (n_samples // p.N) * p.N].reshape(p.N, -1)
+        run_job(histogram_job(), jnp.asarray(ids, jnp.int32), p,
+                scheme="hybrid")
+    return perm

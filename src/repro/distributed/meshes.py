@@ -1,0 +1,10 @@
+"""Mesh construction helpers (axis_types pinned to silence 0.9 migration)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_mesh(shape: tuple, names: tuple) -> Mesh:
+    return jax.make_mesh(shape, names,
+                         axis_types=(AxisType.Auto,) * len(names))

@@ -1,0 +1,84 @@
+"""Jit'd public wrappers: shape normalization + padding for the coded
+combine kernels.  Auto-selects interpret mode off-TPU."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_t",))
+def coded_encode(streams: Sequence[jax.Array], coeffs: jax.Array,
+                 *, block_t: int = 256) -> jax.Array:
+    """f(v_1..v_r) = sum_i c_i v_i.  streams: r arrays of equal shape."""
+    xs = jnp.stack(streams)
+    r = xs.shape[0]
+    xs2 = xs.reshape(r, -1, xs.shape[-1])
+    T, d = xs2.shape[1:]
+    pd = (-d) % 128
+    pt = (-T) % block_t
+    xs2 = jnp.pad(xs2, ((0, 0), (0, pt), (0, pd)))
+    out = kernel.encode_pallas(xs2, coeffs, block_t=block_t,
+                               interpret=not _on_tpu())
+    return out[:T, :d].reshape(streams[0].shape)
+
+
+@partial(jax.jit, static_argnames=("block_t",))
+def coded_decode(f: jax.Array, known: Sequence[jax.Array],
+                 coeffs: jax.Array, *, block_t: int = 256) -> jax.Array:
+    """Recover the missing stream; coeffs[0] = missing coefficient."""
+    ks = jnp.stack(known)
+    rm1 = ks.shape[0]
+    shp = f.shape
+    f2 = f.reshape(-1, shp[-1])
+    ks2 = ks.reshape(rm1, -1, shp[-1])
+    pd = (-shp[-1]) % 128
+    pt = (-f2.shape[0]) % block_t
+    T, d = f2.shape
+    f2 = jnp.pad(f2, ((0, pt), (0, pd)))
+    ks2 = jnp.pad(ks2, ((0, 0), (0, pt), (0, pd)))
+    out = kernel.decode_pallas(f2, ks2, coeffs, block_t=block_t,
+                               interpret=not _on_tpu())
+    return out[:T, :d].reshape(shp)
+
+
+@partial(jax.jit, static_argnames=("block_t",))
+def xor_encode(streams: Sequence[jax.Array], *, block_t: int = 256,
+               ) -> jax.Array:
+    xs = jnp.stack(streams)
+    r = xs.shape[0]
+    shp = streams[0].shape
+    xs2 = xs.reshape(r, -1, shp[-1])
+    pd = (-shp[-1]) % 128
+    pt = (-xs2.shape[1]) % block_t
+    T, d = xs2.shape[1:]
+    xs2 = jnp.pad(xs2, ((0, 0), (0, pt), (0, pd)))
+    out = kernel.xor_encode_pallas(xs2, block_t=block_t,
+                                   interpret=not _on_tpu())
+    return out[:T, :d].reshape(shp)
+
+
+@partial(jax.jit, static_argnames=("block_t",))
+def xor_decode(f: jax.Array, known: Sequence[jax.Array],
+               *, block_t: int = 256) -> jax.Array:
+    ks = jnp.stack(known)
+    rm1 = ks.shape[0]
+    shp = f.shape
+    f2 = f.reshape(-1, shp[-1])
+    ks2 = ks.reshape(rm1, -1, shp[-1])
+    pd = (-shp[-1]) % 128
+    pt = (-f2.shape[0]) % block_t
+    T, d = f2.shape
+    f2 = jnp.pad(f2, ((0, pt), (0, pd)))
+    ks2 = jnp.pad(ks2, ((0, 0), (0, pt), (0, pd)))
+    out = kernel.xor_decode_pallas(f2, ks2, block_t=block_t,
+                                   interpret=not _on_tpu())
+    return out[:T, :d].reshape(shp)

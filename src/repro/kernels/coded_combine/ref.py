@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the coded combine/decode kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def encode_ref(streams: jax.Array, coeffs: jax.Array) -> jax.Array:
+    """streams: [r, T, d]; coeffs: [r] -> sum_i c_i v_i, in streams dtype."""
+    acc = jnp.einsum("r,rtd->td", coeffs.astype(jnp.float32),
+                     streams.astype(jnp.float32))
+    return acc.astype(streams.dtype)
+
+
+def decode_ref(f: jax.Array, known: jax.Array, coeffs: jax.Array,
+               ) -> jax.Array:
+    """coeffs[0] is the missing stream's coefficient; coeffs[1:] known."""
+    acc = f.astype(jnp.float32) - jnp.einsum(
+        "r,rtd->td", coeffs[1:].astype(jnp.float32),
+        known.astype(jnp.float32))
+    return (acc / coeffs[0].astype(jnp.float32)).astype(f.dtype)
+
+
+def xor_encode_ref(streams: jax.Array) -> jax.Array:
+    acc = streams[0]
+    for i in range(1, streams.shape[0]):
+        acc = acc ^ streams[i]
+    return acc
+
+
+def xor_decode_ref(f: jax.Array, known: jax.Array) -> jax.Array:
+    acc = f
+    for i in range(known.shape[0]):
+        acc = acc ^ known[i]
+    return acc

@@ -1,0 +1,112 @@
+"""Pallas TPU flash attention (prefill hot spot).
+
+Blockwise online-softmax attention with causal/window masking and GQA.
+Grid: (batch*kv_heads, q_groups, q_blocks, kv_blocks); the kv axis is the
+minormost (sequential on TPU) so the running (m, l, acc) state lives in
+VMEM scratch across kv iterations and is finalized on the last kv block.
+
+BlockSpec tiling (all VMEM):
+  q:   (1, 1, block_q, hd)      fixed per (b, g, i), re-used over j
+  k/v: (1, block_k, hd)         streamed over j
+  out: (1, 1, block_q, hd)      written once at j == nk-1
+
+MXU alignment: block_q/block_k default 128; hd is padded to 128 lanes by
+ops.py.  Scores/accumulator are fp32; inputs may be bf16/fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window, block_q: int,
+                  block_k: int, nk: int, q_offset: int, kv_valid: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)                     # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = q_offset + i * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = j * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < kv_valid
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jax.lax.dot_general(
+                        p, v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _fin():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window=None,
+                           q_offset: int = 0, kv_valid=None,
+                           scale: float | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q: [BH, G, Sq, hd]; k, v: [BH, Sk, hd] (BH = batch*kv_heads, G = GQA
+    group).  Sq % block_q == 0, Sk % block_k == 0, hd % 128 == 0 (ops.py
+    pads; ``scale`` carries the unpadded head dim's softmax scale).
+    Returns [BH, G, Sq, hd] in q dtype."""
+    BH, G, Sq, hd = q.shape
+    Sk = k.shape[1]
+    nq, nk = Sq // block_q, Sk // block_k
+    if kv_valid is None:
+        kv_valid = Sk
+    if scale is None:
+        scale = hd ** -0.5 if hd else 1.0
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal,
+        window=window, block_q=block_q, block_k=block_k, nk=nk,
+        q_offset=q_offset, kv_valid=kv_valid)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        grid=(BH, G, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, g, i, j: (b, g, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, g, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, g, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, g, i, j: (b, g, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

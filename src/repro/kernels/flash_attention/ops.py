@@ -1,0 +1,55 @@
+"""Jit'd public wrapper for flash attention: model-layout adaptation
+([B, S, H, hd] GQA), padding to block/lane boundaries, interpret fallback.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "q_offset", "kv_valid"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0, kv_valid: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """Model layout: q [B, Sq, H, hd]; k, v [B, Sk, KV, hd]; H = KV * G.
+    Returns [B, Sq, H, hd]."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(Sk, 8))
+    pq = (-Sq) % bq
+    pk = (-Sk) % bk
+    ph = (-hd) % 128
+
+    # [B, S, H, hd] -> [B*KV, G, Sq, hd] / [B*KV, Sk, hd]
+    qg = q.reshape(B, Sq, KV, G, hd).transpose(0, 2, 3, 1, 4) \
+        .reshape(B * KV, G, Sq, hd)
+    kg = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+    vg = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+    if pq or ph:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, pq), (0, ph)))
+    if pk or ph:
+        kg = jnp.pad(kg, ((0, 0), (0, pk), (0, ph)))
+        vg = jnp.pad(vg, ((0, 0), (0, pk), (0, ph)))
+
+    valid = Sk if kv_valid is None else kv_valid
+    out = kernel.flash_attention_pallas(
+        qg, kg, vg, causal=causal, window=window, q_offset=q_offset,
+        kv_valid=valid, scale=hd ** -0.5,     # unpadded head-dim scale
+        block_q=bq, block_k=bk, interpret=not _on_tpu())
+    out = out[:, :, :Sq, :hd].reshape(B, KV, G, Sq, hd) \
+        .transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return out

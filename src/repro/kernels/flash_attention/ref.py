@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        q_offset: int = 0,
+                        kv_valid: Optional[int] = None) -> jax.Array:
+    """q: [BH, G, Sq, hd]; k, v: [BH, Sk, hd] -> [BH, G, Sq, hd]."""
+    BH, G, Sq, hd = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bgqh,bkh->bgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = k_pos < (Sk if kv_valid is None else kv_valid)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgqk,bkh->bgqh", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

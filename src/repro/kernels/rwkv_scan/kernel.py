@@ -1,0 +1,105 @@
+"""Pallas TPU kernel for the chunked RWKV6 WKV scan (long-context hot spot).
+
+Implements the same chunked gated linear recurrence as
+:func:`repro.models.linrec.chunked_linear_recurrence` (mode='rwkv'):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,   out_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+Grid: (B*h, n_chunks) — the chunk axis is minormost, so it executes
+sequentially on TPU and the cross-chunk state lives in a VMEM scratch
+accumulator carried across grid steps (the TPU-idiomatic replacement for
+a sequential scan over HBM).
+
+Per-chunk work in VMEM: all pairwise decays exp(A_i - A_j), i >= j, with A
+the running log-decay cumsum — every exponent <= 0, numerically safe.
+Block shapes: (C, Nk) inputs, (Nk, Nv) state; C defaults to 64 to bound
+the (C, C, Nk) intra-chunk gate tensor in VMEM (64*64*64*4 B = 1 MiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref,
+                state_ref, *, nc: int, C: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    rb = r_ref[0].astype(jnp.float32)          # [C, Nk]
+    kb = k_ref[0].astype(jnp.float32)
+    vb = v_ref[0].astype(jnp.float32)          # [C, Nv]
+    wb = w_ref[0].astype(jnp.float32)          # [C, Nk] log decays (<= 0)
+    u = u_ref[0].astype(jnp.float32)           # [Nk]
+
+    A = jnp.cumsum(wb, axis=0)                 # [C, Nk]
+    A_total = A[-1]                            # [Nk]
+    A_q = A - wb                               # decay through t-1
+
+    state = state_ref[...]                     # [Nk, Nv]
+    # inter-chunk: r_t dressed with exp(A_q) reads the carried state
+    r_in = rb * jnp.exp(A_q)
+    out = jax.lax.dot_general(r_in, state, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+
+    # intra-chunk: pairwise exponents A_q[t] - A[s]  (<= 0 for s < t)
+    expo = A_q[:, None, :] - A[None, :, :]             # [C, C, Nk]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    tri = (s_idx < t_idx)
+    gate = jnp.where(tri[:, :, None], jnp.exp(expo), 0.0)
+    M = jnp.einsum("tk,sk,tsk->ts", rb, kb, gate)      # [C, C]
+    diag = jnp.sum(rb * u[None, :] * kb, axis=-1)      # [C] bonus term
+    M = M + jnp.where(t_idx == s_idx, diag[:, None], 0.0)
+    out = out + jax.lax.dot_general(M, vb, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+    # state update: S' = diag(e^{A_total}) S + sum_s k_s e^{A_total - A_s} v_s
+    k_dress = kb * jnp.exp(A_total[None, :] - A)       # [C, Nk]
+    state_ref[...] = (state * jnp.exp(A_total)[:, None]
+                      + jax.lax.dot_general(
+                          k_dress, vb, (((0,), (0,)), ((), ())),
+                          preferred_element_type=jnp.float32))
+
+    @pl.when(c == nc - 1)
+    def _fin():
+        sT_ref[0] = state_ref[...]
+
+
+def wkv_scan_pallas(r: jax.Array, k: jax.Array, v: jax.Array,
+                    log_w: jax.Array, u: jax.Array, s0: jax.Array, *,
+                    chunk: int = 64, interpret: bool = True):
+    """r, k, log_w: [BH, S, Nk]; v: [BH, S, Nv]; u: [BH, Nk];
+    s0: [BH, Nk, Nv] initial state.  S % chunk == 0 (ops.py pads).
+    Returns (out [BH, S, Nv] in v dtype, final state [BH, Nk, Nv] fp32)."""
+    BH, S, Nk = r.shape
+    Nv = v.shape[-1]
+    nc = S // chunk
+    kern = functools.partial(_wkv_kernel, nc=nc, C=chunk)
+    out, sT = pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((BH, S, Nv), v.dtype),
+                   jax.ShapeDtypeStruct((BH, Nk, Nv), jnp.float32)),
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, Nk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, Nk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, Nv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, Nk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Nk), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, Nk, Nv), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, chunk, Nv), lambda b, c: (b, c, 0)),
+                   pl.BlockSpec((1, Nk, Nv), lambda b, c: (b, 0, 0))),
+        scratch_shapes=[pltpu.VMEM((Nk, Nv), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, log_w, u, s0)
+    return out, sT

@@ -1,0 +1,46 @@
+"""Jit'd public wrapper for the WKV scan kernel: model-layout adaptation
+([B, S, h, N] <-> [B*h, S, N]), sequence padding, interpret fallback."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def wkv_scan(r: jax.Array, k: jax.Array, v: jax.Array, log_w: jax.Array,
+             u: jax.Array, initial_state: Optional[jax.Array] = None, *,
+             chunk: int = 64) -> Tuple[jax.Array, jax.Array]:
+    """Model layout: r, k, log_w [B, S, h, Nk]; v [B, S, h, Nv]; u [h, Nk];
+    initial_state [B, h, Nk, Nv] (zeros if None).
+    Returns (out [B, S, h, Nv], final_state [B, h, Nk, Nv])."""
+    B, S, h, Nk = r.shape
+    Nv = v.shape[-1]
+    if initial_state is None:
+        initial_state = jnp.zeros((B, h, Nk, Nv), jnp.float32)
+
+    to_bh = lambda x: x.transpose(0, 2, 1, 3).reshape(B * h, S, x.shape[-1])
+    rb, kb, vb, wb = map(to_bh, (r, k, v, log_w))
+    ub = jnp.broadcast_to(u[None], (B, h, Nk)).reshape(B * h, Nk)
+    s0 = initial_state.reshape(B * h, Nk, Nv)
+
+    pad = (-S) % chunk
+    if pad:
+        rb = jnp.pad(rb, ((0, 0), (0, pad), (0, 0)))
+        kb = jnp.pad(kb, ((0, 0), (0, pad), (0, 0)))
+        vb = jnp.pad(vb, ((0, 0), (0, pad), (0, 0)))
+        # padded steps must not decay the state: log_w = 0 and k = 0 there
+        wb = jnp.pad(wb, ((0, 0), (0, pad), (0, 0)))
+
+    out, sT = kernel.wkv_scan_pallas(rb, kb, vb, wb, ub, s0, chunk=chunk,
+                                     interpret=not _on_tpu())
+    out = out[:, :S].reshape(B, h, S, Nv).transpose(0, 2, 1, 3)
+    return out, sT.reshape(B, h, Nk, Nv)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the WKV scan kernel: the chunked linear recurrence
+of :mod:`repro.models.linrec` mapped over the kernel's [BH, S, N] layout."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from ...models.linrec import chunked_linear_recurrence
+
+
+def wkv_scan_ref(r: jax.Array, k: jax.Array, v: jax.Array,
+                 log_w: jax.Array, u: jax.Array, s0: jax.Array, *,
+                 chunk: int = 64):
+    """Same signature as wkv_scan_pallas: r/k/log_w [BH, S, Nk],
+    v [BH, S, Nv], u [BH, Nk], s0 [BH, Nk, Nv]."""
+    def one(r1, k1, v1, w1, u1, s1):
+        out, sT = chunked_linear_recurrence(
+            r1[None, :, None, :], k1[None, :, None, :], v1[None, :, None, :],
+            w1[None, :, None, :], u=u1[None, :], initial_state=s1[None, None],
+            mode="rwkv", chunk=chunk, return_state=True)
+        return out[0, :, 0], sT[0, 0]
+    return jax.vmap(one)(r, k, v, log_w, u, s0)

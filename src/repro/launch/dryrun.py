@@ -1,0 +1,763 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")   # silence SPMD warnings
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+cell on the production mesh and extract the roofline terms.
+
+Two compiles per cell family:
+
+1. **Fit compile** — the REAL production step (scanned layers, microbatch
+   grad-accum scan, 2-level remat, donated state) at the FULL configuration.
+   ``compiled.memory_analysis()`` proves the cell fits 16 GB/chip; success
+   proves the sharding config is coherent (the deliverable's pass/fail).
+
+2. **Cost compiles** — reduced (depth, sequence) grid with every internal
+   scan UNROLLED, so ``cost_analysis()`` / HLO collective parsing count
+   every FLOP/byte exactly (XLA counts a while body ONCE regardless of
+   trip count — measured in this repo; see EXPERIMENTS.md §Methodology).
+   Costs of these models are polynomials: linear in each layer-stack depth,
+   quadratic in S (attention), so fitting
+        cost(depths, S) = (1, depths) (x) (1, S, S^2)
+   through (n_depth+1) x 3 exact compile points reproduces the full-size
+   cost EXACTLY (polynomial interpolation, not approximation).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single,multi \
+      [--arch qwen2-1.5b ...] [--shape train_4k ...] [--force]
+Results are cached per cell in results/dryrun/<mesh>/<arch>__<shape>.json.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS
+from ..configs.base import ArchConfig, SHAPES, ShapeConfig, cell_is_runnable
+from ..distributed import sharding as shlib
+from ..models import lm
+from ..models.frontends import train_batch_specs
+from ..train.optimizer import OptimizerConfig
+from ..train.trainer import TrainConfig, accumulate_grads
+from . import hlo_analysis as hlo
+from .mesh import make_mesh_by_kind, pod_size
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+BIG_ARCHS = {"llama3-405b", "grok-1-314b", "qwen2-72b", "llava-next-34b"}
+
+
+# ---------------------------------------------------------------------------
+# Per-cell plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CellPlan:
+    arch: str
+    shape: str
+    mesh_kind: str
+    n_micro: int
+    remat_blocks: int
+    fsdp: bool
+    dtype: Any = jnp.bfloat16
+    s_points: Tuple[int, ...] = ()
+    dp_mode: str = "dp"                  # dp | replicated (pod axis use)
+    seq_tp: bool = False                 # Megatron sequence parallelism
+    tp2d: bool = False                   # 2D-TP serving (hillclimb variant)
+    moe_groups: int = 16                 # sort-dispatch groups == dp size
+
+    @property
+    def cfg(self) -> ArchConfig:
+        return ARCHS[self.arch]
+
+    @property
+    def shape_cfg(self) -> ShapeConfig:
+        for s in SHAPES:
+            if s.name == self.shape:
+                return s
+        raise KeyError(self.shape)
+
+
+def _best_blocks(n: int) -> int:
+    """Divisor of n closest to sqrt(n) (2-level remat block count)."""
+    best = 1
+    for d in range(1, n + 1):
+        if n % d == 0 and abs(d - n ** 0.5) < abs(best - n ** 0.5):
+            best = d
+    return best
+
+
+def make_plan(arch: str, shape: str, mesh_kind: str,
+              dp_mode: str = "dp") -> CellPlan:
+    cfg = ARCHS[arch]
+    sh = [s for s in SHAPES if s.name == shape][0]
+    multi = mesh_kind != "single"
+    dp = (2 if (multi and dp_mode == "dp") else 1) * 16   # pod x data
+    big = arch in BIG_ARCHS
+
+    if sh.kind == "train":
+        rows_per_dev = max(sh.global_batch // dp, 1)
+        tokens_per_dev = rows_per_dev * sh.seq_len
+        n_micro = 1
+        while (tokens_per_dev // n_micro > 4096 and n_micro < rows_per_dev
+               and sh.global_batch % (2 * n_micro) == 0):
+            n_micro *= 2
+        remat_blocks = _best_blocks(cfg.n_layers
+                                    - (cfg.moe.first_dense_layers
+                                       if cfg.moe else 0))
+    else:
+        n_micro, remat_blocks = 1, 1
+
+    if cfg.frontend == "vision":
+        base = cfg.n_frontend_tokens
+        s_points = (base + 256, base + 512, base + 1024)
+    elif sh.kind == "train":
+        s_points = (512, 1024, 2048)
+    elif sh.kind == "prefill":
+        s_points = (1024, 2048, 4096)
+    else:                                 # decode: S = cache depth
+        s_points = (1024, 2048, 4096)
+    # FSDP (ZeRO-3) only where params+optimizer cannot fit replicated-
+    # over-data; small models keep params on 'model' only (no per-micro
+    # re-gather traffic).  Sequence-TP on big train cells (bytes-neutral,
+    # divides boundary HBM by the TP degree).
+    return CellPlan(arch, shape, mesh_kind, n_micro, remat_blocks,
+                    fsdp=big, s_points=s_points, dp_mode=dp_mode,
+                    seq_tp=big and sh.kind == "train",
+                    moe_groups=dp)   # groups must tile the dp axes
+
+
+# ---------------------------------------------------------------------------
+# Depth grid
+# ---------------------------------------------------------------------------
+
+def _with_depth(cfg: ArchConfig, depths: Tuple[int, ...]) -> ArchConfig:
+    """depths per varying stack: (main,) or (main, enc) for encdec.
+    For MoE with leading dense layers, 'main' counts only the MoE stack."""
+    fd = cfg.moe.first_dense_layers if cfg.moe else 0
+    kw: Dict[str, Any] = {"n_layers": depths[0] + fd}
+    if cfg.family == "encdec":
+        kw["encoder_layers"] = depths[1]
+    return dataclasses.replace(cfg, **kw)
+
+
+def depth_grid(cfg: ArchConfig) -> Tuple[List[Tuple[int, ...]],
+                                         Tuple[int, ...]]:
+    """(depth combos to compile, target depth vector)."""
+    fd = cfg.moe.first_dense_layers if cfg.moe else 0
+    if cfg.family == "encdec":
+        combos = [(1, 1), (2, 1), (1, 2)]
+        target = (cfg.n_layers, cfg.encoder_layers)
+    else:
+        combos = [(1,), (2,)]
+        target = (cfg.n_layers - fd,)
+    return combos, target
+
+
+def _fit_poly(points: List[Tuple[Tuple[int, ...], int, float]]) -> Dict:
+    """Occam fit of cost = (1, depths) (x) S-basis.
+
+    Tries S-bases of increasing order (const, linear, quadratic); keeps
+    the SIMPLEST one whose relative residual on the compile points is
+    < 0.1%.  This matters for costs with no real S dependence (ring-cache
+    / state-space decode): blindly fitting S^2 to constant-in-S data and
+    extrapolating x1e5 amplifies lstsq noise into garbage (observed:
+    negative hymba decode costs before this guard)."""
+    scale = max((abs(c) for (_, _, c) in points), default=1.0) or 1.0
+    for order in (0, 1, 2):
+        rows, y = [], []
+        for depths, S, c in points:
+            dvec = [1.0] + [float(d) for d in depths]
+            svec = [float(S) ** k for k in range(order + 1)]
+            rows.append(np.outer(dvec, svec).ravel())
+            y.append(c / scale)
+        A = np.array(rows)
+        coef, *_ = np.linalg.lstsq(A, np.array(y), rcond=None)
+        resid = np.abs(A @ coef - y).max()
+        if resid < 1e-3 or order == 2:
+            return {"coef": coef, "order": order, "scale": scale,
+                    "resid": float(resid)}
+    raise AssertionError("unreachable")
+
+
+def _eval_poly(fit: Dict, depths: Tuple[int, ...], S: int) -> float:
+    dvec = [1.0] + [float(d) for d in depths]
+    svec = [float(S) ** k for k in range(fit["order"] + 1)]
+    val = float(np.outer(dvec, svec).ravel() @ fit["coef"]) * fit["scale"]
+    return max(val, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+def _policy(plan: CellPlan, mesh) -> shlib.ShardingPolicy:
+    if plan.tp2d:
+        rules = shlib.serve_tp2d_rules(multi_pod=(plan.mesh_kind
+                                                  != "single"))
+        return shlib.ShardingPolicy(mesh, rules)
+    rules = shlib.default_rules(multi_pod=(plan.mesh_kind != "single"),
+                                dp_mode=("dp_flat" if plan.dp_mode == "dp"
+                                         else "dp_hybrid"),
+                                fsdp=plan.fsdp)
+    if plan.seq_tp:
+        rules = shlib.with_sequence_tp(rules)
+    return shlib.ShardingPolicy(mesh, rules)
+
+
+def _param_shapes(cfg: ArchConfig, dtype) -> Any:
+    return jax.eval_shape(lambda k: lm.init_params(k, cfg, dtype),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def _opt_shapes(params: Any, opt_cfg) -> Dict:
+    from ..train.optimizer import init_opt_state
+    return jax.eval_shape(lambda: init_opt_state(params, opt_cfg))
+
+
+def _opt_pspecs(params: Any, pspec: Any, opt_cfg) -> Dict:
+    """Sharding specs for the optimizer state tree.
+
+    adamw: moments mirror the parameter specs.  adafactor: the factored
+    moments drop the factored dim's axis from the parameter spec."""
+    if opt_cfg.kind == "adamw":
+        return {"m": pspec, "v": pspec, "count": P()}
+
+    def fac_spec(leaf, s):
+        parts = list(s) + [None] * (leaf.ndim - len(s))
+        if leaf.ndim >= 2:
+            return {"vr": P(*parts[:-1]), "vc": P(*(parts[:-2] + parts[-1:]))}
+        return {"v": P(*parts)}
+    m = jax.tree.map(fac_spec, params, pspec,
+                     is_leaf=lambda x: isinstance(x, P))
+    return {"m": m, "count": P()}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                seq_len: Optional[int] = None,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one batch of the cell (deliverable
+    (e).2: weak-type-correct, shardable, no device allocation)."""
+    S = seq_len or shape.seq_len
+    sub = dataclasses.replace(shape, seq_len=S)
+    return train_batch_specs(cfg, sub, dtype=dtype)
+
+
+def _train_tc(plan: CellPlan, cfg: ArchConfig, *, cost_mode: bool,
+              ) -> TrainConfig:
+    big = plan.arch in BIG_ARCHS
+    return TrainConfig(
+        n_microbatches=1 if cost_mode else plan.n_micro,
+        remat=True,
+        remat_blocks=1 if cost_mode else plan.remat_blocks,
+        scan_layers=not cost_mode,
+        unroll_scans=cost_mode,
+        grad_dtype=jnp.bfloat16 if big else jnp.float32,
+        dense_moe=False,
+        moe_groups=plan.moe_groups,
+        # >=300B plans: Adafactor (factored 2nd moment) — optimizer HBM
+        # drops from 2x params to ~0; T5/PaLM production recipe
+        opt=OptimizerConfig(kind="adafactor" if big else "adamw",
+                            moment_dtype=jnp.float32),
+    )
+
+
+def _collect(compiled, pod_sz: int) -> Dict[str, float]:
+    ca = compiled.cost_analysis() or {}
+    coll = hlo.collective_summary(compiled.as_text(), pod_sz)
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "ici": coll["ici_bytes"], "dcn": coll["dcn_bytes"],
+            "n_coll": coll["n_ops"], "n_cross": coll["n_cross_pod_ops"]}
+
+
+def _memory(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    peak = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+            + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    return {"argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes": peak,
+            "peak_gib": peak / 2 ** 30,
+            "fits_16gib": bool(peak <= hlo.HW["hbm_bytes"])}
+
+
+# ---------------------------------------------------------------------------
+# Analytic HBM-capacity model (the 16 GiB fit verdict)
+# ---------------------------------------------------------------------------
+#
+# XLA:CPU stages every bf16 op through synthesized f32 copies (measured:
+# a bf16 [1024^2] matmul allocates 3x f32 temps), so memory_analysis() of
+# the CPU-compiled module OVERSTATES TPU HBM by ~2-3x.  We therefore report
+# both: the XLA number (pessimistic cross-check) and this explicit
+# capacity plan (exact for state; conservative workspace model).
+
+def tree_local_bytes(shapes_tree: Any, spec_tree: Any, mesh) -> float:
+    """Per-device bytes of a sharded pytree (exact, from the pspecs)."""
+    total = 0.0
+    for leaf, spec in zip(jax.tree.leaves(shapes_tree),
+                          jax.tree.leaves(
+                              spec_tree,
+                              is_leaf=lambda x: isinstance(x, P))):
+        shard = 1
+        for m in spec:
+            if m is None:
+                continue
+            for a in (m if isinstance(m, tuple) else (m,)):
+                shard *= mesh.shape[a]
+        total += leaf.size * leaf.dtype.itemsize / shard
+    return total
+
+
+def analytic_peak_bytes(plan: CellPlan, cfg: ArchConfig, sh: ShapeConfig,
+                        mesh, pol) -> Dict[str, float]:
+    dtb = 2.0
+    tp = mesh.shape.get("model", 1)
+    dp = int(np.prod(mesh.devices.shape)) // tp
+    params = _param_shapes(cfg, plan.dtype)
+    pspec = shlib.param_pspecs(params, pol, fsdp=plan.fsdp)
+    p_local = tree_local_bytes(params, pspec, mesh)
+    out = {"params": p_local}
+
+    heads_local = max(cfg.n_heads // tp, 1)
+    d = cfg.d_model
+    ff = cfg.d_ff
+    if cfg.moe:
+        ff = (cfg.moe.top_k + cfg.moe.n_shared) * cfg.moe.d_ff_expert
+    if sh.kind == "train":
+        tc = _train_tc(plan, cfg, cost_mode=False)
+        opt = _opt_shapes(params, tc.opt)
+        out["opt"] = tree_local_bytes(opt, _opt_pspecs(params, pspec,
+                                                       tc.opt), mesh)
+        out["grads"] = p_local * jnp.dtype(tc.grad_dtype).itemsize / dtb
+        micro_tok = sh.global_batch * sh.seq_len / dp / plan.n_micro
+        bnd_tok = micro_tok / (tp if plan.seq_tp else 1)
+        inner = max((cfg.n_layers - (cfg.moe.first_dense_layers if cfg.moe
+                                     else 0)) // plan.remat_blocks, 1)
+        n_bnd = plan.remat_blocks + inner + cfg.encoder_layers
+        out["boundaries"] = n_bnd * bnd_tok * d * dtb
+        # live per-layer workspace during recompute+backward (f32):
+        out["workspace"] = micro_tok * (6 * d + 2 * ff / tp
+                                        + 512 * heads_local) * 4.0
+        out["logits"] = 2 * micro_tok * cfg.vocab_size / tp * 4.0
+        out["batch"] = sh.global_batch * sh.seq_len / dp * 8.0
+    else:
+        cache = jax.eval_shape(lambda: lm.init_cache(
+            cfg, sh.global_batch, sh.seq_len, plan.dtype))
+        cspec = shlib.cache_pspecs(pol, cache)
+        out["cache"] = tree_local_bytes(cache, cspec, mesh)
+        tok = (sh.global_batch * sh.seq_len if sh.kind == "prefill"
+               else sh.global_batch)
+        tok_local = tok / dp
+        out["workspace"] = tok_local * (6 * d + 2 * ff / tp
+                                        + 512 * heads_local) * 4.0
+        if plan.fsdp:       # per-layer weight gather buffer
+            out["gather_buf"] = 2 * p_local * mesh.shape.get("data", 1) \
+                / max(cfg.n_layers, 1)
+    out["total"] = sum(out.values())
+    out["total_gib"] = out["total"] / 2 ** 30
+    out["fits_16gib"] = bool(out["total"] <= hlo.HW["hbm_bytes"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytic HBM-traffic model (the roofline memory term)
+# ---------------------------------------------------------------------------
+#
+# XLA's cost_analysis 'bytes accessed' sums EVERY op's operands post-(CPU)-
+# fusion — a gross upper bound on TPU HBM traffic where elementwise chains
+# fuse into the surrounding matmuls.  For the memory roofline term we use
+# an explicit traffic model instead (the XLA number is kept as a
+# diagnostic): weight reads per pass, activation/intermediate RW per layer
+# per token, optimizer/grad RW per step, logits, and cache RW for serving.
+
+def _params_local_bytes(plan: CellPlan, cfg: ArchConfig, mesh) -> float:
+    pol = _policy(plan, mesh)
+    params = _param_shapes(cfg, plan.dtype)
+    return tree_local_bytes(params,
+                            shlib.param_pspecs(params, pol,
+                                               fsdp=plan.fsdp), mesh)
+
+
+def analytic_memory_bytes(plan: CellPlan, cfg: ArchConfig,
+                          sh: ShapeConfig, mesh) -> float:
+    dt = 2.0
+    n_chips = int(np.prod(mesh.devices.shape))
+    p_local = _params_local_bytes(plan, cfg, mesh)
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.moe:
+        m = cfg.moe
+        ff = m.top_k * m.d_ff_expert + m.n_shared * m.d_ff_expert
+    qkv = cfg.n_heads * cfg.head_dim + 2 * cfg.n_kv_heads * cfg.head_dim
+    act_per_tok_layer = (6 * d + 3 * ff + 2 * qkv) * dt   # fwd RW
+    L = cfg.n_layers + cfg.encoder_layers
+
+    if sh.kind == "train":
+        tokens_local = sh.global_batch * sh.seq_len / n_chips * \
+            mesh.shape.get("model", 1)         # activations shard on batch
+        micro_tok = tokens_local / plan.n_micro
+        # fwd + remat-fwd + bwd activation traffic; boundary save/restore
+        acts = plan.n_micro * micro_tok * L * act_per_tok_layer * 3
+        weights = 3 * p_local * plan.n_micro    # fwd/remat/bwd reads
+        logits = (plan.n_micro * micro_tok * cfg.vocab_size
+                  / mesh.shape.get("model", 1) * dt * 3)
+        opt = 10 * p_local                      # m,v,params,grads RW
+        return weights + acts + logits + opt
+    if sh.kind == "prefill":
+        tokens_local = sh.global_batch * sh.seq_len / n_chips * \
+            mesh.shape.get("model", 1)
+        acts = tokens_local * L * act_per_tok_layer
+        cache_w = tokens_local * L * 2 * cfg.n_kv_heads * cfg.head_dim * dt
+        return p_local + acts + cache_w
+    # decode: weights once + cache read once per token step
+    if cfg.mla:
+        per_tok = (cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim) * dt
+    elif cfg.attn_free:
+        per_tok = 0.0                          # constant-size state
+    else:
+        per_tok = 2 * cfg.n_kv_heads * cfg.head_dim * dt
+    S_eff = min(sh.seq_len, cfg.sliding_window or sh.seq_len) \
+        if cfg.family == "hybrid" else sh.seq_len
+    state = 0.0
+    if cfg.ssm:
+        state = (cfg.n_heads * cfg.ssm.state_dim * cfg.head_dim * 4
+                 * sh.global_batch * cfg.n_layers * 2)
+    cache_local = (sh.global_batch * S_eff * cfg.n_layers * per_tok
+                   + state) / n_chips * mesh.shape.get("model", 1)
+    return p_local + cache_local
+
+
+# ---------------------------------------------------------------------------
+# TRAIN cells
+# ---------------------------------------------------------------------------
+
+def _lower_train_fit(plan: CellPlan, mesh) -> Dict:
+    cfg, sh = plan.cfg, plan.shape_cfg
+    pol = _policy(plan, mesh)
+    tc = _train_tc(plan, cfg, cost_mode=False)
+    params = _param_shapes(cfg, plan.dtype)
+    state = {"params": params, "opt": _opt_shapes(params, tc.opt),
+             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    batch = input_specs(cfg, sh, dtype=plan.dtype)
+
+    from ..train.optimizer import optimizer_update
+
+    def step(state, batch):
+        with shlib.use_policy(pol):
+            grads, loss = accumulate_grads(state["params"], cfg, tc, batch)
+            new_params, new_opt, om = optimizer_update(
+                grads, state["opt"], state["params"], tc.opt)
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}, {"loss": loss, **om})
+
+    pspec = shlib.param_pspecs(params, pol, fsdp=plan.fsdp)
+    to_sh = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                   is_leaf=lambda x: isinstance(x, P))
+    state_sh = {"params": to_sh(pspec),
+                "opt": to_sh(_opt_pspecs(params, pspec, tc.opt)),
+                "step": NamedSharding(mesh, P())}
+    batch_sh = to_sh(shlib.batch_pspecs(pol, batch))
+    with mesh:
+        lowered = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                          donate_argnums=(0,)).lower(state, batch)
+        compiled = lowered.compile()
+    return {"memory": _memory(compiled)}
+
+
+def _lower_train_cost_point(plan: CellPlan, mesh, cfg_d: ArchConfig,
+                            S: int) -> Tuple[Dict, Dict]:
+    """(micro-step costs, apply-step costs) at one (depth, S) point."""
+    sh = plan.shape_cfg
+    pol = _policy(plan, mesh)
+    tc = _train_tc(plan, cfg_d, cost_mode=True)
+    params = _param_shapes(cfg_d, plan.dtype)
+    micro_rows = max(sh.global_batch // plan.n_micro, 1)
+    batch = input_specs(cfg_d, dataclasses.replace(
+        sh, global_batch=micro_rows), seq_len=S, dtype=plan.dtype)
+
+    def micro(params, batch):
+        with shlib.use_policy(pol):
+            return accumulate_grads(params, cfg_d, tc, batch)
+
+    pspec = shlib.param_pspecs(params, pol, fsdp=plan.fsdp)
+    to_sh = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                   is_leaf=lambda x: isinstance(x, P))
+    grads_sh = to_sh(pspec)
+    with mesh:
+        c_micro = jax.jit(
+            micro, in_shardings=(to_sh(pspec),
+                                 to_sh(shlib.batch_pspecs(pol, batch))),
+            out_shardings=(grads_sh, NamedSharding(mesh, P())),
+        ).lower(params, batch).compile()
+
+    from ..train.optimizer import optimizer_update
+    gd = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, tc.grad_dtype),
+                      params)
+    opt = _opt_shapes(params, tc.opt)
+
+    def apply_fn(grads, opt, params):
+        with shlib.use_policy(pol):
+            return optimizer_update(grads, opt, params, tc.opt)
+
+    with mesh:
+        c_apply = jax.jit(
+            apply_fn, in_shardings=(grads_sh,
+                                    to_sh(_opt_pspecs(params, pspec,
+                                                      tc.opt)),
+                                    to_sh(pspec)),
+            donate_argnums=(1, 2),
+        ).lower(gd, opt, params).compile()
+    psz = pod_size(mesh)
+    return _collect(c_micro, psz), _collect(c_apply, psz)
+
+
+# ---------------------------------------------------------------------------
+# SERVE cells (prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _serve_structs(plan: CellPlan, cfg_d: ArchConfig, S: int,
+                   batch: int) -> Tuple[Any, Any]:
+    params = _param_shapes(cfg_d, plan.dtype)
+    cache = jax.eval_shape(
+        lambda: lm.init_cache(cfg_d, batch, S, plan.dtype))
+    return params, cache
+
+
+def _lower_decode(plan: CellPlan, mesh, cfg_d: ArchConfig, S: int,
+                  unroll: bool) -> Any:
+    sh = plan.shape_cfg
+    pol = _policy(plan, mesh)
+    params, cache = _serve_structs(plan, cfg_d, S, sh.global_batch)
+    tok = jax.ShapeDtypeStruct((sh.global_batch,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def step(params, cache, tok, pos):
+        with shlib.use_policy(pol):
+            return lm.decode_step(params, cfg_d, tok, cache, pos,
+                                  scan_layers=not unroll,
+                                  unroll_scans=unroll)
+
+    pspec = shlib.param_pspecs(params, pol, fsdp=plan.fsdp)
+    cspec = shlib.cache_pspecs(pol, cache)
+    to_sh = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                   is_leaf=lambda x: isinstance(x, P))
+    with mesh:
+        return jax.jit(step,
+                       in_shardings=(to_sh(pspec), to_sh(cspec),
+                                     NamedSharding(mesh, P(None)),
+                                     NamedSharding(mesh, P())),
+                       donate_argnums=(1,),
+                       ).lower(params, cache, tok, pos).compile()
+
+
+def _lower_prefill(plan: CellPlan, mesh, cfg_d: ArchConfig, S: int,
+                   unroll: bool) -> Any:
+    sh = plan.shape_cfg
+    pol = _policy(plan, mesh)
+    B = sh.global_batch
+    params, cache = _serve_structs(plan, cfg_d, S, B)
+    n_front = cfg_d.n_frontend_tokens if cfg_d.frontend == "vision" else 0
+    toks = jax.ShapeDtypeStruct((B, S - n_front), jnp.int32)
+    extra = {}
+    if cfg_d.frontend == "vision":
+        extra["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (B, n_front, cfg_d.d_model), plan.dtype)
+    if cfg_d.family == "encdec":
+        extra["enc_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg_d.encoder_seq, cfg_d.d_model), plan.dtype)
+
+    def step(params, cache, toks, extra):
+        with shlib.use_policy(pol):
+            logits, new_cache = lm.prefill(
+                params, cfg_d, toks, cache,
+                prefix_embeds=extra.get("prefix_embeds"),
+                enc_frames=extra.get("enc_frames"),
+                scan_layers=not unroll, unroll_scans=unroll,
+                moe_groups=plan.moe_groups)
+            return logits, new_cache
+
+    pspec = shlib.param_pspecs(params, pol, fsdp=plan.fsdp)
+    cspec = shlib.cache_pspecs(pol, cache)
+    bspec = shlib.batch_pspecs(pol, {"toks": toks, **extra})
+    to_sh = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                   is_leaf=lambda x: isinstance(x, P))
+    with mesh:
+        return jax.jit(step,
+                       in_shardings=(to_sh(pspec), to_sh(cspec),
+                                     to_sh(bspec["toks"]),
+                                     to_sh({k: bspec[k] for k in extra})),
+                       donate_argnums=(1,),
+                       ).lower(params, cache, toks, extra).compile()
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *, force: bool = False,
+             dp_mode: str = "dp", results_dir: str = RESULTS_DIR,
+             overrides: Optional[Dict] = None,
+             variant: str = "") -> Dict:
+    """``overrides``: CellPlan field overrides for §Perf hillclimb variants
+    (cached under a ``__<variant>`` suffix)."""
+    cfg = ARCHS[arch]
+    sh = [s for s in SHAPES if s.name == shape][0]
+    tag = f"{arch}__{shape}" + ("" if dp_mode == "dp" else f"__{dp_mode}") \
+        + (f"__{variant}" if variant else "")
+    out_dir = os.path.join(results_dir, mesh_kind)
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    runnable, why = cell_is_runnable(cfg, sh)
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "dp_mode": dp_mode,
+        "runnable": runnable, "skip_reason": why,
+        "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
+    }
+    if not runnable:
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=1)
+        return result
+
+    plan = make_plan(arch, shape, mesh_kind, dp_mode)
+    if overrides:
+        plan = dataclasses.replace(plan, **overrides)
+        result["overrides"] = {k: str(v) for k, v in overrides.items()}
+    mesh = make_mesh_by_kind(mesh_kind)
+    psz = pod_size(mesh)
+    combos, target = depth_grid(cfg)
+    t0 = time.time()
+    try:
+        if sh.kind == "train":
+            fit = _lower_train_fit(plan, mesh)
+            pts_mi: Dict[str, List] = {k: [] for k in
+                                       ("flops", "bytes", "ici", "dcn")}
+            pts_ap: Dict[str, List] = {k: [] for k in
+                                       ("flops", "bytes", "ici", "dcn")}
+            for depths in combos:
+                cfg_d = _with_depth(cfg, depths)
+                for S in plan.s_points:
+                    mi, ap = _lower_train_cost_point(plan, mesh, cfg_d, S)
+                    for k in pts_mi:
+                        pts_mi[k].append((depths, S, mi[k]))
+                        pts_ap[k].append((depths, S, ap[k]))
+            costs = {}
+            for k in pts_mi:
+                poly_m = _fit_poly(pts_mi[k])
+                poly_a = _fit_poly(pts_ap[k])
+                costs[k] = (plan.n_micro
+                            * _eval_poly(poly_m, target, sh.seq_len)
+                            + _eval_poly(poly_a, target, sh.seq_len))
+            tokens = sh.global_batch * sh.seq_len
+        else:
+            lower_one = (_lower_decode if sh.kind in ("decode",
+                                                      "long_decode")
+                         else _lower_prefill)
+            fit_comp = lower_one(plan, mesh, cfg, sh.seq_len, unroll=False)
+            fit = {"memory": _memory(fit_comp)}
+            pts: Dict[str, List] = {k: [] for k in
+                                    ("flops", "bytes", "ici", "dcn")}
+            for depths in combos:
+                cfg_d = _with_depth(cfg, depths)
+                for S in plan.s_points:
+                    c = lower_one(plan, mesh, cfg_d, S, unroll=True)
+                    got = _collect(c, psz)
+                    for k in pts:
+                        pts[k].append((depths, S, got[k]))
+            costs = {k: _eval_poly(_fit_poly(pts[k]), target, sh.seq_len)
+                     for k in pts}
+            tokens = sh.global_batch * (sh.seq_len
+                                        if sh.kind == "prefill" else 1)
+
+        n_chips = int(np.prod(mesh.devices.shape))
+        hbm_bytes = analytic_memory_bytes(plan, cfg, sh, mesh)
+        terms = hlo.roofline_terms(costs["flops"], hbm_bytes,
+                                   costs["ici"], costs["dcn"])
+        terms["t_memory_xla_upper"] = costs["bytes"] / hlo.HW["hbm_bw"]
+        n_active = lm.count_params(cfg, active_only=True) \
+            - lm.count_embedding_params(cfg)
+        mult = 6 if sh.kind == "train" else 2
+        model_flops = mult * n_active * tokens / n_chips
+        pol = _policy(plan, mesh)
+        result.update({
+            "plan": {"n_micro": plan.n_micro,
+                     "remat_blocks": plan.remat_blocks,
+                     "fsdp": plan.fsdp, "seq_tp": plan.seq_tp,
+                     "s_points": plan.s_points,
+                     "depth_combos": combos, "depth_target": target},
+            "memory": fit["memory"],
+            "memory_plan": analytic_peak_bytes(plan, cfg, sh, mesh, pol),
+            "per_device": costs,
+            "roofline": terms,
+            "model_flops_per_device": model_flops,
+            "useful_flops_ratio": (model_flops / costs["flops"]
+                                   if costs["flops"] else 0.0),
+            "elapsed_s": time.time() - t0,
+            "ok": True,
+        })
+    except Exception as e:                                   # noqa: BLE001
+        result.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-3000:],
+                       "elapsed_s": time.time() - t0})
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1, default=str)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", nargs="*", default=sorted(ARCHS))
+    ap.add_argument("--shape", nargs="*",
+                    default=[s.name for s in SHAPES])
+    ap.add_argument("--mesh", nargs="*", default=["single", "multi"])
+    ap.add_argument("--dp-mode", default="dp",
+                    choices=["dp", "replicated"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--results-dir", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    n_fail = 0
+    for mesh_kind in args.mesh:
+        for arch in args.arch:
+            for shape in args.shape:
+                t0 = time.time()
+                r = run_cell(arch, shape, mesh_kind, force=args.force,
+                             dp_mode=args.dp_mode,
+                             results_dir=args.results_dir)
+                if not r.get("runnable", True):
+                    status = "SKIP"
+                elif r.get("ok"):
+                    m = r["memory"]
+                    mp = r.get("memory_plan", {})
+                    status = (f"OK   plan={mp.get('total_gib', 0):.2f}GiB"
+                              f"({'fits' if mp.get('fits_16gib') else 'OVER'})"
+                              f" xla={m['peak_gib']:.1f} "
+                              f"dom={r['roofline']['dominant']:<10} "
+                              f"frac={r['roofline']['roofline_fraction']:.3f}")
+                else:
+                    status = "FAIL " + r.get("error", "")[:120]
+                    n_fail += 1
+                print(f"[{mesh_kind:6s}] {arch:22s} {shape:12s} "
+                      f"{time.time()-t0:6.1f}s  {status}", flush=True)
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+compute / memory terms come from ``compiled.cost_analysis()`` (per-device,
+post-SPMD).  The collective term is NOT in cost_analysis: we parse the
+compiled HLO text, classify every collective op, and apply a ring-algorithm
+wire-byte model per participating chip:
+
+    all-gather        out_bytes * (n-1)/n      (sends its shard n-1 times)
+    reduce-scatter    out_bytes * (n-1)        (= in_bytes * (n-1)/n)
+    all-reduce        2 * in_bytes * (n-1)/n   (RS + AG)
+    all-to-all        in_bytes * (n-1)/n
+    collective-permute  in_bytes
+
+Each op's replica group is classified INTRA-POD (all members in one pod —
+ICI) or CROSS-POD (spans pods — DCN); cross-pod ops additionally get an
+ICI share for the intra-pod portion of their ring.  This is exactly the
+paper's L_int / L_cro decomposition lifted to the TPU hierarchy.
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (one link per mesh ring direction), DCN ~12.5 GB/s
+(assumption, documented in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+HW = {
+    "peak_flops_bf16": 197e12,
+    "hbm_bw": 819e9,
+    "ici_bw": 50e9,
+    "dcn_bw": 12.5e9,
+    "hbm_bytes": 16 * 2 ** 30,
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|"
+    r"collective-permute)\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([^}]*(?:\},\{[^}]*)*)\}\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{([^}]*)\}")
+
+
+def _shapes_bytes(type_str: str) -> List[int]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out.append(n * _DTYPE_BYTES[dt])
+    return out
+
+
+def _parse_groups(line: str) -> Optional[List[List[int]]]:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        arr = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            arr = arr.transpose(perm)
+        return arr.reshape(g, s).tolist()
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return [[int(x) for x in grp.split(",") if x.strip()]
+                for grp in m.group(1).split("},{")]
+    return None
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes_wire: float          # per participating chip
+    group_size: int
+    cross_pod: bool
+    line: str
+
+
+def _wire_bytes(kind: str, shapes: List[int], n: int) -> float:
+    if not shapes or n <= 1:
+        return 0.0
+    total = sum(shapes)
+    big = max(shapes)
+    if kind.startswith("all-gather"):
+        # tuple form of -start includes (in, out); out is the largest
+        return big * (n - 1) / n
+    if kind.startswith("all-reduce"):
+        return 2.0 * big * (n - 1) / n
+    if kind == "reduce-scatter":
+        return big * (n - 1)          # output (scattered) shape parsed
+    if kind == "all-to-all":
+        return total * (n - 1) / n
+    if kind.startswith("collective-permute"):
+        return big
+    return 0.0
+
+
+def parse_collectives(hlo_text: str, pod_size: int) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        kind = m.group(2)
+        shapes = _shapes_bytes(m.group(1))
+        if kind.startswith("collective-permute"):
+            pairs = _SRC_TGT_RE.search(line)
+            cross = False
+            if pairs and pairs.group(1).strip():
+                for pq in pairs.group(1).split("},{"):
+                    ab = [int(x) for x in pq.replace("{", "")
+                          .replace("}", "").split(",")]
+                    if len(ab) == 2 and ab[0] // pod_size != ab[1] // pod_size:
+                        cross = True
+            ops.append(CollectiveOp(kind, _wire_bytes(kind, shapes, 2),
+                                    2, cross, line.strip()[:200]))
+            continue
+        groups = _parse_groups(line)
+        if not groups:
+            continue
+        n = len(groups[0])
+        cross = any(len({d // pod_size for d in g}) > 1 for g in groups)
+        ops.append(CollectiveOp(kind, _wire_bytes(kind, shapes, n), n,
+                                cross, line.strip()[:200]))
+    return ops
+
+
+def collective_summary(hlo_text: str, pod_size: int) -> Dict[str, float]:
+    """Per-chip wire bytes, split by tier.  For a cross-pod group of size n
+    spanning p pods, the DCN portion is modeled as the pod-boundary hops of
+    the ring: fraction (p-1)/(n-1) of the wire bytes crosses DCN, the rest
+    stays on ICI."""
+    ops = parse_collectives(hlo_text, pod_size)
+    out = {"ici_bytes": 0.0, "dcn_bytes": 0.0, "n_ops": len(ops),
+           "n_cross_pod_ops": 0}
+    per_kind: Dict[str, float] = {}
+    for op in ops:
+        per_kind[op.kind] = per_kind.get(op.kind, 0.0) + op.bytes_wire
+        if op.cross_pod:
+            out["n_cross_pod_ops"] += 1
+            n = op.group_size
+            p = max(2, int(np.ceil(n / pod_size)) if pod_size else 2)
+            dcn_frac = (p - 1) / max(n - 1, 1)
+            out["dcn_bytes"] += op.bytes_wire * dcn_frac
+            out["ici_bytes"] += op.bytes_wire * (1 - dcn_frac)
+        else:
+            out["ici_bytes"] += op.bytes_wire
+    out["per_kind"] = per_kind
+    return out
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   ici_bytes: float, dcn_bytes: float,
+                   hw: Dict = HW) -> Dict[str, float]:
+    """The three roofline terms (seconds) + dominant classification."""
+    t_compute = flops_per_dev / hw["peak_flops_bf16"]
+    t_memory = bytes_per_dev / hw["hbm_bw"]
+    t_ici = ici_bytes / hw["ici_bw"]
+    t_dcn = dcn_bytes / hw["dcn_bw"]
+    t_coll = t_ici + t_dcn
+    terms = {"t_compute": t_compute, "t_memory": t_memory,
+             "t_collective": t_coll, "t_ici": t_ici, "t_dcn": t_dcn}
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    terms["dominant"] = dom[0]
+    terms["t_bound"] = dom[1]
+    # roofline fraction: useful-compute time over the bound (perfect overlap
+    # model: step time >= max(terms); fraction = t_compute / t_bound)
+    terms["roofline_fraction"] = (t_compute / dom[1]) if dom[1] > 0 else 0.0
+    return terms
+
+
+# ---------------------------------------------------------------------------
+# (L, S) polynomial cost fitting — see launch/dryrun.py
+# ---------------------------------------------------------------------------
+
+def fit_cost_poly(points: List[Tuple[int, int, float]],
+                  ) -> Dict[str, float]:
+    """Fit cost(L, S) = a + b L + (c + d L) S + (e + f L) S^2 through >= 6
+    (L, S, cost) points (least squares; exact when cost is truly polynomial).
+    Returns the coefficient dict."""
+    A = np.array([[1, L, S, L * S, S * S, L * S * S]
+                  for (L, S, _) in points], dtype=np.float64)
+    y = np.array([c for (_, _, c) in points], dtype=np.float64)
+    coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+    return dict(zip("abcdef", coef.tolist()))
+
+
+def eval_cost_poly(coef: Dict[str, float], L: int, S: int) -> float:
+    return (coef["a"] + coef["b"] * L + coef["c"] * S + coef["d"] * L * S
+            + coef["e"] * S * S + coef["f"] * L * S * S)

@@ -1,0 +1,52 @@
+"""Production mesh construction.
+
+Target hardware: TPU v5e pods — 16x16 = 256 chips per pod, 2 pods = 512
+chips for the multi-pod dry-run.  Axes:
+
+  pod    — the slow tier (DCN between pods)  == the paper's 'rack' axis
+  data   — data parallel / FSDP within a pod (ICI)
+  model  — tensor/expert parallel within a pod (ICI)
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run must set XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_coded_mesh(pods: int = 4, data: int = 8, model: int = 16) -> Mesh:
+    """Mesh for the r < P coded gradient-sync dry-runs (P >= 3 pods)."""
+    return jax.make_mesh((pods, data, model), ("pod", "data", "model"),
+                         axis_types=(AxisType.Auto,) * 3)
+
+
+def pod_size(mesh: Mesh) -> int:
+    """Devices per pod (= everything under the 'pod' axis)."""
+    total = 1
+    for name, n in zip(mesh.axis_names, mesh.devices.shape):
+        if name != "pod":
+            total *= n
+    return total
+
+
+MESH_KINDS = {
+    "single": dict(multi_pod=False),
+    "multi": dict(multi_pod=True),
+}
+
+
+def make_mesh_by_kind(kind: str) -> Mesh:
+    if kind in MESH_KINDS:
+        return make_production_mesh(**MESH_KINDS[kind])
+    if kind == "coded4":
+        return make_coded_mesh(4, 8, 16)
+    raise KeyError(kind)

@@ -1,0 +1,2 @@
+from .engine import MapReduceJob, run_job, run_job_distributed  # noqa: F401
+from .jobs import histogram_job, groupby_mean_job, terasort_bucket_job  # noqa: F401

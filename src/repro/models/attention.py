@@ -1,0 +1,140 @@
+"""Memory-bounded blockwise attention (pure-JAX flash formulation).
+
+One implementation covers every assigned architecture's needs:
+  * causal / bidirectional / cross attention
+  * GQA (n_kv_heads < n_heads), optional sliding window
+  * prefill (Sq = Skv) and cached decode (Sq = 1, bounded valid length)
+
+The KV axis is processed in blocks with an online-softmax accumulator, so
+peak memory is O(Sq * block) instead of O(Sq * Skv) — the jnp oracle of the
+Pallas flash kernel (kernels/flash_attention), and the path used by the
+dry-run (Pallas requires a real TPU; see DESIGN.md).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "kv_block", "unroll"))
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        q_positions: jax.Array,
+                        kv_valid_len: Optional[jax.Array] = None,
+                        *, causal: bool = True,
+                        window: Optional[int] = None,
+                        kv_block: int = 512,
+                        unroll: bool = False) -> jax.Array:
+    """q: [B, Sq, H, hd]; k, v: [B, Sk, KV, hd]; GQA via H = KV * G.
+
+    q_positions: [Sq] global positions of the queries (decode passes [pos]).
+    kv_valid_len: [] or [B] — keys at index >= valid_len are masked (cache).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+
+    nb = -(-Sk // kv_block)
+    pad = nb * kv_block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nb, kv_block, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, kv_block, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+    valid = (jnp.asarray(Sk if kv_valid_len is None else kv_valid_len)
+             .astype(jnp.int32))
+    valid = jnp.broadcast_to(valid, (B,))
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kj, vj, j = blk
+        kpos = j * kv_block + jnp.arange(kv_block)                  # [C]
+        s = jnp.einsum("bqkgh,bckh->bqkgc", qg, kj.astype(jnp.float32))
+        s = s * scale
+        mask = kpos[None, :] < valid[:, None]                       # [B, C]
+        mask = mask[:, None, :]                                     # [B,1,C]
+        if causal:
+            mask = mask & (kpos[None, None, :]
+                           <= q_positions[None, :, None])
+        if window is not None:
+            mask = mask & (kpos[None, None, :]
+                           > q_positions[None, :, None] - window)
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bqkgc,bckh->bqkgh", p, vj.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KV, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nb)),
+                                  unroll=nb if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def ring_cache_attention(q: jax.Array, k_ring: jax.Array, v_ring: jax.Array,
+                         kpos: jax.Array, q_positions: jax.Array,
+                         window: Optional[int] = None) -> jax.Array:
+    """Attention over a sliding-window RING cache (decode path).
+
+    q: [B, Sq, H, hd] (Sq small — usually 1); k_ring, v_ring: [B, Wc, KV, hd];
+    kpos: [Wc] int32 — absolute position stored in each ring slot (-1 =
+    empty); q_positions: [Sq].  Causal + window masking is by position, so
+    slot order is irrelevant.
+    """
+    B, Sq, H, hd = q.shape
+    Wc, KV = k_ring.shape[1], k_ring.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bckh->bqkgc", qg, k_ring.astype(jnp.float32))
+    s = s * (hd ** -0.5)
+    mask = (kpos[None, :] >= 0) & (kpos[None, :]
+                                   <= q_positions[:, None])      # [Sq, Wc]
+    if window is not None:
+        mask = mask & (kpos[None, :] > q_positions[:, None] - window)
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgc,bckh->bqkgh", p, v_ring.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_positions: jax.Array,
+                    kv_valid_len: Optional[jax.Array] = None,
+                    *, causal: bool = True,
+                    window: Optional[int] = None) -> jax.Array:
+    """Unchunked oracle (small shapes / tests only)."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bqkgs", qg, k.astype(jnp.float32))
+    s = s * (hd ** -0.5)
+    kpos = jnp.arange(Sk)
+    valid = (jnp.asarray(Sk if kv_valid_len is None else kv_valid_len)
+             .astype(jnp.int32))
+    valid = jnp.broadcast_to(valid, (B,))
+    mask = kpos[None, :] < valid[:, None]
+    mask = mask[:, None, :]
+    if causal:
+        mask = mask & (kpos[None, None, :] <= q_positions[None, :, None])
+    if window is not None:
+        mask = mask & (kpos[None, None, :] > q_positions[None, :, None]
+                       - window)
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)

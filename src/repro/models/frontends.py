@@ -1,0 +1,70 @@
+"""Modality frontend STUBS (per assignment: `[audio]`/`[vlm]` entries specify
+the transformer BACKBONE only; ``input_specs()`` provides precomputed
+frame/patch embeddings).
+
+These produce deterministic synthetic embeddings on CPU (tests/examples) and
+ShapeDtypeStruct stand-ins for the dry-run (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+
+
+def audio_frames(key: jax.Array, cfg: ArchConfig, batch: int,
+                 dtype=jnp.float32) -> jax.Array:
+    """Stub for Whisper's conv1/conv2(mel) output: [B, encoder_seq, D]."""
+    return (jax.random.normal(key, (batch, cfg.encoder_seq, cfg.d_model),
+                              jnp.float32) * 0.02).astype(dtype)
+
+
+def vision_patches(key: jax.Array, cfg: ArchConfig, batch: int,
+                   dtype=jnp.float32) -> jax.Array:
+    """Stub for the LLaVA anyres CLIP+projector output:
+    [B, n_frontend_tokens, D]."""
+    return (jax.random.normal(key, (batch, cfg.n_frontend_tokens,
+                                    cfg.d_model), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig,
+                      dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one training batch (dry-run input)."""
+    B, S = shape.global_batch, shape.seq_len
+    n_front = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+    s_text = S - n_front
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, s_text), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((B, s_text), jnp.int32),
+        "loss_mask": jax.ShapeDtypeStruct((B, s_text), jnp.float32),
+    }
+    if cfg.frontend == "vision":
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (B, n_front, cfg.d_model), dtype)
+    if cfg.family == "encdec":
+        specs["enc_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), dtype)
+    return specs
+
+
+def make_train_batch(key: jax.Array, cfg: ArchConfig, batch: int, seq: int,
+                     dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Concrete synthetic batch (smoke tests / examples)."""
+    ks = jax.random.split(key, 3)
+    n_front = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+    s_text = seq - n_front
+    toks = jax.random.randint(ks[0], (batch, s_text + 1), 0, cfg.vocab_size)
+    out = {
+        "tokens": toks[:, :-1],
+        "targets": toks[:, 1:],
+        "loss_mask": jnp.ones((batch, s_text), jnp.float32),
+    }
+    if cfg.frontend == "vision":
+        out["prefix_embeds"] = vision_patches(ks[1], cfg, batch, dtype)
+    if cfg.family == "encdec":
+        out["enc_frames"] = audio_frames(ks[2], cfg, batch, dtype)
+    return out

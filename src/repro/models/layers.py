@@ -1,0 +1,87 @@
+"""Shared building blocks: norms, MLPs, embeddings, RoPE, init helpers."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w).astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(dt)
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int,
+               dtype=jnp.float32) -> jax.Array:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int,
+               dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array,
+           b1: Optional[jax.Array] = None) -> jax.Array:
+    """Llama-style gated MLP: (silu(x W1) * (x W3)) W2."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def gelu_mlp(x: jax.Array, w1: jax.Array, b1: jax.Array, w2: jax.Array,
+             b2: jax.Array) -> jax.Array:
+    """Whisper-style MLP: gelu(x W1 + b1) W2 + b2."""
+    return jax.nn.gelu(x @ w1 + b1, approximate=True) @ w2 + b2
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [...,S,hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]              # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    """Whisper encoder's fixed sinusoidal embedding table [seq, d]."""
+    return sinusoidal_at(jnp.arange(seq), d)
+
+
+def sinusoidal_at(positions: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal embeddings evaluated at arbitrary positions [S] -> [S, d]."""
+    pos = positions.astype(jnp.float32)[:, None]
+    div = jnp.exp(-jnp.log(10_000.0)
+                  * jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    tab = jnp.zeros((positions.shape[0], d), jnp.float32)
+    tab = tab.at[:, 0::2].set(jnp.sin(pos * div))
+    tab = tab.at[:, 1::2].set(jnp.cos(pos * div))
+    return tab

@@ -1,0 +1,155 @@
+"""Chunked linear-recurrence core (shared by RWKV6 and Hymba's SSM heads).
+
+Computes, per head, the gated linear recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          S in R^{Nk x Nv}
+    out_t = q_t^T S'_t
+
+with two diagonal conventions:
+
+  * mode='rwkv'      — out_t = q_t^T (S_{t-1} + diag(u) k_t v_t^T)
+                        (decay applied through t-1; bonus u on the diagonal)
+  * mode='inclusive' — out_t = q_t^T S_t   (Mamba-2/SSD-style; s = t term
+                        carries zero decay)
+
+Chunked evaluation (the TPU-friendly form; also the spec of the Pallas
+``rwkv_scan`` kernel): within a chunk of C steps all pairwise decays are
+exp(A_i - A_j) with A the running log-decay sum and i >= j, so every
+exponent is <= 0 — numerically safe without 1/P divisions.  Cross-chunk
+state is carried exactly.  Complexity O(S*C*Nk*Nv + S*C^2*Nk) vs O(S^2) for
+attention — the sub-quadratic mixer that makes ``long_500k`` runnable.
+
+All math in fp32; inputs cast in, outputs cast back.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _pad_to(x: jax.Array, S: int, axis: int = 1) -> jax.Array:
+    pad = S - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("mode", "chunk", "return_state",
+                                   "unroll"))
+def chunked_linear_recurrence(q: jax.Array, k: jax.Array, v: jax.Array,
+                              log_w: jax.Array,
+                              u: Optional[jax.Array] = None,
+                              initial_state: Optional[jax.Array] = None,
+                              *, mode: str = "rwkv", chunk: int = 64,
+                              return_state: bool = False,
+                              unroll: bool = False,
+                              ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """q, k, log_w: [B, S, h, Nk]; v: [B, S, h, Nv]; u: [h, Nk] (rwkv mode).
+
+    log_w must be <= 0 (log of a decay in (0, 1]).
+    initial_state: [B, h, Nk, Nv].  Returns (out [B, S, h, Nv], final_state).
+    """
+    if mode not in ("rwkv", "inclusive"):
+        raise ValueError(mode)
+    B, S, h, Nk = q.shape
+    Nv = v.shape[-1]
+    dt = q.dtype
+    C = min(chunk, S)
+    nc = -(-S // C)
+    Sp = nc * C
+
+    f32 = jnp.float32
+    q_, k_, v_, w_ = (
+        _pad_to(q.astype(f32), Sp), _pad_to(k.astype(f32), Sp),
+        _pad_to(v.astype(f32), Sp), _pad_to(log_w.astype(f32), Sp))
+
+    # [nc, B, C, h, Nk/Nv]
+    def to_chunks(x):
+        return x.reshape(B, nc, C, h, x.shape[-1]).transpose(1, 0, 2, 3, 4)
+    qc, kc, vc, wc = map(to_chunks, (q_, k_, v_, w_))
+
+    S0 = (jnp.zeros((B, h, Nk, Nv), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    tri_strict = jnp.tril(jnp.ones((C, C), bool), k=-1)
+    tri_incl = jnp.tril(jnp.ones((C, C), bool), k=0)
+
+    def body(state, xs):
+        qb, kb, vb, wb = xs                       # [B, C, h, *]
+        A = jnp.cumsum(wb, axis=1)                # [B, C, h, Nk] log decays
+        A_total = A[:, -1]                        # [B, h, Nk]
+        if mode == "rwkv":
+            # decay through t-1 for both the state read and intra pairs
+            A_q = A - wb                          # A_{t-1}
+            tri = tri_strict
+        else:
+            A_q = A                               # A_t (inclusive)
+            tri = tri_incl
+        # ---- inter-chunk: q_t dressed with exp(A_q) reads the carried state
+        q_in = qb * jnp.exp(A_q)                  # [B, C, h, Nk]
+        out_inter = jnp.einsum("bchk,bhkv->bchv", q_in, state)
+        # ---- intra-chunk: pairwise exponents A_q[t] - A[s]  (<= 0 on tri)
+        expo = A_q[:, :, None] - A[:, None, :, :, :]      # [B, C, C, h, Nk]
+        expo = jnp.where(tri[None, :, :, None, None], expo, -jnp.inf)
+        gate = jnp.exp(expo)
+        M = jnp.einsum("bthk,bshk,btshk->btsh", qb, kb, gate)
+        if mode == "rwkv" and u is not None:
+            diag = jnp.einsum("bthk,hk,bthk->bth", qb, u.astype(f32), kb)
+            M = M + diag[:, :, None, :] * jnp.eye(C, dtype=f32)[None, :, :,
+                                                                None]
+        out_intra = jnp.einsum("btsh,bshv->bthv", M, vb)
+        # ---- state update: S' = diag(e^{A_total}) S + sum_s k_s e^{A_tot-A_s} v_s
+        k_dress = kb * jnp.exp(A_total[:, None] - A)      # [B, C, h, Nk]
+        new_state = (state * jnp.exp(A_total)[..., None]
+                     + jnp.einsum("bchk,bchv->bhkv", k_dress, vb))
+        return new_state, out_inter + out_intra
+
+    final_state, outs = jax.lax.scan(body, S0, (qc, kc, vc, wc),
+                                     unroll=nc if unroll else 1)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, h, Nv)[:, :S]
+    return out.astype(dt), (final_state if return_state else None)
+
+
+def recurrent_step(q: jax.Array, k: jax.Array, v: jax.Array,
+                   log_w: jax.Array, state: jax.Array,
+                   u: Optional[jax.Array] = None, *, mode: str = "rwkv",
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token decode step.
+
+    q, k, log_w: [B, h, Nk]; v: [B, h, Nv]; state: [B, h, Nk, Nv].
+    Returns (out [B, h, Nv], new_state).
+    """
+    f32 = jnp.float32
+    qf, kf, vf = q.astype(f32), k.astype(f32), v.astype(f32)
+    w = jnp.exp(log_w.astype(f32))                        # [B, h, Nk]
+    kv = kf[..., :, None] * vf[..., None, :]              # [B, h, Nk, Nv]
+    if mode == "rwkv":
+        read = state + (u.astype(f32)[None, :, :, None] * kv
+                        if u is not None else kv)
+        new_state = state * w[..., None] + kv
+    else:
+        new_state = state * w[..., None] + kv
+        read = new_state
+    out = jnp.einsum("bhk,bhkv->bhv", qf, read)
+    return out.astype(q.dtype), new_state
+
+
+def naive_linear_recurrence(q, k, v, log_w, u=None, initial_state=None,
+                            *, mode: str = "rwkv"):
+    """Step-by-step oracle (tests): same signature/semantics as the chunked
+    form, O(S) sequential."""
+    B, S, h, Nk = q.shape
+    Nv = v.shape[-1]
+    state = (jnp.zeros((B, h, Nk, Nv), jnp.float32) if initial_state is None
+             else initial_state.astype(jnp.float32))
+    outs = []
+    for t in range(S):
+        o, state = recurrent_step(q[:, t], k[:, t], v[:, t], log_w[:, t],
+                                  state, u, mode=mode)
+        outs.append(o)
+    return jnp.stack(outs, axis=1), state

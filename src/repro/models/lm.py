@@ -1,0 +1,692 @@
+"""Unified LM covering all 10 assigned architectures.
+
+One parameter/apply system, composed from family-specific mixers:
+
+  family   mixer                       ffn          notes
+  ------   -----                       ---          -----
+  dense    GQA attention (+rope)       swiglu       qwen2/granite/llama3
+  vlm      GQA attention               swiglu       patch-embed prefix (stub)
+  moe      GQA or MLA attention        MoE (+dense leading layers)
+  ssm      RWKV6 time-mix              RWKV6 channel-mix (attn-free)
+  hybrid   parallel GQA + SSM heads    swiglu       hymba
+  encdec   bidirectional enc + causal dec w/ cross-attn, gelu mlp   whisper
+
+Layers are grouped into homogeneous *stacks* (``layer_groups``); parameters
+of a stack are stacked along a leading layer axis so the forward pass can
+``jax.lax.scan`` over them (small HLO, fast compiles) or unroll them
+(exact per-layer cost analysis in the dry-run; see launch/dryrun.py).
+
+Activation sharding hints are emitted through
+:func:`repro.distributed.sharding.shard_acts` — no-ops unless a policy and
+mesh are active, so the same code runs single-device CPU tests and the
+512-chip dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distributed.sharding import shard_acts, sp_gather, sp_scatter
+from .attention import blockwise_attention, ring_cache_attention
+from .layers import (apply_rope, dense_init, embed_init, gelu_mlp, layer_norm,
+                     rms_norm, sinusoidal_at, sinusoidal_positions, swiglu)
+from .mla import (init_mla_cache, init_mla_params, mla_attention)
+from .moe import aux_load_balance_loss, init_moe_params, moe_ffn
+from .rwkv import (cmix_forward, init_cmix_params, init_tmix_params,
+                   init_tmix_state, tmix_forward, tmix_step)
+from .ssm import init_ssm_params, init_ssm_state, ssm_forward, ssm_step
+
+# ---------------------------------------------------------------------------
+# Layer grouping
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerGroup:
+    kind: str          # attn_mlp | attn_moe | rwkv | hymba | enc | dec
+    count: int
+
+
+def layer_groups(cfg: ArchConfig) -> List[LayerGroup]:
+    """Homogeneous layer stacks of the decoder trunk (encoder is separate)."""
+    if cfg.family in ("dense", "vlm"):
+        return [LayerGroup("attn_mlp", cfg.n_layers)]
+    if cfg.family == "moe":
+        fd = cfg.moe.first_dense_layers
+        groups = []
+        if fd:
+            groups.append(LayerGroup("attn_mlp", fd))
+        groups.append(LayerGroup("attn_moe", cfg.n_layers - fd))
+        return groups
+    if cfg.family == "ssm":
+        return [LayerGroup("rwkv", cfg.n_layers)]
+    if cfg.family == "hybrid":
+        return [LayerGroup("hymba", cfg.n_layers)]
+    if cfg.family == "encdec":
+        return [LayerGroup("dec", cfg.n_layers)]
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-module (GQA, optional bias/rope; self or cross)
+# ---------------------------------------------------------------------------
+
+def init_attn_params(key: jax.Array, cfg: ArchConfig, dtype,
+                     cross: bool = False) -> Dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, dtype=dtype),
+        "wk": dense_init(ks[1], d, KV * hd, dtype=dtype),
+        "wv": dense_init(ks[2], d, KV * hd, dtype=dtype),
+        "wo": dense_init(ks[3], H * hd, d, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _qkv(p: Dict, cfg: ArchConfig, xq: jax.Array, xkv: jax.Array,
+         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = xq @ p["wq"] + (p["bq"] if "bq" in p else 0)
+    k = xkv @ p["wk"] + (p["bk"] if "bk" in p else 0)
+    v = xkv @ p["wv"] + (p["bv"] if "bv" in p else 0)
+    B, Sq = xq.shape[:2]
+    Sk = xkv.shape[1]
+    return (q.reshape(B, Sq, H, hd), k.reshape(B, Sk, KV, hd),
+            v.reshape(B, Sk, KV, hd))
+
+
+def attn_forward(p: Dict, cfg: ArchConfig, x: jax.Array,
+                 positions: jax.Array, *, causal: bool = True,
+                 rope: bool = True, window: Optional[int] = None,
+                 cache: Optional[Dict] = None,
+                 cache_index: Optional[jax.Array] = None,
+                 kv_block: int = 512, unroll: bool = False,
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Self-attention with optional KV cache (prefill writes, decode reads)."""
+    B, S, D = x.shape
+    q, k, v = _qkv(p, cfg, x, x)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_acts(q, ("batch", None, "heads", None))
+    valid = None
+    if cache is not None:
+        if "kpos" in cache:                      # ring (sliding-window) cache
+            Wc = cache["k"].shape[1]
+            # only the last Wc tokens can matter; avoids duplicate-slot writes
+            if k.shape[1] > Wc:
+                kw, vw, pw = k[:, -Wc:], v[:, -Wc:], positions[-Wc:]
+            else:
+                kw, vw, pw = k, v, positions
+            slot = pw % Wc                       # [min(S, Wc)] distinct slots
+            ck = cache["k"].at[:, slot].set(kw.astype(cache["k"].dtype))
+            cv = cache["v"].at[:, slot].set(vw.astype(cache["v"].dtype))
+            kpos = cache["kpos"].at[slot].set(pw.astype(jnp.int32))
+            cache = {"k": ck, "v": cv, "kpos": kpos}
+            if S > 1:
+                # prefill: the ring holds only the LAST Wc keys — early
+                # queries need their own window, so attend over the full
+                # (windowed) sequence; the ring is just being filled.
+                out = blockwise_attention(q, k, v, positions, causal=causal,
+                                          window=window, unroll=unroll)
+            else:
+                out = ring_cache_attention(q, ck, cv, kpos, positions,
+                                           window=window)
+            return out.reshape(B, S, -1) @ p["wo"], cache
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache_index, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache_index, 1)
+        cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        valid = cache_index + S
+    out = blockwise_attention(q, k, v, positions, kv_valid_len=valid,
+                              causal=causal, window=window,
+                              kv_block=min(kv_block, max(k.shape[1], 1)),
+                              unroll=unroll)
+    return out.reshape(B, S, -1) @ p["wo"], cache
+
+
+def cross_attn_forward(p: Dict, cfg: ArchConfig, x: jax.Array,
+                       kv_cache: Dict, unroll: bool = False) -> jax.Array:
+    """Cross-attention reading precomputed (k, v) of the encoder output."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"] + (p["bq"] if "bq" in p else 0)).reshape(B, S, H, hd)
+    out = blockwise_attention(q, kv_cache["k"], kv_cache["v"],
+                              jnp.zeros((S,), jnp.int32), causal=False,
+                              unroll=unroll)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def encode_cross_kv(p: Dict, cfg: ArchConfig, enc_out: jax.Array) -> Dict:
+    B, Sk = enc_out.shape[:2]
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    k = enc_out @ p["wk"] + (p["bk"] if "bk" in p else 0)
+    v = enc_out @ p["wv"] + (p["bv"] if "bv" in p else 0)
+    return {"k": k.reshape(B, Sk, KV, hd), "v": v.reshape(B, Sk, KV, hd)}
+
+
+# ---------------------------------------------------------------------------
+# Per-kind layer parameter init
+# ---------------------------------------------------------------------------
+
+def _init_mlp(key, cfg: ArchConfig, dtype) -> Dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {"w1": dense_init(ks[0], d, ff, dtype=dtype),
+            "w3": dense_init(ks[1], d, ff, dtype=dtype),
+            "w2": dense_init(ks[2], ff, d, dtype=dtype)}
+
+
+def _init_gelu_mlp(key, cfg: ArchConfig, dtype) -> Dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 2)
+    return {"w1": dense_init(ks[0], d, ff, dtype=dtype),
+            "b1": jnp.zeros((ff,), dtype),
+            "w2": dense_init(ks[1], ff, d, dtype=dtype),
+            "b2": jnp.zeros((d,), dtype)}
+
+
+def _ln(d, dtype):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def init_layer_params(key: jax.Array, kind: str, cfg: ArchConfig,
+                      dtype) -> Dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if kind == "attn_mlp":
+        attn = (init_mla_params(ks[1], cfg, dtype) if cfg.mla
+                else init_attn_params(ks[1], cfg, dtype))
+        return {"ln1": jnp.ones((d,), dtype), "attn": attn,
+                "ln2": jnp.ones((d,), dtype), "mlp": _init_mlp(ks[2], cfg,
+                                                               dtype)}
+    if kind == "attn_moe":
+        attn = (init_mla_params(ks[1], cfg, dtype) if cfg.mla
+                else init_attn_params(ks[1], cfg, dtype))
+        return {"ln1": jnp.ones((d,), dtype), "attn": attn,
+                "ln2": jnp.ones((d,), dtype),
+                "moe": init_moe_params(ks[2], cfg, dtype)}
+    if kind == "rwkv":
+        return {"ln1": _ln(d, dtype), "tmix": init_tmix_params(ks[1], cfg,
+                                                               dtype),
+                "ln2": _ln(d, dtype), "cmix": init_cmix_params(ks[2], cfg,
+                                                               dtype)}
+    if kind == "hymba":
+        return {"ln1": jnp.ones((d,), dtype),
+                "attn": init_attn_params(ks[0], cfg, dtype),
+                "ssm": init_ssm_params(ks[1], cfg, dtype),
+                "bn_a": jnp.ones((d,), dtype),   # per-branch output norms
+                "bn_s": jnp.ones((d,), dtype),
+                "ln2": jnp.ones((d,), dtype),
+                "mlp": _init_mlp(ks[2], cfg, dtype)}
+    if kind == "enc":
+        return {"ln1": _ln(d, dtype),
+                "attn": init_attn_params(ks[0], cfg, dtype),
+                "ln2": _ln(d, dtype),
+                "mlp": _init_gelu_mlp(ks[1], cfg, dtype)}
+    if kind == "dec":
+        return {"ln1": _ln(d, dtype),
+                "attn": init_attn_params(ks[0], cfg, dtype),
+                "ln2": _ln(d, dtype),
+                "xattn": init_attn_params(ks[1], cfg, dtype, cross=True),
+                "ln3": _ln(d, dtype),
+                "mlp": _init_gelu_mlp(ks[2], cfg, dtype)}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Per-kind layer application
+# ---------------------------------------------------------------------------
+
+def apply_layer(kind: str, p: Dict, cfg: ArchConfig, x: jax.Array,
+                positions: jax.Array, *, cache: Optional[Dict] = None,
+                cache_index: Optional[jax.Array] = None,
+                enc_out: Optional[jax.Array] = None,
+                mixer_chunk: int = 64, dense_moe: bool = False,
+                unroll_scans: bool = False, moe_groups: int = 1,
+                ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """One block. Returns (x, new_cache, moe_aux_loss)."""
+    eps = cfg.norm_eps
+    zero = jnp.zeros((), jnp.float32)
+    x = shard_acts(x, ("batch", "seq_tp", "embed"))
+
+    # Megatron-SP pattern (no-op unless the policy maps 'seq_tp'):
+    # residual x lives seq-sharded over TP; each sublayer input is
+    # all-gathered AFTER its norm (sp_gather), its output reduce-scattered
+    # before the residual add (sp_scatter).  Bytes == the plain TP
+    # all-reduce; boundary HBM / TP; cotangent shardings pinned by the
+    # custom vjps so the backward moves activations, never weights.
+
+    if kind in ("attn_mlp", "attn_moe"):
+        h = sp_gather(rms_norm(x, p["ln1"], eps))
+        if cfg.mla:
+            a, cache = mla_attention(p["attn"], cfg, h, positions,
+                                     cache=cache, cache_index=cache_index,
+                                     unroll=unroll_scans)
+        else:
+            a, cache = attn_forward(p["attn"], cfg, h, positions,
+                                    cache=cache, cache_index=cache_index,
+                                    window=cfg.sliding_window,
+                                    unroll=unroll_scans)
+        x = x + sp_scatter(a)
+        h = sp_gather(rms_norm(x, p["ln2"], eps))
+        if kind == "attn_mlp":
+            x = x + sp_scatter(swiglu(h, **p["mlp"]))
+            return x, cache, zero
+        aux = aux_load_balance_loss(p["moe"]["router"],
+                                    h.reshape(-1, h.shape[-1]), cfg.moe.top_k)
+        x = x + sp_scatter(moe_ffn(p["moe"], cfg.moe, h,
+                                   dense_dispatch=dense_moe,
+                                   n_groups=moe_groups))
+        return x, cache, aux
+
+    if kind == "rwkv":
+        h = layer_norm(x, p["ln1"]["w"], p["ln1"]["b"], eps)
+        t_state = cache["tmix"] if cache is not None else None
+        a, t_new = tmix_forward(p["tmix"], cfg, h, t_state, chunk=mixer_chunk,
+                                unroll=unroll_scans)
+        x = x + a
+        h = layer_norm(x, p["ln2"]["w"], p["ln2"]["b"], eps)
+        c_prev = cache["cmix_shift"] if cache is not None else None
+        c, c_shift = cmix_forward(p["cmix"], h, c_prev)
+        x = x + c
+        new_cache = ({"tmix": t_new, "cmix_shift": c_shift}
+                     if cache is not None else None)
+        return x, new_cache, zero
+
+    if kind == "hymba":
+        h = rms_norm(x, p["ln1"], eps)
+        a_cache = cache["attn"] if cache is not None else None
+        s_state = cache["ssm"] if cache is not None else None
+        a, a_cache = attn_forward(p["attn"], cfg, h, positions,
+                                  cache=a_cache, cache_index=cache_index,
+                                  window=cfg.sliding_window,
+                                  unroll=unroll_scans)
+        s, s_state = ssm_forward(p["ssm"], cfg, h, s_state,
+                                 chunk=mixer_chunk, unroll=unroll_scans)
+        a = rms_norm(a, p["bn_a"], eps)
+        s = rms_norm(s, p["bn_s"], eps)
+        x = x + 0.5 * (a + s)
+        h = rms_norm(x, p["ln2"], eps)
+        x = x + swiglu(h, **p["mlp"])
+        new_cache = ({"attn": a_cache, "ssm": s_state}
+                     if cache is not None else None)
+        return x, new_cache, zero
+
+    if kind == "enc":
+        h = layer_norm(x, p["ln1"]["w"], p["ln1"]["b"], eps)
+        a, _ = attn_forward(p["attn"], cfg, h, positions, causal=False,
+                            rope=False, unroll=unroll_scans)
+        x = x + a
+        h = layer_norm(x, p["ln2"]["w"], p["ln2"]["b"], eps)
+        x = x + gelu_mlp(h, **p["mlp"])
+        return x, None, zero
+
+    if kind == "dec":
+        h = layer_norm(x, p["ln1"]["w"], p["ln1"]["b"], eps)
+        self_cache = cache["self"] if cache is not None else None
+        a, self_cache = attn_forward(p["attn"], cfg, h, positions, rope=False,
+                                     cache=self_cache,
+                                     cache_index=cache_index,
+                                     unroll=unroll_scans)
+        x = x + a
+        h = layer_norm(x, p["ln2"]["w"], p["ln2"]["b"], eps)
+        if cache is not None:
+            xkv = cache["cross"]
+        else:
+            xkv = encode_cross_kv(p["xattn"], cfg, enc_out)
+        x = x + cross_attn_forward(p["xattn"], cfg, h, xkv,
+                                   unroll=unroll_scans)
+        h = layer_norm(x, p["ln3"]["w"], p["ln3"]["b"], eps)
+        x = x + gelu_mlp(h, **p["mlp"])
+        new_cache = ({"self": self_cache, "cross": cache["cross"]}
+                     if cache is not None else None)
+        return x, new_cache, zero
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model parameters
+# ---------------------------------------------------------------------------
+
+def _stack_layers(key: jax.Array, kind: str, count: int, cfg: ArchConfig,
+                  dtype) -> Dict:
+    ks = jax.random.split(key, count)
+    layers = [init_layer_params(ks[i], kind, cfg, dtype)
+              for i in range(count)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def init_params(key: jax.Array, cfg: ArchConfig,
+                dtype=jnp.float32) -> Dict:
+    """Model parameters. Layer stacks are ALWAYS stacked along a leading
+    layer axis; scan vs unroll is chosen at apply time."""
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype=dtype),
+    }
+    for gi, g in enumerate(layer_groups(cfg)):
+        p[f"group{gi}"] = _stack_layers(ks[1 + gi], g.kind, g.count, cfg,
+                                        dtype)
+    if cfg.family == "encdec":
+        p["encoder"] = _stack_layers(ks[4], "enc", cfg.encoder_layers, cfg,
+                                     dtype)
+        p["enc_norm"] = _ln(cfg.d_model, dtype)
+        p["final_norm"] = _ln(cfg.d_model, dtype)
+    elif cfg.family == "ssm":
+        p["in_norm"] = _ln(cfg.d_model, dtype)     # RWKV ln0
+        p["final_norm"] = _ln(cfg.d_model, dtype)
+    else:
+        p["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[6], cfg.d_model, cfg.vocab_size,
+                                  dtype=dtype)
+    return p
+
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    """Exact parameter count via shape-only init (no allocation)."""
+    import numpy as np
+    shapes = jax.eval_shape(
+        lambda k: init_params(k, cfg, jnp.float32),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    if active_only and cfg.moe:
+        m = cfg.moe
+        per_expert = 3 * cfg.d_model * m.d_ff_expert
+        n_moe_layers = cfg.n_layers - m.first_dense_layers
+        total -= n_moe_layers * (m.n_routed - m.top_k) * per_expert
+    return total
+
+
+def count_embedding_params(cfg: ArchConfig) -> int:
+    n = cfg.vocab_size * cfg.d_model
+    return n if cfg.tie_embeddings else 2 * n
+
+
+# ---------------------------------------------------------------------------
+# Forward pass (training / prefill-style full sequence)
+# ---------------------------------------------------------------------------
+
+def _apply_stack(group_p: Dict, kind: str, cfg: ArchConfig, x: jax.Array,
+                 positions: jax.Array, *, cache: Optional[Dict],
+                 cache_index, enc_out, scan_layers: bool, remat: bool,
+                 mixer_chunk: int, dense_moe: bool,
+                 unroll_scans: bool = False, remat_blocks: int = 1,
+                 moe_groups: int = 1,
+                 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    def body_fn(x, layer_p, layer_cache):
+        x, new_cache, a = apply_layer(
+            kind, layer_p, cfg, x, positions,
+            cache=layer_cache, cache_index=cache_index,
+            enc_out=enc_out, mixer_chunk=mixer_chunk,
+            dense_moe=dense_moe, unroll_scans=unroll_scans,
+            moe_groups=moe_groups)
+        # boundary constraint: what the remat/scan machinery SAVES is this
+        # carried value — under sequence-TP it is 1/TP the full-seq size
+        x = shard_acts(x, ("batch", "seq_tp", "embed"))
+        return x, new_cache, a
+    if remat:
+        body_fn = jax.checkpoint(body_fn)
+
+    n = jax.tree.leaves(group_p)[0].shape[0]
+    if scan_layers:
+        def scan_body(carry, inp):
+            x, aux = carry
+            layer_p, layer_cache = inp
+            x, new_cache, a = body_fn(x, layer_p, layer_cache)
+            return (x, aux + a), new_cache
+
+        if remat and remat_blocks > 1 and n % remat_blocks == 0:
+            # 2-level remat: outer scan over layer blocks (boundaries kept),
+            # inner rematerialized scan over the block's layers — live
+            # activations drop from O(L) to O(L/B + B) layer boundaries,
+            # what fits llama3-405b train on 16 GB/chip (EXPERIMENTS.md).
+            inner = n // remat_blocks
+            blocked = jax.tree.map(
+                lambda a: a.reshape(remat_blocks, inner, *a.shape[1:]),
+                (group_p, cache))
+
+            @jax.checkpoint
+            def outer_body(carry, blk):
+                blk_p, blk_cache = blk
+                return jax.lax.scan(scan_body, carry, (blk_p, blk_cache))
+            (x, aux), new_cache = jax.lax.scan(
+                outer_body, (x, jnp.zeros((), jnp.float32)), blocked)
+            if cache is not None:
+                new_cache = jax.tree.map(
+                    lambda a: a.reshape(n, *a.shape[2:]), new_cache)
+            return x, new_cache, aux
+
+        (x, aux), new_cache = jax.lax.scan(
+            scan_body, (x, jnp.zeros((), jnp.float32)), (group_p, cache))
+        return x, new_cache, aux
+    aux = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for i in range(n):
+        layer_p = jax.tree.map(lambda a: a[i], group_p)
+        layer_cache = (jax.tree.map(lambda a: a[i], cache)
+                       if cache is not None else None)
+        x, nc, a = body_fn(x, layer_p, layer_cache)
+        aux = aux + a
+        new_caches.append(nc)
+    new_cache = (jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+                 if cache is not None else None)
+    return x, new_cache, aux
+
+
+def encode(params: Dict, cfg: ArchConfig, enc_frames: jax.Array, *,
+           scan_layers: bool = True, remat: bool = False,
+           unroll_scans: bool = False, remat_blocks: int = 1) -> jax.Array:
+    """Whisper encoder: frame embeddings [B, S_enc, D] -> enc_out."""
+    Senc = enc_frames.shape[1]
+    x = enc_frames + sinusoidal_positions(Senc, cfg.d_model).astype(
+        enc_frames.dtype)
+    pos = jnp.arange(Senc)
+    x, _, _ = _apply_stack(params["encoder"], "enc", cfg, x, pos,
+                           cache=None, cache_index=None, enc_out=None,
+                           scan_layers=scan_layers, remat=remat,
+                           mixer_chunk=64, dense_moe=False,
+                           unroll_scans=unroll_scans,
+                           remat_blocks=remat_blocks)
+    return layer_norm(x, params["enc_norm"]["w"], params["enc_norm"]["b"],
+                      cfg.norm_eps)
+
+
+def forward(params: Dict, cfg: ArchConfig, tokens: jax.Array, *,
+            prefix_embeds: Optional[jax.Array] = None,
+            enc_frames: Optional[jax.Array] = None,
+            positions: Optional[jax.Array] = None,
+            cache: Optional[Dict] = None,
+            cache_index: Optional[jax.Array] = None,
+            scan_layers: bool = True, remat: bool = False,
+            mixer_chunk: int = 64, dense_moe: bool = False,
+            logits_f32: bool = False, unroll_scans: bool = False,
+            remat_blocks: int = 1, moe_groups: int = 1,
+            ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Full forward. tokens: [B, S_text].
+
+    prefix_embeds (vlm): [B, n_front, D] prepended before the token stream.
+    enc_frames (encdec): [B, S_enc, D] stub frontend output.
+    Returns (logits [B, S, V], new_cache, moe_aux_loss).
+    """
+    x = params["embed"][tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    if cfg.family == "ssm":
+        x = layer_norm(x, params["in_norm"]["w"], params["in_norm"]["b"],
+                       cfg.norm_eps)
+    if cfg.family == "encdec":
+        x = x + sinusoidal_at(positions, cfg.d_model).astype(x.dtype)
+
+    enc_out = None
+    if cfg.family == "encdec" and cache is None:
+        enc_out = encode(params, cfg, enc_frames, scan_layers=scan_layers,
+                         remat=remat, unroll_scans=unroll_scans,
+                         remat_blocks=remat_blocks)
+
+    aux = jnp.zeros((), jnp.float32)
+    groups = layer_groups(cfg)
+    for gi, g in enumerate(groups):
+        gcache = cache[f"group{gi}"] if cache is not None else None
+        x, new_gcache, a = _apply_stack(
+            params[f"group{gi}"], g.kind, cfg, x, positions, cache=gcache,
+            cache_index=cache_index, enc_out=enc_out,
+            scan_layers=scan_layers, remat=remat, mixer_chunk=mixer_chunk,
+            dense_moe=dense_moe, unroll_scans=unroll_scans,
+            remat_blocks=remat_blocks, moe_groups=moe_groups)
+        aux = aux + a
+        if cache is not None:
+            cache = dict(cache)
+            cache[f"group{gi}"] = new_gcache
+
+    fn = params["final_norm"]
+    if isinstance(fn, dict):
+        x = layer_norm(x, fn["w"], fn["b"], cfg.norm_eps)
+    else:
+        x = rms_norm(x, fn, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    if logits_f32:
+        logits = x.astype(jnp.float32) @ head.astype(jnp.float32)
+    else:
+        logits = x @ head
+    logits = shard_acts(logits, ("batch", None, "vocab"))
+    return logits, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Training loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(params: Dict, cfg: ArchConfig, batch: Dict[str, jax.Array], *,
+            aux_coef: float = 0.01, scan_layers: bool = True,
+            remat: bool = False, dense_moe: bool = False,
+            mixer_chunk: int = 64, unroll_scans: bool = False,
+            remat_blocks: int = 1, moe_groups: int = 1,
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token CE.  batch: tokens [B,S], targets [B,S], loss_mask [B,S]
+    (+ prefix_embeds / enc_frames per family)."""
+    logits, _, aux = forward(
+        params, cfg, batch["tokens"],
+        prefix_embeds=batch.get("prefix_embeds"),
+        enc_frames=batch.get("enc_frames"),
+        scan_layers=scan_layers, remat=remat, dense_moe=dense_moe,
+        mixer_chunk=mixer_chunk, unroll_scans=unroll_scans,
+        remat_blocks=remat_blocks, moe_groups=moe_groups)
+    targets = batch["targets"]
+    npad = logits.shape[1] - targets.shape[1]
+    if npad:                                   # vlm prefix positions: no loss
+        logits = logits[:, npad:]
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - tgt
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    metrics = {"ce_loss": loss, "moe_aux": aux}
+    return loss + aux_coef * aux, metrics
+
+
+# ---------------------------------------------------------------------------
+# Caches: init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _init_layer_cache(kind: str, cfg: ArchConfig, batch: int, max_seq: int,
+                      dtype, enc_seq: int = 0) -> Dict:
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    if kind in ("attn_mlp", "attn_moe"):
+        if cfg.mla:
+            return init_mla_cache(cfg, batch, max_seq, dtype)
+        return {"k": jnp.zeros((batch, max_seq, KV, hd), dtype),
+                "v": jnp.zeros((batch, max_seq, KV, hd), dtype)}
+    if kind == "rwkv":
+        return {"tmix": init_tmix_state(cfg, batch, dtype),
+                "cmix_shift": jnp.zeros((batch, cfg.d_model), dtype)}
+    if kind == "hymba":
+        Wc = min(max_seq, cfg.sliding_window or max_seq)
+        return {"attn": {"k": jnp.zeros((batch, Wc, KV, hd), dtype),
+                         "v": jnp.zeros((batch, Wc, KV, hd), dtype),
+                         "kpos": jnp.full((Wc,), -1, jnp.int32)},
+                "ssm": init_ssm_state(cfg, batch, dtype)}
+    if kind == "dec":
+        return {"self": {"k": jnp.zeros((batch, max_seq, KV, hd), dtype),
+                         "v": jnp.zeros((batch, max_seq, KV, hd), dtype)},
+                "cross": {"k": jnp.zeros((batch, enc_seq, KV, hd), dtype),
+                          "v": jnp.zeros((batch, enc_seq, KV, hd), dtype)}}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype) -> Dict:
+    """Stacked per-group decode caches."""
+    enc_seq = cfg.encoder_seq
+    cache: Dict[str, Any] = {}
+    for gi, g in enumerate(layer_groups(cfg)):
+        one = _init_layer_cache(g.kind, cfg, batch, max_seq, dtype, enc_seq)
+        cache[f"group{gi}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (g.count,) + a.shape), one)
+    return cache
+
+
+def prefill(params: Dict, cfg: ArchConfig, tokens: jax.Array, cache: Dict, *,
+            prefix_embeds: Optional[jax.Array] = None,
+            enc_frames: Optional[jax.Array] = None,
+            scan_layers: bool = True, mixer_chunk: int = 64,
+            dense_moe: bool = False, unroll_scans: bool = False,
+            moe_groups: int = 1,
+            ) -> Tuple[jax.Array, Dict]:
+    """Run the prompt through the model, filling the cache.
+
+    Returns (last-position logits [B, V], cache).  For encdec, also fills
+    per-layer cross KV from the encoder output."""
+    if cfg.family == "encdec":
+        enc_out = encode(params, cfg, enc_frames, scan_layers=scan_layers,
+                         unroll_scans=unroll_scans)
+        g0 = params["group0"]
+
+        def fill_cross(layer_p):
+            return encode_cross_kv(layer_p["xattn"], cfg, enc_out)
+        cross = (jax.vmap(fill_cross)(g0) if scan_layers or True else None)
+        cache = dict(cache)
+        cache["group0"] = {**cache["group0"], "cross": cross}
+    logits, cache, _ = forward(
+        params, cfg, tokens, prefix_embeds=prefix_embeds,
+        positions=jnp.arange(tokens.shape[1]
+                             + (prefix_embeds.shape[1]
+                                if prefix_embeds is not None else 0)),
+        cache=cache, cache_index=jnp.zeros((), jnp.int32),
+        scan_layers=scan_layers, mixer_chunk=mixer_chunk,
+        dense_moe=dense_moe, unroll_scans=unroll_scans,
+        moe_groups=moe_groups)
+    return logits[:, -1], cache
+
+
+def decode_step(params: Dict, cfg: ArchConfig, token: jax.Array,
+                cache: Dict, pos: jax.Array, *, scan_layers: bool = True,
+                dense_moe: bool = False,
+                unroll_scans: bool = False) -> Tuple[jax.Array, Dict]:
+    """One decode step. token: [B]; pos: [] int32 (current position).
+    Returns (logits [B, V], cache)."""
+    logits, cache, _ = forward(
+        params, cfg, token[:, None], positions=pos[None],
+        cache=cache, cache_index=pos, scan_layers=scan_layers,
+        mixer_chunk=1, dense_moe=dense_moe, unroll_scans=unroll_scans)
+    return logits[:, 0], cache

@@ -1,0 +1,139 @@
+"""Multi-head Latent Attention (DeepSeek-V2), cache-compressed decode.
+
+MLA projects keys/values through a shared low-rank latent c_kv of width
+``kv_lora_rank`` (+ a small decoupled RoPE key of width ``rope_head_dim``).
+Only (c_kv, k_rope) is cached at decode — the architecture's decode-memory
+contribution: cache bytes per token drop from  2*H*hd  to
+kv_lora + rope_dim  (e.g. 4096 -> 576 for deepseek-v2-lite).
+
+Weight-absorption at decode: rather than expanding c_kv to per-head K/V
+(S * H * hd work per step), the per-head up-projections are absorbed into
+the query/output sides, so attention runs directly in the latent space:
+
+  score_t = (q_nope W_uk^T) . c_kv_t   +   q_rope . k_rope_t
+  out     = (sum_t p_t c_kv_t) W_uv
+
+This is the TPU-friendly form (two small einsums instead of re-expanding the
+cache) and is also what the serving engine lowers for decode shapes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import blockwise_attention
+from .layers import apply_rope, dense_init, rms_norm
+
+
+def init_mla_params(key: jax.Array, cfg: ArchConfig, dtype) -> Dict:
+    m = cfg.mla
+    assert m is not None
+    d, H = cfg.d_model, cfg.n_heads
+    qd = H * (m.nope_head_dim + m.rope_head_dim)
+    ks = jax.random.split(key, 6)
+    p = {
+        # query (direct projection; v2-lite has no q LoRA)
+        "wq": dense_init(ks[0], d, qd, dtype=dtype),
+        # joint KV down-projection: [D, kv_lora + rope_dim]
+        "w_dkv": dense_init(ks[1], d, m.kv_lora_rank + m.rope_head_dim,
+                            dtype=dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        # up-projections out of the latent
+        "w_uk": dense_init(ks[2], m.kv_lora_rank, H * m.nope_head_dim,
+                           dtype=dtype),
+        "w_uv": dense_init(ks[3], m.kv_lora_rank, H * m.v_head_dim,
+                           dtype=dtype),
+        "wo": dense_init(ks[4], H * m.v_head_dim, d, dtype=dtype),
+    }
+    return p
+
+
+def _project_q(p: Dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """-> q_nope [B,S,H,nope], q_rope [B,S,H,rope] (rope applied)."""
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, H, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(p: Dict, cfg: ArchConfig, x: jax.Array,
+                       positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """-> c_kv [B,S,R] (normed latent), k_rope [B,S,1,rope] (shared head)."""
+    m = cfg.mla
+    ckr = x @ p["w_dkv"]
+    c_kv, k_rope = jnp.split(ckr, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_attention(p: Dict, cfg: ArchConfig, x: jax.Array,
+                  positions: jax.Array,
+                  cache: Optional[Dict] = None,
+                  cache_index: Optional[jax.Array] = None,
+                  unroll: bool = False,
+                  ) -> Tuple[jax.Array, Optional[Dict]]:
+    """MLA block.  x: [B, S, D].
+
+    cache (decode): {'c_kv': [B, Smax, R], 'k_rope': [B, Smax, rope]};
+    cache_index: [] current length.  Returns (out [B,S,D], updated cache).
+    """
+    m, H = cfg.mla, cfg.n_heads
+    B, S, D = x.shape
+    q_nope, q_rope = _project_q(p, cfg, x, positions)
+    c_new, kr_new = _project_kv_latent(p, cfg, x, positions)
+
+    if cache is None:
+        c_kv, k_rope = c_new, kr_new
+        valid = None
+    else:
+        c_kv = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), cache_index, 1)
+        k_rope = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], kr_new[:, :, 0, :].astype(cache["k_rope"].dtype),
+            cache_index, 1)
+        cache = {"c_kv": c_kv, "k_rope": k_rope}
+        k_rope = k_rope[:, :, None, :]
+        valid = cache_index + S
+
+    # ---- absorbed attention in latent space --------------------------------
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, m.nope_head_dim)
+    # q_abs[b,s,h,R] = q_nope . W_uk[:,h,:]^T
+    q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)
+    # attention over "keys" = [c_kv | k_rope] with matching query parts
+    q_full = jnp.concatenate([q_abs, q_rope], axis=-1)       # [B,S,H,R+rope]
+    k_full = jnp.concatenate(
+        [c_kv, k_rope[:, :, 0, :]], axis=-1)[:, :, None, :]  # [B,Sk,1,R+rope]
+    # scale by the *materialized* head dim, per the paper
+    scale_fix = ((m.nope_head_dim + m.rope_head_dim) ** -0.5
+                 / (q_full.shape[-1] ** -0.5))
+    attn_lat = blockwise_attention(
+        q_full * scale_fix, k_full,
+        jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)[:, :, None, :],
+        positions, kv_valid_len=valid, causal=True,
+        kv_block=min(512, max(k_full.shape[1], 1)), unroll=unroll)
+    attn_lat = attn_lat[..., :m.kv_lora_rank]                # [B,S,H,R]
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bshr,rhv->bshv", attn_lat, w_uv)
+    out = out.reshape(B, S, H * m.v_head_dim) @ p["wo"]
+    return out, cache
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype) -> Dict:
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, m.rope_head_dim), dtype),
+    }
+
+
+def mla_cache_bytes_per_token(cfg: ArchConfig, dtype_bytes: int = 2) -> int:
+    """The MLA memory win, per token per layer (vs 2*H*hd for vanilla MHA)."""
+    m = cfg.mla
+    return (m.kv_lora_rank + m.rope_head_dim) * dtype_bytes

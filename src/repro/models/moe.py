@@ -1,0 +1,226 @@
+"""Mixture-of-Experts FFN (DeepSeek-V2-Lite fine-grained MoE; Grok-1 MoE).
+
+Token dispatch to experts IS a MapReduce shuffle (tokens = intermediate
+<key, value> pairs keyed by destination expert; experts = reducers), which is
+why the paper's hierarchical shuffle applies directly to this layer — see
+:mod:`repro.distributed.collectives` for the two-stage expert all-to-all.
+
+This module provides the *math*: router, capacity-based dispatch/combine
+(GSPMD-style dense einsums that shard cleanly under pjit), and the expert
+FFNs.  Two dispatch paths:
+
+  * ``moe_ffn_dense``    — capacity-less one-hot combine; exact, O(T*E) memory;
+                           used by smoke tests / tiny configs.
+  * ``moe_ffn_capacity`` — fixed expert capacity C with token dropping, the
+                           production path (einsum dispatch keeps everything
+                           static-shaped for XLA/TPU and shards over the
+                           'model' (expert) axis).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, MoEConfig
+from .layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_moe_params(key: jax.Array, cfg: ArchConfig, dtype) -> Dict:
+    """Per-layer MoE params (stacked expert weights: [E, ...])."""
+    m = cfg.moe
+    assert m is not None
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    E = m.n_routed
+    p = {
+        "router": dense_init(ks[0], d, E, dtype=jnp.float32),  # fp32 router
+        "w1": _expert_init(ks[1], E, d, m.d_ff_expert, dtype),
+        "w3": _expert_init(ks[2], E, d, m.d_ff_expert, dtype),
+        "w2": _expert_init(ks[3], E, m.d_ff_expert, d, dtype),
+    }
+    if m.n_shared:
+        ff_sh = m.d_ff_expert * m.n_shared
+        p["shared_w1"] = dense_init(ks[4], d, ff_sh, dtype=dtype)
+        p["shared_w3"] = dense_init(ks[5], d, ff_sh, dtype=dtype)
+        p["shared_w2"] = dense_init(ks[6], ff_sh, d, dtype=dtype)
+    return p
+
+
+def _expert_init(key, E, d_in, d_out, dtype):
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (E, d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+def route(router_w: jax.Array, x: jax.Array, top_k: int,
+          ) -> Tuple[jax.Array, jax.Array]:
+    """Softmax-then-TopK routing (DeepSeek-V2 style).
+
+    x: [T, D] tokens.  Returns (weights [T, k] renormalized, ids [T, k]).
+    """
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, top_k)                           # [T, k]
+    w = w / jnp.clip(w.sum(-1, keepdims=True), 1e-9)
+    return w, ids
+
+
+def aux_load_balance_loss(router_w: jax.Array, x: jax.Array,
+                          top_k: int) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (mean over experts of
+    fraction_tokens * fraction_prob * E)."""
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    E = logits.shape[-1]
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, ids = jax.lax.top_k(probs, top_k)
+    counts = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(counts.sum(), 1.0)
+    p = probs.mean(axis=0)
+    return E * jnp.sum(f * p)
+
+
+# ---------------------------------------------------------------------------
+# Expert FFN application
+# ---------------------------------------------------------------------------
+
+def _expert_swiglu(w1, w3, w2, xe):
+    """xe: [E, C, D] -> [E, C, D] through per-expert gated MLP."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w1))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, w3)
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def moe_ffn_dense(p: Dict, m: MoEConfig, x: jax.Array) -> jax.Array:
+    """Exact (capacity-less) MoE: every token through its top-k experts via
+    one-hot masking.  [T, D] -> [T, D].  O(T*E*k) combine memory — tiny
+    configs only."""
+    T, D = x.shape
+    w, ids = route(p["router"], x, m.top_k)                    # [T,k]
+    onehot = jax.nn.one_hot(ids, m.n_routed, dtype=x.dtype)    # [T,k,E]
+    gate = jnp.einsum("tk,tke->te", w.astype(x.dtype), onehot)  # [T,E]
+    # process ALL tokens through ALL experts (tiny configs): [E,T,D]
+    xe = jnp.broadcast_to(x[None], (m.n_routed, T, D))
+    ye = _expert_swiglu(p["w1"], p["w3"], p["w2"], xe)         # [E,T,D]
+    out = jnp.einsum("etd,te->td", ye, gate)
+    return out + _shared(p, x)
+
+
+def moe_ffn_capacity(p: Dict, m: MoEConfig, x: jax.Array,
+                     capacity: Optional[int] = None) -> jax.Array:
+    """Capacity-based dispatch (GSPMD einsum formulation).
+
+    x: [T, D].  Each expert processes at most C tokens; overflow tokens fall
+    through with only the shared-expert output (standard TPU MoE).  All
+    shapes static => shards under pjit with experts on the 'model' axis.
+    """
+    T, D = x.shape
+    E, k = m.n_routed, m.top_k
+    if capacity is None:
+        capacity = max(int(T * k * m.capacity_factor / E), 1)
+    C = min(capacity, T)
+    w, ids = route(p["router"], x, k)                          # [T,k]
+
+    # position of each (token, choice) within its expert's buffer
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.int32)           # [T,k,E]
+    flat = onehot.reshape(T * k, E)
+    pos = jnp.cumsum(flat, axis=0) - 1                         # arrival order
+    pos = pos.reshape(T, k, E)
+    within = (pos * onehot).sum(-1)                            # [T,k]
+    keep = within < C
+    w = w * keep.astype(w.dtype)
+
+    # dispatch [T, E, C] one-hot  (bool -> dtype einsums)
+    pos_oh = jax.nn.one_hot(within, C, dtype=x.dtype)          # [T,k,C]
+    disp = jnp.einsum("tke,tkc->tec", onehot.astype(x.dtype), pos_oh)
+    comb = jnp.einsum("tk,tke,tkc->tec", w.astype(x.dtype),
+                      onehot.astype(x.dtype), pos_oh)
+    xe = jnp.einsum("td,tec->ecd", x, disp)                    # [E,C,D]
+    ye = _expert_swiglu(p["w1"], p["w3"], p["w2"], xe)         # [E,C,D]
+    out = jnp.einsum("ecd,tec->td", ye, comb)
+    return out + _shared(p, x)
+
+
+def moe_ffn_sorted(p: Dict, m: MoEConfig, x: jax.Array,
+                   n_groups: int = 1,
+                   capacity: Optional[int] = None) -> jax.Array:
+    """Production dispatch: per-group sort-based routing (GShard-style).
+
+    x: [T, D].  Tokens are split into ``n_groups`` local groups (in the
+    sharded step, groups == data shards, so dispatch math is collective-
+    free); within a group, token-choices are argsorted by expert id and
+    scattered into an [E, C_g, D] buffer — no [T, E, C] one-hot tensor is
+    ever materialized (the einsum path's memory cliff at 1M tokens).
+    The buffer is annotated ('batch', 'experts', ...) so the expert
+    all-to-all emerges from GSPMD when experts live on the 'model' axis.
+    """
+    from ..distributed.sharding import shard_acts
+    T, D = x.shape
+    E, k = m.n_routed, m.top_k
+    assert T % n_groups == 0, (T, n_groups)
+    Tg = T // n_groups
+    if capacity is None:
+        capacity = max(int(Tg * k * m.capacity_factor / E), 1)
+    C = min(capacity, Tg * k)
+
+    w, ids = route(p["router"], x, k)                       # [T, k]
+    xg = x.reshape(n_groups, Tg, D)
+    wg = w.reshape(n_groups, Tg, k).astype(x.dtype)
+    eg = ids.reshape(n_groups, Tg, k)
+
+    def dispatch_one(xl, wl, el):
+        e_flat = el.reshape(Tg * k)
+        w_flat = wl.reshape(Tg * k)
+        order = jnp.argsort(e_flat, stable=True)
+        e_sorted = e_flat[order]
+        first = jnp.searchsorted(e_sorted, e_sorted, side="left")
+        pos = jnp.arange(Tg * k) - first                    # rank in expert
+        keep = pos < C
+        slot = jnp.where(keep, e_sorted * C + pos, 0)
+        tok = order // k
+        contrib = jnp.where(keep[:, None], xl[tok], 0)
+        xe = jnp.zeros((E * C, D), xl.dtype).at[slot].add(contrib)
+        return xe.reshape(E, C, D), (slot, tok, keep,
+                                     w_flat[order] * keep.astype(xl.dtype))
+
+    xe, meta = jax.vmap(dispatch_one)(xg, wg, eg)           # [G, E, C, D]
+    xe = shard_acts(xe, ("batch", "experts", None, None))
+    ye = jax.vmap(lambda b: _expert_swiglu(p["w1"], p["w3"], p["w2"], b))(xe)
+    ye = shard_acts(ye, ("batch", "experts", None, None))
+
+    def combine_one(yl, mt):
+        slot, tok, keep, wk = mt
+        vals = yl.reshape(E * C, D)[slot] * wk[:, None]
+        return jnp.zeros((Tg, D), yl.dtype).at[tok].add(
+            jnp.where(keep[:, None], vals, 0))
+
+    out = jax.vmap(combine_one)(ye, meta).reshape(T, D)
+    return out + _shared(p, x)
+
+
+def _shared(p: Dict, x: jax.Array) -> jax.Array:
+    if "shared_w1" not in p:
+        return jnp.zeros_like(x)
+    h = jax.nn.silu(x @ p["shared_w1"]) * (x @ p["shared_w3"])
+    return h @ p["shared_w2"]
+
+
+def moe_ffn(p: Dict, m: MoEConfig, x: jax.Array, *,
+            dense_dispatch: bool = False, n_groups: int = 1) -> jax.Array:
+    """[.., D] -> [.., D]; flattens leading dims to a token axis."""
+    lead = x.shape[:-1]
+    xt = x.reshape(-1, x.shape[-1])
+    if dense_dispatch:
+        out = moe_ffn_dense(p, m, xt)
+    else:
+        out = moe_ffn_sorted(p, m, xt, n_groups=n_groups)
+    return out.reshape(*lead, x.shape[-1])

@@ -1,0 +1,186 @@
+"""RWKV6 'Finch' blocks: time-mix (WKV with data-dependent decay) + channel-mix.
+
+Faithful to arXiv:2404.05892 at the block level:
+
+  * DDLerp token-shift: every projection input is a data-dependent lerp
+    between x_t and x_{t-1} through a shared low-rank trunk (time_maa).
+  * Data-dependent decay  w_t = exp(-exp(w0 + lora_w(.)))  per channel.
+  * WKV: the gated linear recurrence of :mod:`repro.models.linrec`
+    (mode='rwkv': state read through t-1, diagonal bonus u).
+  * Per-head GroupNorm on the WKV output, SiLU(g) output gate.
+  * Channel-mix: shifted lerp, squared-ReLU key MLP, sigmoid receptance.
+
+Both a full-sequence form (training / prefill; chunked scan) and a
+single-token recurrent form (decode) are provided; they are equal up to
+fp32 roundoff (asserted in tests).  The chunked scan is the jnp oracle of
+the Pallas ``rwkv_scan`` kernel.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import dense_init
+from .linrec import chunked_linear_recurrence, recurrent_step
+
+DDLERP_RANK = 32          # low-rank trunk width of the time_maa loras
+DECAY_RANK = 64           # rank of the decay lora
+
+
+def init_tmix_params(key: jax.Array, cfg: ArchConfig, dtype) -> Dict:
+    d = cfg.d_model
+    h, hd = cfg.n_heads, cfg.head_dim
+    assert h * hd == d, "RWKV6 requires n_heads * head_dim == d_model"
+    ks = jax.random.split(key, 12)
+    return {
+        # DDLerp base mixes (mu_x plus one per stream r,k,v,w,g)
+        "mu_x": jnp.zeros((d,), dtype),
+        "mu": jnp.zeros((5, d), dtype),                       # r,k,v,w,g
+        "maa_w1": dense_init(ks[0], d, 5 * DDLERP_RANK, dtype=dtype),
+        "maa_w2": (jax.random.normal(ks[1], (5, DDLERP_RANK, d), jnp.float32)
+                   * 0.01).astype(dtype),
+        # data-dependent decay
+        "w0": jnp.full((d,), -6.0, dtype),                    # exp(-exp(-6))≈1
+        "w_lora_a": dense_init(ks[2], d, DECAY_RANK, dtype=dtype),
+        "w_lora_b": (jax.random.normal(ks[3], (DECAY_RANK, d), jnp.float32)
+                     * 0.01).astype(dtype),
+        # projections
+        "wr": dense_init(ks[4], d, d, dtype=dtype),
+        "wk": dense_init(ks[5], d, d, dtype=dtype),
+        "wv": dense_init(ks[6], d, d, dtype=dtype),
+        "wg": dense_init(ks[7], d, d, dtype=dtype),
+        "wo": dense_init(ks[8], d, d, dtype=dtype),
+        # per-head diagonal bonus u ('time_faaaa')
+        "u": (jax.random.normal(ks[9], (h, hd), jnp.float32)
+              * 0.1).astype(dtype),
+        # per-head GroupNorm
+        "gn_w": jnp.ones((d,), dtype),
+        "gn_b": jnp.zeros((d,), dtype),
+    }
+
+
+def init_cmix_params(key: jax.Array, cfg: ArchConfig, dtype) -> Dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), dtype),
+        "mu_r": jnp.zeros((d,), dtype),
+        "wk": dense_init(ks[0], d, ff, dtype=dtype),
+        "wv": dense_init(ks[1], ff, d, dtype=dtype),
+        "wr": dense_init(ks[2], d, d, dtype=dtype),
+    }
+
+
+def _shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1} stream: [B,S,D] -> [B,S,D]; ``prev`` [B,D] seeds t=0."""
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: Dict, x: jax.Array, xprev: jax.Array) -> Tuple[jax.Array, ...]:
+    """Data-dependent lerp for the 5 streams; returns (xr, xk, xv, xw, xg)."""
+    dx = xprev - x
+    xxx = x + dx * p["mu_x"]
+    f32 = jnp.float32
+    trunk = jnp.tanh(xxx.astype(f32) @ p["maa_w1"].astype(f32))
+    B, S = x.shape[:2]
+    trunk = trunk.reshape(B, S, 5, DDLERP_RANK)
+    # per-stream offset: [B,S,5,D]
+    off = jnp.einsum("bsfr,frd->bsfd", trunk, p["maa_w2"].astype(f32))
+    mix = p["mu"].astype(f32)[None, None] + off
+    streams = x[:, :, None, :] + dx[:, :, None, :] * mix.astype(x.dtype)
+    return tuple(streams[:, :, i] for i in range(5))
+
+
+def _decay_log_w(p: Dict, xw: jax.Array) -> jax.Array:
+    """log(w_t) = -exp(w0 + lora_w(xw))  (guaranteed < 0)."""
+    f32 = jnp.float32
+    lora = jnp.tanh(xw.astype(f32) @ p["w_lora_a"].astype(f32)) \
+        @ p["w_lora_b"].astype(f32)
+    return -jnp.exp(p["w0"].astype(f32) + lora)
+
+
+def _group_norm(x: jax.Array, w: jax.Array, b: jax.Array, h: int,
+                eps: float = 64e-5) -> jax.Array:
+    """Per-head GroupNorm over [..., D] with D = h * hd."""
+    shp = x.shape
+    xg = x.reshape(*shp[:-1], h, shp[-1] // h).astype(jnp.float32)
+    mu = xg.mean(-1, keepdims=True)
+    var = ((xg - mu) ** 2).mean(-1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(shp) * w + b).astype(x.dtype)
+
+
+def tmix_forward(p: Dict, cfg: ArchConfig, x: jax.Array,
+                 state: Optional[Dict] = None, *, chunk: int = 64,
+                 unroll: bool = False,
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    """RWKV6 time-mix. x: [B,S,D].
+
+    ``state`` (decode/streaming): {'shift': [B,D], 'wkv': [B,h,hd,hd]}.
+    Returns (out [B,S,D], new state or None when stateless training).
+    """
+    B, S, D = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    keep_state = state is not None
+    prev = state["shift"] if keep_state else None
+    s0 = state["wkv"] if keep_state else None
+
+    xprev = _shift(x, prev)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xprev)
+    r = (xr @ p["wr"]).reshape(B, S, h, hd)
+    k = (xk @ p["wk"]).reshape(B, S, h, hd)
+    v = (xv @ p["wv"]).reshape(B, S, h, hd)
+    g = xg @ p["wg"]
+    log_w = _decay_log_w(p, xw).reshape(B, S, h, hd)
+
+    out, s_new = chunked_linear_recurrence(
+        r, k, v, log_w, u=p["u"], initial_state=s0, mode="rwkv",
+        chunk=chunk, return_state=keep_state, unroll=unroll)
+    out = out.reshape(B, S, D)
+    out = _group_norm(out, p["gn_w"], p["gn_b"], h)
+    out = (out * jax.nn.silu(g)) @ p["wo"]
+    new_state = ({"shift": x[:, -1], "wkv": s_new} if keep_state else None)
+    return out, new_state
+
+
+def tmix_step(p: Dict, cfg: ArchConfig, x: jax.Array, state: Dict,
+              ) -> Tuple[jax.Array, Dict]:
+    """Single-token decode. x: [B,D]; state {'shift':[B,D],'wkv':[B,h,hd,hd]}."""
+    B, D = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    xs = x[:, None, :]
+    xprev = state["shift"][:, None, :]
+    xr, xk, xv, xw, xg = _ddlerp(p, xs, xprev)
+    r = (xr @ p["wr"]).reshape(B, h, hd)
+    k = (xk @ p["wk"]).reshape(B, h, hd)
+    v = (xv @ p["wv"]).reshape(B, h, hd)
+    g = (xg @ p["wg"])[:, 0]
+    log_w = _decay_log_w(p, xw).reshape(B, h, hd)
+    out, wkv = recurrent_step(r, k, v, log_w, state["wkv"], u=p["u"],
+                              mode="rwkv")
+    out = out.reshape(B, D)
+    out = _group_norm(out, p["gn_w"], p["gn_b"], h)
+    out = (out * jax.nn.silu(g)) @ p["wo"]
+    return out, {"shift": x, "wkv": wkv}
+
+
+def cmix_forward(p: Dict, x: jax.Array, prev: Optional[jax.Array] = None,
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """RWKV6 channel-mix. x: [B,S,D] -> ([B,S,D], last-token shift state)."""
+    xprev = _shift(x, prev)
+    dx = xprev - x
+    xk = x + dx * p["mu_k"]
+    xr = x + dx * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+    return out, x[:, -1]
+
+
+def init_tmix_state(cfg: ArchConfig, batch: int, dtype) -> Dict:
+    h, hd = cfg.n_heads, cfg.head_dim
+    return {"shift": jnp.zeros((batch, cfg.d_model), dtype),
+            "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32)}

@@ -1,0 +1,136 @@
+"""Selective-SSM (Mamba-style) head used by Hymba's parallel SSM branch.
+
+Per head: a depthwise causal conv, then the selective state-space recurrence
+
+    h_t = exp(A * dt_t) h_{t-1} + dt_t * B_t x_t        h in R^{state x hd}
+    y_t = C_t^T h_t + D * x_t
+
+mapped onto the shared chunked linear recurrence (mode='inclusive') with
+  q_t = C_t,  k_t = dt_t * B_t,  v_t = x_t,  log_w = A * dt_t  (A < 0).
+
+Full-sequence (training / prefill) and single-token (decode) forms; the
+recurrent state is O(state x hd) per head — the reason ``long_500k`` is
+runnable for hymba (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import dense_init
+from .linrec import chunked_linear_recurrence, recurrent_step
+
+
+def init_ssm_params(key: jax.Array, cfg: ArchConfig, dtype) -> Dict:
+    s = cfg.ssm
+    assert s is not None
+    d = cfg.d_model
+    h, hd = cfg.n_heads, cfg.head_dim
+    inner = h * hd
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], d, inner, dtype=dtype),     # x path
+        "w_gate": dense_init(ks[1], d, inner, dtype=dtype),   # silu gate
+        "conv": (jax.random.normal(ks[2], (s.conv_width, inner), jnp.float32)
+                 * (1.0 / s.conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((inner,), dtype),
+        # selective parameters (computed from the post-conv stream)
+        "w_B": dense_init(ks[3], inner, h * s.state_dim, dtype=dtype),
+        "w_C": dense_init(ks[4], inner, h * s.state_dim, dtype=dtype),
+        "w_dt": dense_init(ks[5], inner, h, dtype=dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        # A (negative, per head/state), D skip, out proj
+        "log_a": jnp.log(jnp.linspace(1.0, float(s.state_dim),
+                                      s.state_dim))[None, :]
+        .repeat(h, 0).astype(jnp.float32),                    # [h, state]
+        "d_skip": jnp.ones((h, 1), dtype),
+        "w_out": dense_init(ks[6], inner, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x: [B,S,C]; w: [W,C]; prev: [B,W-1,C] carry.
+    Returns (y [B,S,C], new carry [B,W-1,C])."""
+    W = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+           if prev is None else prev.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)                    # [B, S+W-1, C]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+    return jax.nn.silu(y), xp[:, -(W - 1):] if W > 1 else pad
+
+
+def _selective_terms(p: Dict, cfg: ArchConfig, u: jax.Array):
+    """u: [..., inner] post-conv stream -> (q, k, v, log_w) per head."""
+    s = cfg.ssm
+    h, hd = cfg.n_heads, cfg.head_dim
+    lead = u.shape[:-1]
+    f32 = jnp.float32
+    B_t = (u @ p["w_B"]).reshape(*lead, h, s.state_dim)
+    C_t = (u @ p["w_C"]).reshape(*lead, h, s.state_dim)
+    dt = jax.nn.softplus((u @ p["w_dt"]).astype(f32)
+                         + p["dt_bias"].astype(f32))          # [..., h]
+    A = -jnp.exp(p["log_a"])                                  # [h, state] < 0
+    log_w = dt[..., None] * A                                 # [..., h, state]
+    k = B_t.astype(f32) * dt[..., None]
+    v = u.reshape(*lead, h, hd)
+    return C_t.astype(f32), k, v, log_w
+
+
+def ssm_forward(p: Dict, cfg: ArchConfig, x: jax.Array,
+                state: Optional[Dict] = None, *, chunk: int = 64,
+                unroll: bool = False,
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: [B,S,D] -> [B,S,D].  state: {'conv': [B,W-1,inner],
+    'ssm': [B,h,state,hd]} for streaming/decode."""
+    s = cfg.ssm
+    h, hd = cfg.n_heads, cfg.head_dim
+    keep_state = state is not None
+    u = x @ p["w_in"]
+    gate = jax.nn.silu(x @ p["w_gate"])
+    u, conv_carry = _causal_conv(u, p["conv"], p["conv_b"],
+                                 state["conv"] if keep_state else None)
+    q, k, v, log_w = _selective_terms(p, cfg, u)
+    out, s_new = chunked_linear_recurrence(
+        q, k, v.astype(jnp.float32), log_w,
+        initial_state=state["ssm"] if keep_state else None,
+        mode="inclusive", chunk=chunk, return_state=keep_state,
+        unroll=unroll)
+    out = out + v * p["d_skip"].astype(v.dtype)[None, None]
+    out = out.reshape(*x.shape[:-1], h * hd).astype(x.dtype)
+    out = (out * gate) @ p["w_out"]
+    new_state = ({"conv": conv_carry, "ssm": s_new} if keep_state else None)
+    return out, new_state
+
+
+def ssm_step(p: Dict, cfg: ArchConfig, x: jax.Array, state: Dict,
+             ) -> Tuple[jax.Array, Dict]:
+    """Single-token decode. x: [B,D]."""
+    s = cfg.ssm
+    h, hd = cfg.n_heads, cfg.head_dim
+    u = x @ p["w_in"]                                         # [B, inner]
+    gate = jax.nn.silu(x @ p["w_gate"])
+    # conv over the carried window
+    W = s.conv_width
+    window = jnp.concatenate([state["conv"].astype(u.dtype), u[:, None]],
+                             axis=1)                          # [B, W, inner]
+    y = jnp.einsum("bwc,wc->bc", window, p["conv"]) + p["conv_b"]
+    u = jax.nn.silu(y)
+    q, k, v, log_w = _selective_terms(p, cfg, u)
+    out, ssm_new = recurrent_step(q, k, v.astype(jnp.float32), log_w,
+                                  state["ssm"], mode="inclusive")
+    out = out + v * p["d_skip"].astype(v.dtype)[None]
+    out = out.reshape(x.shape[0], h * hd).astype(x.dtype)
+    out = (out * gate) @ p["w_out"]
+    return out, {"conv": window[:, 1:], "ssm": ssm_new}
+
+
+def init_ssm_state(cfg: ArchConfig, batch: int, dtype) -> Dict:
+    s = cfg.ssm
+    inner = cfg.n_heads * cfg.head_dim
+    return {"conv": jnp.zeros((batch, s.conv_width - 1, inner), dtype),
+            "ssm": jnp.zeros((batch, cfg.n_heads, s.state_dim, cfg.head_dim),
+                             jnp.float32)}

@@ -1,0 +1,187 @@
+"""Core scheme tests: assignments, closed-form costs vs counted schedules,
+bit-exact shuffle execution, Theorem IV.1 constraints."""
+import numpy as np
+import pytest
+
+from repro.core.params import SchemeParams
+from repro.core.assignment import (
+    Assignment, check_hybrid_constraints, coded_assignment,
+    hybrid_assignment, pair_common_counts, uncoded_assignment,
+)
+from repro.core.costs import (
+    coded_cost, corollary_bounds, cost_table, hybrid_cost, uncoded_cost,
+)
+from repro.core.shuffle_plan import (
+    check_reduce_ready, count_plan, execute_plan, make_plan,
+)
+
+# Paper Table I rows that satisfy every divisibility hypothesis.
+VALID_ROWS = [
+    (9, 3, 18, 72, 2),
+    (16, 4, 16, 240, 2),
+    (16, 4, 16, 1680, 3),
+    (15, 3, 15, 210, 2),
+    (25, 5, 25, 600, 2),
+]
+# Rows whose hybrid column violates C(P,r) | (NP/K) (paper-table slips).
+INVALID_HYBRID_ROWS = [
+    (20, 4, 20, 380, 2),
+    (30, 5, 30, 870, 2),
+    (30, 6, 30, 870, 2),
+]
+
+
+# ---------------------------------------------------------------------------
+# Assignment structure
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("row", VALID_ROWS)
+def test_assignment_replication(row):
+    K, P, Q, N, r = row
+    p = SchemeParams(K, P, Q, N, r)
+    for mk, expect_r in [(uncoded_assignment, 1), (coded_assignment, r),
+                         (hybrid_assignment, r)]:
+        a = mk(p)
+        assert len(a.servers_of_subfile) == N
+        for servers in a.servers_of_subfile:
+            assert len(servers) == expect_r
+            assert len(set(servers)) == expect_r
+
+
+def test_hybrid_cross_rack_only():
+    p = SchemeParams(12, 4, 12, 144, 2)
+    a = hybrid_assignment(p)
+    for servers in a.servers_of_subfile:
+        racks = [p.rack_of(s) for s in servers]
+        slots = [p.slot_of(s) for s in servers]
+        assert len(set(racks)) == len(servers)     # across racks only
+        assert len(set(slots)) == 1                # within one layer
+
+
+def test_hybrid_map_load_balanced():
+    p = SchemeParams(12, 4, 12, 144, 2)
+    a = hybrid_assignment(p)
+    load = a.map_load()
+    assert (load == load[0]).all()
+    assert load[0] == p.N * p.r // p.K
+
+
+@pytest.mark.parametrize("row", VALID_ROWS[:3])
+def test_theorem_iv1_constraints(row):
+    K, P, Q, N, r = row
+    p = SchemeParams(K, P, Q, N, r)
+    check_hybrid_constraints(hybrid_assignment(p))
+
+
+def test_hybrid_permutation_is_valid():
+    p = SchemeParams(9, 3, 18, 72, 2)
+    rng = np.random.default_rng(3)
+    perm = rng.permutation(p.N)
+    a = hybrid_assignment(p, perm)
+    check_hybrid_constraints(a)
+    vals = rng.integers(-99, 99, size=(p.N, p.Q))
+    know = execute_plan(a, vals)
+    check_reduce_ready(a, know, vals)
+
+
+def test_uncoded_pairs_share_nothing():
+    p = SchemeParams(8, 2, 8, 32, 2)
+    common = pair_common_counts(uncoded_assignment(p))
+    assert common.max() == 0
+
+
+# ---------------------------------------------------------------------------
+# Counted schedules == closed forms  (the paper's Props 1-2 / Thm III.1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("row", VALID_ROWS)
+def test_counts_match_formulas(row):
+    K, P, Q, N, r = row
+    p = SchemeParams(K, P, Q, N, r)
+    forms = cost_table(p)
+    for scheme, mk in [("uncoded", uncoded_assignment),
+                       ("coded", coded_assignment),
+                       ("hybrid", hybrid_assignment)]:
+        counts = count_plan(make_plan(mk(p)), p)
+        assert counts.intra == pytest.approx(forms[scheme].intra)
+        assert counts.cross == pytest.approx(forms[scheme].cross)
+
+
+@pytest.mark.parametrize("row", INVALID_HYBRID_ROWS)
+def test_paper_rows_violating_divisibility(row):
+    K, P, Q, N, r = row
+    p = SchemeParams(K, P, Q, N, r)
+    with pytest.raises(ValueError):
+        p.validate_hybrid()
+    # the closed form still evaluates with check=False (as the paper did)
+    c = hybrid_cost(p, check=False)
+    assert c.cross == pytest.approx(Q * N / r * (1 - r / P))
+
+
+def test_hybrid_beats_uncoded_cross_rack():
+    for row in VALID_ROWS:
+        K, P, Q, N, r = row
+        p = SchemeParams(K, P, Q, N, r)
+        t = cost_table(p)
+        assert t["hybrid"].cross < t["coded"].cross < t["uncoded"].cross
+
+
+def test_coded_total_minimal():
+    for row in VALID_ROWS:
+        K, P, Q, N, r = row
+        p = SchemeParams(K, P, Q, N, r)
+        t = cost_table(p)
+        assert t["coded"].total <= t["uncoded"].total + 1e-9
+        assert t["coded"].total <= t["hybrid"].total + 1e-9
+
+
+def test_corollary_bounds_hold():
+    p = SchemeParams(25, 5, 25, 600, 2)
+    b = corollary_bounds(p)
+    assert b["cross_ratio_exact"] >= b["cross_ratio_lower_bound"] - 1e-9
+    assert b["intra_ratio_exact"] <= b["intra_ratio_upper_bound"] + 1e-9
+
+
+def test_full_replication_zero_cross():
+    # r == P: every rack maps everything; no cross-rack traffic at all.
+    p = SchemeParams(8, 2, 8, 32, 2)
+    assert hybrid_cost(p).cross == 0
+    a = hybrid_assignment(p)
+    counts = count_plan(make_plan(a), p)
+    assert counts.cross == 0
+
+
+# ---------------------------------------------------------------------------
+# Bit-exact execution
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("row", [(9, 3, 18, 72, 2), (16, 4, 16, 240, 2),
+                                 (12, 4, 12, 396, 2), (8, 2, 16, 56, 2)])
+def test_execute_and_decode(row):
+    K, P, Q, N, r = row
+    p = SchemeParams(K, P, Q, N, r)
+    rng = np.random.default_rng(row[0])
+    vals = rng.integers(-10**6, 10**6, size=(N, Q))
+    for mk in [uncoded_assignment, coded_assignment, hybrid_assignment]:
+        a = mk(p)
+        know = execute_plan(a, vals)
+        check_reduce_ready(a, know, vals)
+
+
+def test_execute_r3():
+    p = SchemeParams(8, 4, 8, 48, 3)
+    rng = np.random.default_rng(7)
+    vals = rng.integers(-99, 99, size=(p.N, p.Q))
+    a = hybrid_assignment(p)
+    know = execute_plan(a, vals)
+    check_reduce_ready(a, know, vals)
+
+
+def test_scheme_param_validation_errors():
+    with pytest.raises(ValueError):
+        SchemeParams(9, 2, 9, 18)          # P does not divide K
+    p = SchemeParams(8, 2, 7, 16)
+    with pytest.raises(ValueError):
+        p.validate_uncoded()               # K does not divide Q
+    with pytest.raises(ValueError):
+        SchemeParams(8, 2, 8, 17).validate_uncoded()

@@ -1,0 +1,175 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch at a
+reduced same-family config runs one forward + one train step on CPU with
+correct output shapes and no NaNs; decode path matches the full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import lm
+from repro.models.frontends import make_train_batch
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import TrainConfig, init_train_state, make_train_step
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_shapes_no_nan(arch, key):
+    cfg = ARCHS[arch].reduced()
+    params = lm.init_params(key, cfg, jnp.float32)
+    batch = make_train_batch(key, cfg, batch=2, seq=24)
+    logits, _, aux = lm.forward(
+        params, cfg, batch["tokens"],
+        prefix_embeds=batch.get("prefix_embeds"),
+        enc_frames=batch.get("enc_frames"), dense_moe=True, mixer_chunk=8)
+    n_front = (cfg.n_frontend_tokens if cfg.frontend == "vision" else 0)
+    assert logits.shape == (2, batch["tokens"].shape[1] + n_front,
+                            cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step(arch, key):
+    cfg = ARCHS[arch].reduced()
+    tc = TrainConfig(n_microbatches=2, remat=True, dense_moe=True,
+                     mixer_chunk=8,
+                     opt=OptimizerConfig(lr=1e-3, warmup_steps=1,
+                                         decay_steps=10))
+    state = init_train_state(key, cfg, tc)
+    batch = make_train_batch(key, cfg, batch=4, seq=16)
+    step = make_train_step(cfg, tc, donate=False)
+    new_state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(new_state["step"]) == 1
+    # params actually changed
+    moved = any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(new_state["params"])))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ["qwen2-72b", "llama3-405b", "rwkv6-3b",
+                                  "hymba-1.5b", "whisper-large-v3",
+                                  "deepseek-v2-lite-16b", "grok-1-314b",
+                                  "granite-3-2b", "qwen2-1.5b",
+                                  "llava-next-34b"])
+def test_decode_matches_forward(arch, key):
+    cfg = ARCHS[arch].reduced()
+    params = lm.init_params(key, cfg, jnp.float32)
+    B, S = 2, 12
+    batch = make_train_batch(
+        key, cfg, batch=B,
+        seq=S + (cfg.n_frontend_tokens if cfg.frontend == "vision" else 0))
+    toks = batch["tokens"]
+    kw = {k: batch[k] for k in ("enc_frames", "prefix_embeds") if k in batch}
+    logits_full, _, _ = lm.forward(params, cfg, toks, dense_moe=True,
+                                   mixer_chunk=4, **kw)
+    n_pre = toks.shape[1] - 2
+    cache = lm.init_cache(cfg, B, logits_full.shape[1] + 4, jnp.float32)
+    pe = kw.get("prefix_embeds")
+    n_front = pe.shape[1] if pe is not None else 0
+    lg, cache = lm.prefill(params, cfg, toks[:, :n_pre], cache,
+                           prefix_embeds=pe,
+                           enc_frames=kw.get("enc_frames"),
+                           dense_moe=True, mixer_chunk=4)
+    errs = [float(jnp.abs(lg - logits_full[:, n_front + n_pre - 1]).max())]
+    pos = n_front + n_pre
+    lg, cache = lm.decode_step(params, cfg, toks[:, n_pre], cache,
+                               jnp.asarray(pos, jnp.int32), dense_moe=True)
+    errs.append(float(jnp.abs(lg - logits_full[:, n_front + n_pre]).max()))
+    assert max(errs) < 2e-3, errs
+
+
+def test_count_params_matches_published():
+    """Param counts within tolerance of the published model sizes."""
+    expected = {"qwen2-1.5b": 1.54e9, "qwen2-72b": 72.7e9,
+                "llama3-405b": 405.8e9, "granite-3-2b": 2.5e9,
+                "grok-1-314b": 314e9, "deepseek-v2-lite-16b": 15.7e9,
+                "rwkv6-3b": 3.1e9, "llava-next-34b": 34.4e9,
+                "hymba-1.5b": 1.5e9, "whisper-large-v3": 1.6e9}
+    for arch, want in expected.items():
+        got = lm.count_params(ARCHS[arch])
+        assert abs(got - want) / want < 0.08, (arch, got, want)
+
+
+def test_moe_active_params():
+    ds = ARCHS["deepseek-v2-lite-16b"]
+    assert lm.count_params(ds, active_only=True) < 0.25 * lm.count_params(ds)
+
+
+def test_sorted_moe_matches_dense_when_no_drop(key):
+    """Sort-based dispatch == dense one-hot when capacity is unconstrained."""
+    import dataclasses
+    from repro.models.moe import init_moe_params, moe_ffn_dense, \
+        moe_ffn_sorted
+    cfg = ARCHS["deepseek-v2-lite-16b"].reduced()
+    m = dataclasses.replace(cfg.moe, capacity_factor=100.0)
+    p = init_moe_params(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (16, cfg.d_model))
+    dense = moe_ffn_dense(p, m, x)
+    srt = moe_ffn_sorted(p, m, x, n_groups=2)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(srt),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_ring_cache_sliding_window(key):
+    """Hymba ring cache decode == stateless windowed attention."""
+    cfg = ARCHS["hymba-1.5b"].reduced()    # window 16
+    params = lm.init_params(key, cfg, jnp.float32)
+    B, S = 1, 40                            # S > 2*window forces wraparound
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    logits_full, _, _ = lm.forward(params, cfg, toks, dense_moe=True,
+                                   mixer_chunk=4)
+    cache = lm.init_cache(cfg, B, S + 4, jnp.float32)
+    lg, cache = lm.prefill(params, cfg, toks[:, :S - 4], cache,
+                           dense_moe=True, mixer_chunk=4)
+    errs = [float(jnp.abs(lg - logits_full[:, S - 5]).max())]
+    for t in range(4):
+        pos = S - 4 + t
+        lg, cache = lm.decode_step(params, cfg, toks[:, pos], cache,
+                                   jnp.asarray(pos, jnp.int32),
+                                   dense_moe=True)
+        if t < 3:
+            errs.append(float(jnp.abs(lg - logits_full[:, pos]).max()))
+    assert max(errs) < 2e-3, errs
+
+
+def test_remat_blocks_same_loss(key):
+    """2-level remat is numerically identical to plain remat."""
+    cfg = ARCHS["granite-3-2b"].reduced()   # 2 layers
+    import dataclasses as dc
+    cfg = dc.replace(cfg, n_layers=4)
+    params = lm.init_params(key, cfg, jnp.float32)
+    batch = make_train_batch(key, cfg, batch=2, seq=16)
+    l1, _ = lm.lm_loss(params, cfg, batch, remat=True, remat_blocks=1)
+    l2, _ = lm.lm_loss(params, cfg, batch, remat=True, remat_blocks=2)
+    g1 = jax.grad(lambda p: lm.lm_loss(p, cfg, batch, remat=True,
+                                       remat_blocks=1)[0])(params)
+    g2 = jax.grad(lambda p: lm.lm_loss(p, cfg, batch, remat=True,
+                                       remat_blocks=2)[0])(params)
+    assert float(jnp.abs(l1 - l2)) < 1e-6
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_unroll_scans_identical(key):
+    """unroll_scans (dry-run cost mode) must not change results."""
+    for arch in ("qwen2-1.5b", "rwkv6-3b", "hymba-1.5b"):
+        cfg = ARCHS[arch].reduced()
+        params = lm.init_params(key, cfg, jnp.float32)
+        batch = make_train_batch(key, cfg, batch=2, seq=16)
+        l1, _ = lm.lm_loss(params, cfg, batch, dense_moe=True, mixer_chunk=4)
+        l2, _ = lm.lm_loss(params, cfg, batch, dense_moe=True, mixer_chunk=4,
+                           unroll_scans=True)
+        assert float(jnp.abs(l1 - l2)) < 1e-5, arch

@@ -1,0 +1,30 @@
+"""Multi-device collective tests run in a subprocess so the main pytest
+process keeps its single-device view (jax locks device count at init)."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _run_driver(name: str, needle: str) -> None:
+    import os
+    full_env = dict(os.environ)
+    full_env.update({"PYTHONPATH": str(ROOT / "src")})
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "multidevice" / name)],
+        capture_output=True, text=True, env=full_env, timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert needle in proc.stdout
+
+
+@pytest.mark.slow
+def test_multidevice_shuffle_and_collectives():
+    _run_driver("driver_shuffle.py", "ALL MULTIDEVICE TESTS PASSED")
+
+
+@pytest.mark.slow
+def test_multidevice_trainer_paths():
+    _run_driver("driver_trainer.py", "ALL TRAINER MULTIDEVICE TESTS PASSED")

@@ -1,0 +1,163 @@
+"""Hypothesis property tests on the system's invariants.
+
+The paper's scheme is combinatorial — exactly what property testing is
+for: for RANDOM valid (K, P, Q, N, r) the structural constraints of
+Theorem IV.1 must hold, the closed forms must equal the enumerated
+schedules, and the coded encode/decode must round-trip for random shapes
+and coefficients.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.assignment import (check_hybrid_constraints,
+                                   coded_assignment, hybrid_assignment,
+                                   uncoded_assignment)
+from repro.core.costs import coded_cost, hybrid_cost, uncoded_cost
+from repro.core.params import SchemeParams
+from repro.core.shuffle_plan import count_plan, make_plan
+
+
+@st.composite
+def hybrid_params(draw):
+    P_ = draw(st.integers(2, 5))
+    Kr = draw(st.integers(1, 4))
+    K = P_ * Kr
+    r = draw(st.integers(2, min(P_, 3)))
+    # the enumerated schedule additionally needs r | M (each of the r
+    # replica servers sources M/r subfiles of a coded exchange)
+    M = r * draw(st.integers(1, 2))
+    N = math.comb(P_, r) * M * Kr
+    q_mult = draw(st.integers(1, 3))
+    return SchemeParams(K=K, P=P_, Q=K * q_mult, N=N, r=r)
+
+
+@settings(max_examples=25, deadline=None)
+@given(hybrid_params())
+def test_hybrid_structure_invariants(p):
+    """Theorem IV.1's four constraints hold for every valid hybrid
+    assignment AND for random permutations of it (the Sec. IV degree of
+    freedom)."""
+    a = hybrid_assignment(p)
+    check_hybrid_constraints(a)
+    rng = np.random.default_rng(abs(hash((p.K, p.P, p.N, p.r))) % 2 ** 31)
+    a2 = hybrid_assignment(p, perm=rng.permutation(p.N).tolist())
+    check_hybrid_constraints(a2)
+    # every subfile mapped at exactly r servers, one per rack in its subset
+    for servers in a2.servers_of_subfile:
+        assert len(servers) == p.r
+        assert len({p.rack_of(s) for s in servers}) == p.r
+
+
+@settings(max_examples=25, deadline=None)
+@given(hybrid_params())
+def test_hybrid_cost_formula_equals_schedule(p):
+    """Thm III.1 closed form == enumerated message schedule, exactly."""
+    a = hybrid_assignment(p)
+    counts = count_plan(make_plan(a), p)
+    c = hybrid_cost(p)
+    assert counts.cross == int(round(c.cross)), (counts.cross, c.cross)
+    assert counts.intra == int(round(c.intra)), (counts.intra, c.intra)
+
+
+@settings(max_examples=25, deadline=None)
+@given(hybrid_params())
+def test_uncoded_cost_formula_equals_schedule(p):
+    if p.N % p.K:
+        return
+    a = uncoded_assignment(p)
+    counts = count_plan(make_plan(a), p)
+    c = uncoded_cost(p)
+    assert counts.cross == int(round(c.cross))
+    assert counts.intra == int(round(c.intra))
+
+
+@settings(max_examples=20, deadline=None)
+@given(hybrid_params())
+def test_hybrid_beats_uncoded_cross_rack(p):
+    """The paper's headline claim: L_cro^Hyb <= L_cro^Unc always (with
+    equality only in degenerate corners)."""
+    hy = hybrid_cost(p)
+    un = uncoded_cost(p, check=False)
+    assert hy.cross <= un.cross + 1e-9
+    if p.r >= 2 and p.P > p.r:
+        assert hy.cross < un.cross
+
+
+@st.composite
+def coded_params(draw):
+    K = draw(st.integers(3, 6))
+    r = draw(st.integers(2, K - 1))
+    J = r * draw(st.integers(1, 2))     # schedule needs r | J
+    N = math.comb(K, r) * J
+    P_ = draw(st.sampled_from([d for d in range(2, K + 1) if K % d == 0]))
+    return SchemeParams(K=K, P=P_, Q=K, N=N, r=r)
+
+
+@settings(max_examples=20, deadline=None)
+@given(coded_params())
+def test_coded_total_cost_formula(p):
+    """Prop 2 total == (QN/r)(1 - r/K) == enumerated schedule total."""
+    c = coded_cost(p)
+    want = p.Q * p.N / p.r * (1 - p.r / p.K)
+    assert abs(c.total - want) < 1e-6
+    a = coded_assignment(p)
+    counts = count_plan(make_plan(a), p)
+    assert counts.intra + counts.cross == int(round(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 4), st.integers(1, 5), st.integers(1, 4),
+       st.data())
+def test_coded_combine_roundtrip(r, t_mult, d_mult, data):
+    """f(.) encode -> decode recovers any missing stream exactly, for any
+    nonzero coefficients (the property eq. (1) relies on)."""
+    from repro.kernels.coded_combine import ops
+    T, d = 32 * t_mult, 32 * d_mult
+    key = jax.random.PRNGKey(data.draw(st.integers(0, 2 ** 20)))
+    streams = [jax.random.normal(jax.random.fold_in(key, i), (T, d))
+               for i in range(r)]
+    coeffs = jnp.asarray(
+        data.draw(st.lists(st.floats(0.5, 4.0), min_size=r, max_size=r)),
+        jnp.float32)
+    f = ops.coded_encode(streams, coeffs)
+    miss = data.draw(st.integers(0, r - 1))
+    known = [s for i, s in enumerate(streams) if i != miss]
+    cs = jnp.concatenate([coeffs[miss:miss + 1],
+                          jnp.delete(coeffs, miss, assume_unique_indices=True)])
+    dec = ops.coded_decode(f, known, cs)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(streams[miss]),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 16))
+def test_pipeline_determinism(seed):
+    """batch_at(step) is a pure function — the checkpoint/restart
+    contract of the data pipeline."""
+    from repro.configs import ARCHS
+    from repro.data.pipeline import SyntheticPipeline
+    pipe = SyntheticPipeline(ARCHS["granite-3-2b"].reduced(), 2, 16,
+                             seed=seed)
+    a = pipe.batch_at(7)
+    b = pipe.batch_at(7)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6))
+def test_chunk_table_covers_pairs(P_):
+    """Every C(P,2) chunk is owned by exactly its 2 member pods (the r=2
+    replication structure the coded gradient sync relies on)."""
+    from repro.core.gradient_sync import chunk_index_table
+    table = chunk_index_table(P_)
+    n_chunks = P_ * (P_ - 1) // 2
+    counts = np.zeros(n_chunks, int)
+    for row in table:
+        for c in row:
+            counts[c] += 1
+    assert (counts == 2).all()

@@ -1,0 +1,171 @@
+"""Training stack: loss descent, grad-accum equivalence, coded_r2 vs dp
+exactness, straggler decode, optimizers, checkpoint/resume determinism."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.data.pipeline import SyntheticPipeline
+from repro.train.checkpoint import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+from repro.train.optimizer import (OptimizerConfig, adafactor_update,
+                                   init_opt_state, lr_at)
+from repro.train.trainer import (TrainConfig, accumulate_grads,
+                                 coded_grads_r2, init_train_state,
+                                 make_coded_batch_r2, make_train_step)
+
+CFG = ARCHS["qwen2-1.5b"].reduced()
+KEY = jax.random.PRNGKey(0)
+
+
+def _tc(**kw):
+    base = dict(n_microbatches=1, remat=False, dense_moe=True,
+                opt=OptimizerConfig(lr=1e-3, warmup_steps=2, decay_steps=50))
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+def test_loss_decreases():
+    tc = _tc(n_microbatches=2, remat=True)
+    state = init_train_state(KEY, CFG, tc)
+    pipe = SyntheticPipeline(CFG, global_batch=8, seq_len=32)
+    step = make_train_step(CFG, tc)
+    losses = []
+    for i in range(6):
+        state, m = step(state, pipe.batch_at(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(losses))
+
+
+def test_grad_accum_equals_full_batch():
+    """n_microbatches grad == single-shot grad (uniform loss masks)."""
+    pipe = SyntheticPipeline(CFG, global_batch=8, seq_len=16)
+    batch = pipe.batch_at(0)
+    params = init_train_state(KEY, CFG, _tc())["params"]
+    g1, l1 = accumulate_grads(params, CFG, _tc(), batch)
+    g4, l4 = accumulate_grads(params, CFG, _tc(n_microbatches=4), batch)
+    assert abs(float(l1) - float(l4)) < 1e-5
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-6)
+
+
+@pytest.fixture(scope="module")
+def pod_mesh():
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 host devices (run via tests/conftest device "
+                    "count)")
+    return jax.make_mesh((4, 2), ("pod", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_coded_r2_exact_and_straggler(pod_mesh):
+    """The paper's r=2 coded gradient sync: exact vs plain DP, and exact
+    under any single failed pod (the straggler-tolerance claim)."""
+    tc = _tc()
+    pipe = SyntheticPipeline(CFG, global_batch=12, seq_len=16)
+    batch = pipe.batch_at(0)
+    params = init_train_state(KEY, CFG, tc)["params"]
+    g_ref, l_ref = accumulate_grads(params, CFG, tc, batch)
+    coded = make_coded_batch_r2(batch, 4)
+    for failed in [None, 0, 1, 2, 3]:
+        g_c, l_c = coded_grads_r2(params, CFG, tc, coded, pod_mesh,
+                                  failed=failed)
+        err = max(float(jnp.abs(a - b).max()) for a, b in
+                  zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_c)))
+        assert err < 1e-5, (failed, err)
+    assert abs(float(l_ref) - float(l_c)) < 1e-5
+
+
+def test_adafactor_descends():
+    tc = _tc(opt=OptimizerConfig(kind="adafactor", lr=3e-3, warmup_steps=1,
+                                 decay_steps=50))
+    state = init_train_state(KEY, CFG, tc)
+    # factored state is much smaller than params
+    p_sz = sum(l.size for l in jax.tree.leaves(state["params"]))
+    o_sz = sum(l.size for l in jax.tree.leaves(state["opt"]))
+    assert o_sz < 0.1 * p_sz
+    pipe = SyntheticPipeline(CFG, global_batch=4, seq_len=32)
+    step = make_train_step(CFG, tc)
+    losses = []
+    for i in range(6):
+        state, m = step(state, pipe.batch_at(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_lr_schedule():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, decay_steps=100,
+                          min_lr_ratio=0.1)
+    assert float(lr_at(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(lr_at(cfg, jnp.asarray(10))) == pytest.approx(1.0, abs=1e-3)
+    assert float(lr_at(cfg, jnp.asarray(1000))) == pytest.approx(0.1)
+
+
+def test_checkpoint_resume_bitwise(tmp_path):
+    """Preemption contract: resume from step s == uninterrupted run."""
+    tc = _tc()
+    state = init_train_state(KEY, CFG, tc)
+    pipe = SyntheticPipeline(CFG, global_batch=4, seq_len=16)
+    step = make_train_step(CFG, tc, donate=False)
+    s = state
+    for i in range(5):
+        s, _ = step(s, pipe.batch_at(i))
+        if i == 1:
+            save_checkpoint(s, str(tmp_path), 2)
+    s2, st = restore_checkpoint(jax.eval_shape(lambda: state),
+                                str(tmp_path))
+    assert st == 2
+    for i in range(2, 5):
+        s2, _ = step(s2, pipe.batch_at(i))
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(s2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    state = {"x": jnp.arange(10), "step": jnp.zeros(())}
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(state, str(tmp_path), s, keep_last=3)
+    assert latest_step(str(tmp_path)) == 5
+    steps = sorted(int(n[5:]) for n in os.listdir(tmp_path)
+                   if n.startswith("step_"))
+    assert steps == [3, 4, 5]
+
+
+def test_preemption_restart_loop(tmp_path):
+    """fault.run_with_restarts drives a preempted loop to completion."""
+    from repro.train.fault import PreemptionSimulator, run_with_restarts
+    tc = _tc()
+    pipe = SyntheticPipeline(CFG, global_batch=4, seq_len=16)
+    step = make_train_step(CFG, tc, donate=False)
+    state0 = init_train_state(KEY, CFG, tc)
+    sim = PreemptionSimulator(preempt_at_step=3)
+
+    def loop(start):
+        if start == 0:
+            s = state0
+        else:
+            s, _ = restore_checkpoint(jax.eval_shape(lambda: state0),
+                                      str(tmp_path))
+        for i in range(start, 6):
+            sim.check(i) if sim.preempt_at_step == i and start == 0 else None
+            s, m = step(s, pipe.batch_at(i))
+            save_checkpoint(s, str(tmp_path), i)
+            yield i, m
+
+    done = list(run_with_restarts(loop, str(tmp_path)))
+    assert [i for i, _ in done][-1] == 5
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_elastic_plan():
+    from repro.train.fault import ElasticPlan
+    p = ElasticPlan(4)
+    assert p.n_chunks == 6
+    assert p.shrink().n_pods == 3 and p.grow().n_pods == 5
+    with pytest.raises(ValueError):
+        ElasticPlan(2).shrink()
