@@ -1,0 +1,15 @@
+# Test entry points.  `make test` is the fast default profile (skips the
+# multidevice subprocess drivers, ~5 min of wall clock); `make test-all`
+# is the full tier-1 suite in one command.
+PYTEST ?= python -m pytest
+
+.PHONY: test test-all bench
+
+test:
+	$(PYTEST) -q -m "not slow"
+
+test-all:
+	$(PYTEST) -q
+
+bench:
+	PYTHONPATH=src python benchmarks/shuffle_bench.py

@@ -1,6 +1,9 @@
 """Executable-shuffle benchmark: runs the REAL distributed two-stage hybrid
 shuffle (shard_map all_to_all over a ('rack','server') host-device mesh)
-against the dense oracle, and times the coded-combine kernel paths.
+against the dense oracle, times the coded-combine kernel paths, sweeps the
+map-replication factor r (the paper's computation/communication tradeoff
+curve, emitting per-r cross/intra traffic), and times general-r plan
+compilation (cold vs LRU-cached).
 
 Byte accounting comes from the schedule enumerator (== closed forms,
 asserted); wall-times here are CPU host-device times (structural, not TPU
@@ -11,6 +14,11 @@ import os
 import subprocess
 import sys
 import time
+
+# r sweep config: P=4 racks x Kr=2; N=2016 satisfies C(4,r) | NP/K and
+# r | M for r in {1, 2, 3, 4} — one config, the whole tradeoff curve.
+SWEEP = dict(K=8, P=4, Q=16, N=2016)
+PAYLOAD_BYTES = 4                    # fp32 <key, value> payload unit
 
 
 def _kernel_times() -> list:
@@ -45,8 +53,33 @@ def _kernel_times() -> list:
     return rows
 
 
+def _r_sweep() -> list:
+    """Per-r shuffle traffic (closed forms == enumerated schedule, asserted
+    in tests) and general-r plan-compilation time, cold vs cached."""
+    from repro.core.coded_collectives import compile_hybrid_plan
+    from repro.core.costs import hybrid_cost
+    from repro.core.params import SchemeParams
+
+    rows = []
+    for r in (1, 2, 3, 4):
+        p = SchemeParams(r=r, **SWEEP)
+        compile_hybrid_plan.cache_clear()
+        t0 = time.perf_counter()
+        compile_hybrid_plan(p)
+        cold_us = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        compile_hybrid_plan(p)
+        warm_us = (time.perf_counter() - t0) * 1e6
+        c = hybrid_cost(p)
+        rows.append((f"compile_plan_r{r}_N{p.N}", cold_us,
+                     f"cached={warm_us:.0f}us "
+                     f"cross={c.cross * PAYLOAD_BYTES:.0f}B "
+                     f"intra={c.intra * PAYLOAD_BYTES:.0f}B"))
+    return rows
+
+
 def run(verbose: bool = True) -> list:
-    rows = _kernel_times()
+    rows = _kernel_times() + _r_sweep()
     # distributed shuffle in a subprocess (needs 8 host devices)
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     t0 = time.perf_counter()
@@ -56,7 +89,7 @@ def run(verbose: bool = True) -> list:
         capture_output=True, text=True, timeout=900,
         env={**os.environ, "PYTHONPATH": os.path.join(root, "src")})
     ok = proc.returncode == 0 and "ALL MULTIDEVICE" in proc.stdout
-    rows.append(("distributed_hybrid_shuffle_8dev",
+    rows.append(("distributed_hybrid_shuffle_8dev_r123",
                  (time.perf_counter() - t0) * 1e6,
                  "bit-exact" if ok else "FAILED"))
     if verbose:

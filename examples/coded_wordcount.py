@@ -1,6 +1,8 @@
 """Coded WordCount: the paper's scheme running DISTRIBUTED on a 12-device
 host mesh (3 racks x 4 servers), with the real shard_map all_to_all
-two-stage shuffle, validated bit-exactly against the dense oracle.
+two-stage shuffle, validated bit-exactly against the dense oracle — swept
+over the map-replication factor r in {1, 2, 3}, the paper's
+computation/communication tradeoff axis.
 
     PYTHONPATH=src python examples/coded_wordcount.py
 """
@@ -13,15 +15,16 @@ import jax                                                    # noqa: E402
 import jax.numpy as jnp                                       # noqa: E402
 import numpy as np                                            # noqa: E402
 
+from repro.core.costs import uncoded_cost                     # noqa: E402
 from repro.core.params import SchemeParams                    # noqa: E402
+from repro.distributed.meshes import make_mesh                # noqa: E402
 from repro.mapreduce.engine import (run_job,                  # noqa: E402
                                     run_job_distributed)
 from repro.mapreduce.jobs import histogram_job                # noqa: E402
 
-# 3 racks x 4 servers; map replication r=2 across racks
+# 3 racks x 4 servers; N=96 admits every replication factor r in {1, 2, 3}
 p = SchemeParams(K=12, P=3, Q=24, N=96, r=2)
-mesh = jax.make_mesh((p.P, p.Kr), ("rack", "server"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((p.P, p.Kr), ("rack", "server"))
 print(f"mesh: {p.P} racks x {p.Kr} servers = {p.K} devices")
 
 key = jax.random.PRNGKey(7)
@@ -29,20 +32,21 @@ subfiles = np.asarray(
     jax.random.randint(key, (p.N, 1024), 0, 1 << 16, dtype=jnp.int32))
 job = histogram_job()
 
-dist = run_job_distributed(job, subfiles, p, mesh)
 oracle = run_job(job, jnp.asarray(subfiles), p, scheme="hybrid",
                  count_messages=True)
-np.testing.assert_array_equal(np.asarray(dist.outputs),
-                              np.asarray(oracle.outputs))
-print("distributed two-stage shuffle == dense oracle (bit-exact)")
-print(f"token count conservation: {float(dist.outputs.sum()):.0f} == "
-      f"{p.N * 1024}")
-assert int(dist.outputs.sum()) == p.N * 1024
-
-print(f"\nshuffle cost (enumerated schedule == closed form):")
-print(f"  cross-rack: {oracle.cross_cost:10.0f} <key,value> transfers")
-print(f"  intra-rack: {oracle.intra_cost:10.0f}")
-from repro.core.costs import uncoded_cost                     # noqa: E402
 unc = uncoded_cost(p)
-print(f"  (uncoded cross-rack would be {unc.cross:.0f} — "
-      f"{unc.cross / oracle.cross_cost:.2f}x more root-switch traffic)")
+
+print(f"\n{'r':>3} {'cross <k,v>':>12} {'intra <k,v>':>12} "
+      f"{'vs uncoded cross':>17}")
+for r in (1, 2, 3):
+    dist = run_job_distributed(job, subfiles, p, mesh, r=r)
+    np.testing.assert_array_equal(np.asarray(dist.outputs),
+                                  np.asarray(oracle.outputs))
+    assert int(dist.outputs.sum()) == p.N * 1024      # token conservation
+    ratio = (unc.cross / dist.cross_cost if dist.cross_cost
+             else float("inf"))
+    print(f"{r:>3} {dist.cross_cost:>12.0f} {dist.intra_cost:>12.0f} "
+          f"{ratio:>16.2f}x")
+print("\nevery r: distributed two-stage shuffle == dense oracle (bit-exact)")
+print(f"r=2 enumerated schedule == closed form: "
+      f"cross {oracle.cross_cost:.0f}, intra {oracle.intra_cost:.0f}")

@@ -30,6 +30,7 @@ import numpy as np                                            # noqa: E402
 
 from repro.configs import get_arch                            # noqa: E402
 from repro.core.gradient_sync import grad_sync_cost           # noqa: E402
+from repro.distributed.meshes import make_mesh                # noqa: E402
 from repro.data.pipeline import SyntheticPipeline             # noqa: E402
 from repro.models import lm                                   # noqa: E402
 from repro.train.optimizer import OptimizerConfig             # noqa: E402
@@ -62,8 +63,7 @@ def main() -> None:
           f"seq {args.seq}")
 
     P_ = 4
-    mesh = jax.make_mesh((P_,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((P_,), ("pod",))
     tc = TrainConfig(remat=False, dp_mode="coded_r2",
                      opt=OptimizerConfig(lr=3e-3,
                                          warmup_steps=args.steps // 10,

@@ -2,25 +2,42 @@
 
 Two executable forms:
 
-1. :func:`hybrid_shuffle_r2` — a shard_map program over a ('rack', 'server')
+1. :func:`hybrid_shuffle` — a shard_map program over a ('rack', 'server')
    mesh performing the paper's two-stage shuffle with `jax.lax.all_to_all`:
    a cross-rack stage over the 'rack' axis, then an intra-rack stage over the
-   'server' axis.  Map replication r = 2 (the case the paper optimizes in
-   Sec. IV).  Each of the r replicas sources 1/r of every needed block, which
-   achieves the receive-side optimum  QN(1 - r/P)  per rack on point-to-point
-   links.
+   'server' axis.  Works for ANY map-replication factor r in [1, P] (the
+   paper's Sec. III construction; Sec. IV optimizes the r = 2 instance,
+   still available as the :func:`hybrid_shuffle_r2` alias).  Each of the r
+   replicas of a block sources 1/r of it, which achieves the receive-side
+   optimum  QN/r * (1 - r/P) * r = QN(1 - r/P)  pair receptions per stage-1
+   exchange on point-to-point links.
 
-   Fidelity note (see DESIGN.md): the paper counts a multicast packet ONCE at
-   the root switch, giving the stronger (QN/r)(1 - r/P) *switch-traversal*
-   cost.  TPU ICI/DCN expose no multicast primitive, so the executable path
-   realizes the receive-side optimum while the switch-traversal metric is
-   reproduced bit-exactly by the schedule simulator
-   (:mod:`repro.core.shuffle_plan`).  For SUM-reducible shuffles (gradient
-   aggregation) the linear-combining gain *is* natively realized on the wire
-   by reduce-scatter — see :mod:`repro.core.gradient_sync`.
+   Plan layout (general r): layer j's NP/K subfiles are grouped by the
+   C(P, r) rack r-subsets, M = (NP/K)/C(P, r) subfiles per subset, in
+   lexicographic subset order — the canonical *layer table*.  Rack i maps
+   the C(P-1, r-1) subsets containing i.  For a destination rack z outside
+   a subset T ∋ i, sender i contributes the share of T's M subfiles at slice
+   [pos*M/r, (pos+1)*M/r) where pos = T.index(i): the r senders' shares are
+   disjoint and cover T's block, so every layer-table row is received exactly
+   once and `at[...].add` == `at[...].set`.
+
+   Fidelity note (see docs/shuffle.md): the paper counts a multicast packet
+   ONCE at the root switch, giving the stronger (QN/r)(1 - r/P)
+   *switch-traversal* cost.  TPU ICI/DCN expose no multicast primitive, so
+   the executable path realizes the receive-side optimum while the
+   switch-traversal metric is reproduced bit-exactly by the schedule
+   simulator (:mod:`repro.core.shuffle_plan`).  For SUM-reducible shuffles
+   (gradient aggregation) the linear-combining gain *is* natively realized on
+   the wire by reduce-scatter — see :mod:`repro.core.gradient_sync`.
 
 2. :func:`plan_shuffle_reference` — a dense single-device oracle for
    validating the distributed outputs bit-exactly.
+
+Plan compilation (:func:`compile_hybrid_plan`) builds all index tables with
+vectorized NumPy construction — no per-element Python loops or
+``list.index`` scans — and is memoized with an LRU cache keyed on the
+(hashable, frozen) :class:`SchemeParams`, so recompiling a seen config is
+O(1).  Cached plans are shared: treat their arrays as immutable.
 
 Data model: intermediate values form V[N, Q, d] (subfile, key, payload);
 reducer of key q needs q's value on ALL N subfiles.
@@ -28,6 +45,8 @@ reducer of key q needs q's value on ALL N subfiles.
 from __future__ import annotations
 
 import dataclasses
+import functools
+from math import comb
 
 import numpy as np
 
@@ -37,14 +56,16 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from .assignment import hybrid_assignment, rack_subsets
 from .params import SchemeParams
+from ..distributed.meshes import shard_map
 
 
 # ---------------------------------------------------------------------------
-# Plan compilation: static index tables for the r = 2 hybrid shuffle
+# Plan compilation: static index tables for the general-r hybrid shuffle
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass(frozen=True)
-class HybridShufflePlanR2:
+@dataclasses.dataclass(frozen=True, eq=False)
+class HybridShufflePlan:
+    """Static index tables driving :func:`hybrid_shuffle` for any r."""
     params: SchemeParams
     # global subfile ids mapped at device (rack i, layer j): [P, Kr, n_loc]
     local_subfiles: np.ndarray
@@ -52,85 +73,109 @@ class HybridShufflePlanR2:
     cross_send_pos: np.ndarray
     # canonical layer table (global subfile id per row): [P, Kr, n_layer]
     layer_subfiles: np.ndarray
-    # positions in the layer table where rack a's block lands: [P, Kr, P, n_send]
+    # positions in the layer table where rack z's block lands: [P, Kr, P, n_send]
     cross_recv_pos: np.ndarray
     # layer-table rows mapped locally: [P, Kr, n_layer] bool
     local_mask: np.ndarray
     n_send: int
+    # layer-table position of each locally mapped subfile: [P, Kr, n_loc]
+    local_pos: np.ndarray
 
 
-def compile_hybrid_plan_r2(p: SchemeParams) -> HybridShufflePlanR2:
+@functools.lru_cache(maxsize=128)
+def compile_hybrid_plan(p: SchemeParams) -> HybridShufflePlan:
+    """Compile the static shuffle plan for any r in [1, P] with r | M.
+
+    All tables are built by vectorized index arithmetic on the structural
+    (layer, subset, w) coordinates; cost is O(N + P^2 * C(P, r)).
+    """
     p.validate_hybrid()
-    if p.r != 2:
-        raise ValueError("distributed executable path supports r = 2 "
-                         "(the case the paper's Sec. IV optimizes)")
-    a = hybrid_assignment(p)
-    subsets = rack_subsets(p.P, p.r)
-    slot_of = a.meta["slot_of_subfile"]
-
-    n_loc = 2 * p.N // p.K
-    n_layer = p.subfiles_per_layer
+    r = p.r
     M = p.M
-    if M % 2 != 0:
-        raise ValueError("executable r=2 plan needs 2 | M")
-    half = M // 2
-    n_send = (p.P - 2) * half if p.P >= 3 else 0
+    if M % r != 0:
+        raise ValueError(f"executable hybrid plan needs r | M; M={M} r={r}")
+    a = hybrid_assignment(p)
+    subsets = np.asarray(rack_subsets(p.P, r), dtype=np.int64)   # [n_sub, r]
+    n_sub = subsets.shape[0]
+    slot = np.asarray(a.meta["slot_of_subfile"], dtype=np.int64)  # [N, 3]
 
-    files = {}
-    for subfile, (layer, t_idx, w) in enumerate(slot_of):
-        files.setdefault((layer, t_idx), [None] * M)[w] = subfile
+    share = M // r                         # rows each replica sources
+    n_layer = p.subfiles_per_layer
+    c_loc = comb(p.P - 1, r - 1)           # subsets containing a given rack
+    c_pair = comb(p.P - 2, r - 1) if p.P >= 2 else 0   # i in T, z not in T
+    n_loc = c_loc * M
+    n_send = c_pair * share
 
-    layer_table = np.zeros((p.P, p.Kr, n_layer), dtype=np.int64)
-    local_subfiles = np.zeros((p.P, p.Kr, n_loc), dtype=np.int64)
-    local_mask = np.zeros((p.P, p.Kr, n_layer), dtype=bool)
+    # subfile id of each structural slot: S[layer, subset, w]
+    S = np.empty((p.Kr, n_sub, M), dtype=np.int64)
+    S[slot[:, 0], slot[:, 1], slot[:, 2]] = np.arange(p.N)
+
+    # rack-membership tables over subsets
+    t_ids = np.repeat(np.arange(n_sub), r)
+    member = np.zeros((p.P, n_sub), dtype=bool)
+    member[subsets.ravel(), t_ids] = True              # member[i, t]: i in T_t
+    pos_in = np.zeros((p.P, n_sub), dtype=np.int64)
+    pos_in[subsets.ravel(), t_ids] = np.tile(np.arange(r), n_sub)
+
+    # subsets containing each rack (ascending) and each subset's rank therein
+    ts = np.nonzero(member)[1].reshape(p.P, c_loc)     # [P, c_loc]
+    rank = np.zeros((p.P, n_sub), dtype=np.int64)
+    rank[np.arange(p.P)[:, None], ts] = np.arange(c_loc)[None, :]
+
+    # layer table is rack-independent; local tables are layer-independent:
+    # store broadcast views to keep the [P, Kr, ...] interface without copies
+    layer_table = np.broadcast_to(S.reshape(1, p.Kr, n_layer),
+                                  (p.P, p.Kr, n_layer))
+    local_subfiles = np.ascontiguousarray(
+        S[:, ts, :].transpose(1, 0, 2, 3).reshape(p.P, p.Kr, n_loc))
+    local_mask = np.broadcast_to(
+        np.repeat(member, M, axis=1)[:, None, :], (p.P, p.Kr, n_layer))
+    local_pos = np.broadcast_to(
+        (ts[:, :, None] * M + np.arange(M)).reshape(p.P, 1, n_loc),
+        (p.P, p.Kr, n_loc))
+
     cross_send_pos = np.zeros((p.P, p.Kr, p.P, n_send), dtype=np.int64)
     cross_recv_pos = np.zeros((p.P, p.Kr, p.P, n_send), dtype=np.int64)
-
-    for j in range(p.Kr):
-        flat = []
-        for t_idx in range(len(subsets)):
-            flat.extend(files[(j, t_idx)])
+    if n_send:
+        off = np.arange(share)
         for i in range(p.P):
-            layer_table[i, j] = flat
-            loc = [s for t_idx, T in enumerate(subsets) if i in T
-                   for s in files[(j, t_idx)]]
-            local_subfiles[i, j] = loc
-            for t_idx, T in enumerate(subsets):
-                if i in T:
-                    local_mask[i, j, t_idx * M:(t_idx + 1) * M] = True
-
-    for i in range(p.P):
-        for j in range(p.Kr):
-            loc_list = local_subfiles[i, j].tolist()
-            table = layer_table[i, j].tolist()
             for z in range(p.P):
-                if z == i or n_send == 0:
+                if z == i:
                     continue
-                send, recv_from_z = [], []
-                for t_idx, T in enumerate(subsets):
-                    subs = files[(j, t_idx)]
-                    if i in T and z not in T:
-                        pos = T.index(i)
-                        send.extend(loc_list.index(s)
-                                    for s in subs[pos * half:(pos + 1) * half])
-                    if z in T and i not in T:
-                        pos = T.index(z)
-                        recv_from_z.extend(
-                            table.index(s)
-                            for s in subs[pos * half:(pos + 1) * half])
-                cross_send_pos[i, j, z, :] = send
-                cross_recv_pos[i, j, z, :] = recv_from_z
-    return HybridShufflePlanR2(p, local_subfiles, cross_send_pos, layer_table,
-                               cross_recv_pos, local_mask, n_send)
+                # i's share of every subset it maps that z does not
+                t_snd = np.nonzero(member[i] & ~member[z])[0]    # [c_pair]
+                cross_send_pos[i, :, z, :] = (
+                    rank[i, t_snd, None] * M
+                    + pos_in[i, t_snd, None] * share + off).reshape(-1)
+                # where z's share of the subsets i lacks lands in the table
+                t_rcv = np.nonzero(member[z] & ~member[i])[0]
+                cross_recv_pos[i, :, z, :] = (
+                    t_rcv[:, None] * M
+                    + pos_in[z, t_rcv, None] * share + off).reshape(-1)
+    return HybridShufflePlan(p, local_subfiles, cross_send_pos, layer_table,
+                             cross_recv_pos, local_mask, n_send, local_pos)
+
+
+def compile_hybrid_plan_r2(p: SchemeParams) -> HybridShufflePlan:
+    """Back-compat alias: the r = 2 instance of :func:`compile_hybrid_plan`
+    (rejects other r, as the pre-general-r API did)."""
+    if p.r != 2:
+        raise ValueError("compile_hybrid_plan_r2 is the r = 2 special case; "
+                         "use compile_hybrid_plan for general r")
+    return compile_hybrid_plan(p)
+
+
+# Back-compat name for the plan type (the r = 2 plan is just an instance).
+HybridShufflePlanR2 = HybridShufflePlan
 
 
 # ---------------------------------------------------------------------------
 # Distributed execution (shard_map over ('rack', 'server'))
 # ---------------------------------------------------------------------------
 
-def hybrid_shuffle_r2(values_local: jax.Array, plan: HybridShufflePlanR2,
-                      mesh: Mesh) -> jax.Array:
-    """Two-stage hybrid shuffle.
+def hybrid_shuffle(values_local: jax.Array, plan: HybridShufflePlan,
+                   mesh: Mesh) -> jax.Array:
+    """Two-stage hybrid shuffle, general r.
 
     values_local: [K, n_loc, Q, d], axis 0 sharded over ('rack','server');
       row (i*Kr + j) = device (i, j)'s mapped subfile values, ordered as
@@ -146,10 +191,7 @@ def hybrid_shuffle_r2(values_local: jax.Array, plan: HybridShufflePlanR2,
 
     send_pos = jnp.asarray(plan.cross_send_pos)      # [P, Kr, P, n_send]
     recv_pos = jnp.asarray(plan.cross_recv_pos)
-    local_pos = jnp.asarray(
-        np.array([[[plan.layer_subfiles[i, j].tolist().index(s)
-                    for s in plan.local_subfiles[i, j]]
-                   for j in range(p.Kr)] for i in range(p.P)]))  # [P,Kr,n_loc]
+    local_pos = jnp.asarray(plan.local_pos)          # [P, Kr, n_loc]
 
     def device_fn(vals):                             # [1, n_loc, Q, d]
         vals = vals[0]
@@ -175,7 +217,8 @@ def hybrid_shuffle_r2(values_local: jax.Array, plan: HybridShufflePlanR2,
             flat_dst = my_recv.reshape(-1)                   # [P*n_send]
             flat_src = recvd.reshape(p.P * n_send, q_rack, d)
             valid = (jnp.repeat(jnp.arange(p.P), n_send) != i)
-            # target rows start at zero and are hit at most once => add==set
+            # the r senders' shares are disjoint slices of each subset block,
+            # so target rows are hit at most once => add == set
             table = table.at[flat_dst].add(
                 jnp.where(valid[:, None, None], flat_src, 0))
 
@@ -186,42 +229,39 @@ def hybrid_shuffle_r2(values_local: jax.Array, plan: HybridShufflePlanR2,
         out = gathered.reshape(p.Kr * n_layer, q_srv, d)
         return out[None]
 
-    fn = jax.shard_map(device_fn, mesh=mesh,
-                       in_specs=(P(("rack", "server")),),
-                       out_specs=P(("rack", "server")))
+    fn = shard_map(device_fn, mesh=mesh,
+                   in_specs=(P(("rack", "server")),),
+                   out_specs=P(("rack", "server")))
     return fn(values_local)
 
 
-def reduce_ready_order(plan: HybridShufflePlanR2) -> np.ndarray:
-    """Global subfile id of each output row of :func:`hybrid_shuffle_r2`,
+def hybrid_shuffle_r2(values_local: jax.Array, plan: HybridShufflePlan,
+                      mesh: Mesh) -> jax.Array:
+    """Back-compat alias for :func:`hybrid_shuffle` (r = 2 plans and any
+    other compiled plan run through the identical program)."""
+    return hybrid_shuffle(values_local, plan, mesh)
+
+
+def reduce_ready_order(plan: HybridShufflePlan) -> np.ndarray:
+    """Global subfile id of each output row of :func:`hybrid_shuffle`,
     per device: [P, Kr, N] (layer-major, canonical layer-table order)."""
     p = plan.params
-    out = np.zeros((p.P, p.Kr, p.N), dtype=np.int64)
-    for i in range(p.P):
-        for j in range(p.Kr):
-            rows = []
-            for jp in range(p.Kr):
-                rows.extend(plan.layer_subfiles[i, jp].tolist())
-            out[i, j] = rows
-    return out
+    flat = np.asarray(plan.layer_subfiles).reshape(p.P, p.N)
+    return np.broadcast_to(flat[:, None, :], (p.P, p.Kr, p.N))
 
 
 def pack_local_values(values: np.ndarray,
-                      plan: HybridShufflePlanR2) -> np.ndarray:
+                      plan: HybridShufflePlan) -> np.ndarray:
     """Distribute dense V[N, Q, d] into the per-device layout expected by
-    :func:`hybrid_shuffle_r2`: [K, n_loc, Q, d]."""
+    :func:`hybrid_shuffle`: [K, n_loc, Q, d]."""
     p = plan.params
-    out = np.stack([
-        values[plan.local_subfiles[i, j]]
-        for i in range(p.P) for j in range(p.Kr)
-    ])
-    return out
+    return values[plan.local_subfiles.reshape(p.K, -1)]
 
 
 def plan_shuffle_reference(values: np.ndarray, p: SchemeParams) -> np.ndarray:
     """Oracle: [K, N, q_srv, d] that a correct shuffle must deliver, in the
     row order of :func:`reduce_ready_order`."""
-    plan = compile_hybrid_plan_r2(p)
+    plan = compile_hybrid_plan(p)
     order = reduce_ready_order(plan)
     q_srv = p.Q // p.K
     out = np.zeros((p.K, p.N, q_srv, values.shape[-1]), values.dtype)

@@ -12,21 +12,20 @@ device state (the dry-run must set XLA_FLAGS before any jax init).
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from ..distributed.meshes import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_coded_mesh(pods: int = 4, data: int = 8, model: int = 16) -> Mesh:
     """Mesh for the r < P coded gradient-sync dry-runs (P >= 3 pods)."""
-    return jax.make_mesh((pods, data, model), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    return make_mesh((pods, data, model), ("pod", "data", "model"))
 
 
 def pod_size(mesh: Mesh) -> int:

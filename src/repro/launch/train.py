@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from ..configs import ARCHS, get_arch
 from ..data.pipeline import SyntheticPipeline
+from ..distributed.meshes import make_mesh
 from ..train.checkpoint import latest_step, restore_checkpoint, \
     save_checkpoint
 from ..train.fault import PreemptionSimulator
@@ -63,8 +64,7 @@ def main() -> None:
                 f"coded_r2 needs >= {args.pods} devices; launch with "
                 f"XLA_FLAGS=--xla_force_host_platform_device_count="
                 f"{args.pods}")
-        mesh = jax.make_mesh((args.pods,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((args.pods,), ("pod",))
 
     pipe = SyntheticPipeline(cfg, args.batch, args.seq, seed=args.seed)
     step_fn = make_train_step(cfg, tc, mesh=mesh, donate=False)

@@ -24,9 +24,9 @@ from jax.sharding import Mesh
 
 from ..core.assignment import (coded_assignment, hybrid_assignment,
                                uncoded_assignment)
-from ..core.coded_collectives import (HybridShufflePlanR2,
-                                      compile_hybrid_plan_r2,
-                                      hybrid_shuffle_r2, pack_local_values,
+from ..core.coded_collectives import (HybridShufflePlan,
+                                      compile_hybrid_plan,
+                                      hybrid_shuffle, pack_local_values,
                                       reduce_ready_order)
 from ..core.costs import coded_cost, hybrid_cost, uncoded_cost
 from ..core.params import SchemeParams
@@ -83,24 +83,28 @@ def run_job(job: MapReduceJob, subfiles: jax.Array, params: SchemeParams,
 
 
 def run_job_distributed(job: MapReduceJob, subfiles: np.ndarray,
-                        params: SchemeParams, mesh: Mesh) -> JobResult:
-    """Multi-device execution: real all_to_all shuffle (hybrid scheme, r=2).
+                        params: SchemeParams, mesh: Mesh,
+                        r: int | None = None) -> JobResult:
+    """Multi-device execution: real all_to_all shuffle (hybrid scheme,
+    general map-replication r in [1, P]).
 
     ``mesh`` must have axes ('rack', 'server') with sizes (P, Kr).  Each
-    device maps only ITS assigned subfiles (with r=2 replication), shuffles
-    via :func:`hybrid_shuffle_r2`, and reduces its own keys.  Returns outputs
-    identical to :func:`run_job` (asserted in tests).
+    device maps only ITS assigned subfiles (with r-fold replication across
+    racks), shuffles via :func:`hybrid_shuffle`, and reduces its own keys.
+    ``r`` overrides ``params.r`` (the knob for sweeping the paper's
+    computation/communication tradeoff curve).  Returns outputs identical
+    to :func:`run_job` (asserted in tests).
     """
-    p = params
-    plan = compile_hybrid_plan_r2(p)
+    p = params if r is None or r == params.r else \
+        dataclasses.replace(params, r=r)
+    plan = compile_hybrid_plan(p)
     V = np.asarray(map_phase(job, jnp.asarray(subfiles), p.Q))   # [N, Q, d]
     local = pack_local_values(V, plan)                  # [K, n_loc, Q, d]
 
-    shuffled = hybrid_shuffle_r2(jnp.asarray(local), plan, mesh)
+    shuffled = hybrid_shuffle(jnp.asarray(local), plan, mesh)
     # [K, N, q_srv, d]; per-device rows ordered by reduce_ready_order
     out = jax.vmap(jax.vmap(job.reduce_fn, in_axes=1))(shuffled)
     # out: [K, q_srv, d_out] -> assemble [Q, d_out] in key order
-    q_srv = p.Q // p.K
-    final = jnp.concatenate([out[s] for s in range(p.K)], axis=0)
+    final = out.reshape(p.Q, -1)
     c = hybrid_cost(p)
     return JobResult(final, c.intra, c.cross, "hybrid")

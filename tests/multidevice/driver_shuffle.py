@@ -18,32 +18,45 @@ from jax.sharding import PartitionSpec as P                    # noqa: E402
 
 from repro.core.params import SchemeParams                     # noqa: E402
 from repro.core.coded_collectives import (                     # noqa: E402
-    compile_hybrid_plan_r2, hybrid_shuffle_r2, pack_local_values,
-    plan_shuffle_reference)
+    compile_hybrid_plan, compile_hybrid_plan_r2, hybrid_shuffle,
+    hybrid_shuffle_r2, pack_local_values, plan_shuffle_reference)
 from repro.core.gradient_sync import (                         # noqa: E402
     chunk_index_table, coded_reduce_scatter_r2, hierarchical_allreduce,
     uncoded_reduce_scatter)
+from repro.distributed.meshes import make_mesh, shard_map      # noqa: E402
 from repro.mapreduce.engine import run_job, run_job_distributed  # noqa: E402
 from repro.mapreduce.jobs import histogram_job, groupby_mean_job  # noqa: E402
 
 
 def test_distributed_hybrid_shuffle():
-    # P=4 racks x Kr=2 servers = 8 devices; N with C(4,2)=6 | NP/K and 2|M
+    # P=4 racks x Kr=2 servers = 8 devices; N=48 satisfies C(4,r) | NP/K
+    # and r | M for every r in {1, 2, 3} — the paper's tradeoff sweep
+    mesh = make_mesh((4, 2), ("rack", "server"))
+    for r in (1, 2, 3):
+        p = SchemeParams(K=8, P=4, Q=16, N=48, r=r)
+        plan = compile_hybrid_plan(p)
+        rng = np.random.default_rng(r)
+        V = rng.integers(-100, 100, size=(p.N, p.Q, 3)).astype(np.float32)
+        local = pack_local_values(V, plan)
+        out = np.asarray(hybrid_shuffle(jnp.asarray(local), plan, mesh))
+        ref = plan_shuffle_reference(V, p)
+        np.testing.assert_array_equal(out, ref)
+        print(f"distributed hybrid shuffle r={r}: OK (bit-exact vs oracle)")
+
+    # r=2 back-compat aliases: identical program, identical output
     p = SchemeParams(K=8, P=4, Q=16, N=48, r=2)
-    mesh = jax.make_mesh((4, 2), ("rack", "server"))
     plan = compile_hybrid_plan_r2(p)
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(2)
     V = rng.integers(-100, 100, size=(p.N, p.Q, 3)).astype(np.float32)
-    local = pack_local_values(V, plan)
-    out = np.asarray(hybrid_shuffle_r2(jnp.asarray(local), plan, mesh))
-    ref = plan_shuffle_reference(V, p)
-    np.testing.assert_array_equal(out, ref)
-    print("distributed hybrid shuffle: OK (bit-exact vs oracle)")
+    out = np.asarray(hybrid_shuffle_r2(
+        jnp.asarray(pack_local_values(V, plan)), plan, mesh))
+    np.testing.assert_array_equal(out, plan_shuffle_reference(V, p))
+    print("hybrid_shuffle_r2 alias: OK (unchanged behavior)")
 
 
 def test_distributed_mapreduce_jobs():
     p = SchemeParams(K=8, P=4, Q=16, N=48, r=2)
-    mesh = jax.make_mesh((4, 2), ("rack", "server"))
+    mesh = make_mesh((4, 2), ("rack", "server"))
     rng = np.random.default_rng(1)
 
     job = histogram_job()
@@ -56,6 +69,14 @@ def test_distributed_mapreduce_jobs():
     assert got.cross_cost == ref.cross_cost
     print("distributed histogram job: OK")
 
+    # the r knob: same job, r=3 replication — same bit-exact outputs,
+    # lower cross-rack cost
+    got3 = run_job_distributed(job, np.asarray(subfiles), p, mesh, r=3)
+    np.testing.assert_allclose(np.asarray(got3.outputs),
+                               np.asarray(ref.outputs), rtol=0, atol=0)
+    assert got3.cross_cost < got.cross_cost
+    print("distributed histogram job r=3 knob: OK")
+
     job = groupby_mean_job()
     rows = jnp.asarray(rng.normal(size=(p.N, 128, 2)) * 100, jnp.float32)
     ref = run_job(job, rows, p, "hybrid")
@@ -67,7 +88,7 @@ def test_distributed_mapreduce_jobs():
 
 def test_coded_reduce_scatter():
     P_ = 4
-    mesh = jax.make_mesh((4, 2), ("rack", "server"))
+    mesh = make_mesh((4, 2), ("rack", "server"))
     G = 64
     rng = np.random.default_rng(2)
     pairs = [(a, b) for a in range(P_) for b in range(a + 1, P_)]
@@ -83,9 +104,9 @@ def test_coded_reduce_scatter():
     def body(x):
         return coded_reduce_scatter_r2(x[0], "rack", P_)[None]
 
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(P(("rack", "server")),),
-                       out_specs=P(("rack", "server")))
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(("rack", "server")),),
+                   out_specs=P(("rack", "server")))
     out = np.asarray(fn(inp))                          # [8, G/P]
     for rack in range(P_):
         for srv in range(2):
@@ -97,9 +118,9 @@ def test_coded_reduce_scatter():
     def body_f(x):
         return coded_reduce_scatter_r2(x[0], "rack", P_, failed=3)[None]
 
-    fn_f = jax.shard_map(body_f, mesh=mesh,
-                         in_specs=(P(("rack", "server")),),
-                         out_specs=P(("rack", "server")))
+    fn_f = shard_map(body_f, mesh=mesh,
+                     in_specs=(P(("rack", "server")),),
+                     out_specs=P(("rack", "server")))
     out_f = np.asarray(fn_f(inp))
     for rack in range(P_ - 1):                         # survivors only
         shard = total.reshape(P_, G // P_)[rack]
@@ -108,16 +129,16 @@ def test_coded_reduce_scatter():
 
 
 def test_hierarchical_allreduce():
-    mesh = jax.make_mesh((4, 2), ("rack", "server"))
+    mesh = make_mesh((4, 2), ("rack", "server"))
     rng = np.random.default_rng(3)
     x = rng.normal(size=(8, 16)).astype(np.float32)
 
     def body(v):
         return hierarchical_allreduce(v[0], "server", "rack")[None]
 
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(P(("rack", "server")),),
-                       out_specs=P(("rack", "server")))
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(("rack", "server")),),
+                   out_specs=P(("rack", "server")))
     out = np.asarray(fn(jnp.asarray(x)))
     for d in range(8):
         np.testing.assert_allclose(out[d], x.sum(axis=0), rtol=1e-5)

@@ -16,6 +16,7 @@ from repro.configs import ARCHS                                # noqa: E402
 from repro.data.pipeline import SyntheticPipeline              # noqa: E402
 from repro.distributed.collectives import (                    # noqa: E402
     flat_all_to_all, hierarchical_all_to_all)
+from repro.distributed.meshes import make_mesh, shard_map      # noqa: E402
 from repro.train.optimizer import OptimizerConfig              # noqa: E402
 from repro.train.trainer import (TrainConfig,                  # noqa: E402
                                  init_train_state,
@@ -25,8 +26,7 @@ CFG = ARCHS["qwen2-1.5b"].reduced()
 
 
 def test_coded_r2_training_descends():
-    mesh = jax.make_mesh((4, 2), ("pod", "data"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("pod", "data"))
     tc = TrainConfig(remat=False, dense_moe=True, dp_mode="coded_r2",
                      opt=OptimizerConfig(lr=1e-3, warmup_steps=2,
                                          decay_steps=30))
@@ -43,14 +43,13 @@ def test_coded_r2_training_descends():
 
 
 def test_hierarchical_a2a_equals_flat():
-    mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("pod", "data"))
     x = jnp.arange(8 * 8 * 6, dtype=jnp.float32).reshape(8, 8, 6)
 
     def run(fn):
-        f = jax.shard_map(lambda a: fn(a[0])[None], mesh=mesh,
-                          in_specs=(P(("pod", "data")),),
-                          out_specs=P(("pod", "data")))
+        f = shard_map(lambda a: fn(a[0])[None], mesh=mesh,
+                      in_specs=(P(("pod", "data")),),
+                      out_specs=P(("pod", "data")))
         return np.asarray(f(x))
     h = run(lambda a: hierarchical_all_to_all(a, "data", "pod"))
     fl = run(lambda a: flat_all_to_all(a, "data", "pod"))
@@ -63,8 +62,7 @@ def test_sequence_tp_loss_unchanged():
     from repro.distributed import sharding as shlib
     from repro.models import lm
     from repro.models.frontends import make_train_batch
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     cfg = ARCHS["granite-3-2b"].reduced()
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     batch = make_train_batch(jax.random.PRNGKey(1), cfg, batch=2, seq=16)

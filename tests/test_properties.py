@@ -11,7 +11,12 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.assignment import (check_hybrid_constraints,
                                    coded_assignment, hybrid_assignment,

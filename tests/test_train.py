@@ -59,8 +59,8 @@ def pod_mesh():
     if jax.device_count() < 8:
         pytest.skip("needs 8 host devices (run via tests/conftest device "
                     "count)")
-    return jax.make_mesh((4, 2), ("pod", "data"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.distributed.meshes import make_mesh
+    return make_mesh((4, 2), ("pod", "data"))
 
 
 def test_coded_r2_exact_and_straggler(pod_mesh):
