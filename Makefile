@@ -3,7 +3,7 @@
 # is the full tier-1 suite in one command.
 PYTEST ?= python -m pytest
 
-.PHONY: test test-all bench
+.PHONY: test test-all bench bench-pipeline
 
 test:
 	$(PYTEST) -q -m "not slow"
@@ -13,3 +13,6 @@ test-all:
 
 bench:
 	PYTHONPATH=src python benchmarks/shuffle_bench.py
+
+bench-pipeline:
+	PYTHONPATH=src python benchmarks/pipeline_bench.py

@@ -1,0 +1,223 @@
+"""End-to-end MapReduce pipeline benchmark: legacy host-round-trip path vs
+the fused device-resident pipeline (`run_job_distributed(fused=True)`).
+
+For each (r, N, Q, d) point on an 8-host-device ('rack','server') mesh this
+measures:
+
+  * end-to-end wall clock of both paths (post-compile, best of ``iters``);
+  * per-phase timings of the legacy path (map / host pack / shuffle+reduce)
+    — the fused path is ONE jitted program, so it reports a single fused
+    phase plus its compile time;
+  * inter-phase host-transfer bytes: the legacy path copies the full
+    V[N, Q, d] device->host after map and re-uploads the packed
+    [K, n_loc, Q, d] tensor before the shuffle; the fused path moves ZERO
+    bytes between phases (only subfiles in, outputs out — both paths pay
+    those);
+  * output parity (bit-exact, asserted every run).
+
+Emits ``BENCH_pipeline.json`` (repo root by default) — the perf trajectory
+seed.  ``--smoke`` runs one small config for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import numpy as np                                             # noqa: E402
+import jax                                                     # noqa: E402
+import jax.numpy as jnp                                        # noqa: E402
+
+from repro.core.coded_collectives import (                     # noqa: E402
+    compile_hybrid_plan, hybrid_shuffle, pack_local_values)
+from repro.core.params import SchemeParams                     # noqa: E402
+from repro.distributed.meshes import make_mesh                 # noqa: E402
+from repro.mapreduce.engine import (                           # noqa: E402
+    _fused_executable, assemble_outputs, map_phase,
+    pack_local_subfiles, run_job, run_job_distributed)
+from repro.mapreduce.jobs import wide_histogram_job            # noqa: E402
+
+MESH_SHAPE = (4, 2)                  # P=4 racks x Kr=2 servers = 8 devices
+SUBFILE_TOKENS = 256
+# default sweep: N=96 satisfies C(4,r) | NP/K and r | M for r in {1, 2, 3}.
+# The default benchmark point is the FIRST size at the LARGEST r of the
+# sweep: the legacy path must materialize and upload the r-fold-replicated
+# packed tensor (r * N*Q*d*4 bytes) on the host, so higher map replication
+# — the paper's deep-tradeoff regime — is exactly where the host round
+# trip hurts most and where killing it pays; the fused path never
+# materializes that buffer at all.
+DEFAULT_SIZES = [(96, 16, 2048), (96, 16, 512), (192, 16, 1024)]
+DEFAULT_RS = (1, 2, 3)
+SMOKE_SIZES = [(48, 16, 64)]
+SMOKE_RS = (2,)
+
+
+def _timeit(fn, iters: int) -> float:
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_point(mesh, r: int, N: int, Q: int, d: int, iters: int) -> dict:
+    p = SchemeParams(K=MESH_SHAPE[0] * MESH_SHAPE[1], P=MESH_SHAPE[0],
+                     Q=Q, N=N, r=r)
+    plan = compile_hybrid_plan(p)
+    job = wide_histogram_job(d)
+    rng = np.random.default_rng(r)
+    subfiles = rng.integers(0, 1 << 16, size=(N, SUBFILE_TOKENS)
+                            ).astype(np.int32)
+
+    # ---- parity: fused == legacy == single-device oracle, bit-exact --------
+    oracle = np.asarray(run_job(job, jnp.asarray(subfiles), p,
+                                "hybrid").outputs)
+    legacy = run_job_distributed(job, subfiles, p, mesh, fused=False)
+    fused = run_job_distributed(job, subfiles, p, mesh, fused=True)
+    np.testing.assert_array_equal(np.asarray(legacy.outputs), oracle)
+    np.testing.assert_array_equal(np.asarray(fused.outputs), oracle)
+
+    # ---- legacy path, per phase --------------------------------------------
+    # Strongest possible host-round-trip baseline: both device phases are
+    # jitted ONCE and reused warm, so the measured gap is the architecture
+    # (host round-trip + single-device map) — not trace-cache artifacts.
+    subs_dev = jnp.asarray(subfiles)
+    map_jit = jax.jit(lambda s: map_phase(job, s, p.Q))
+
+    def shuf_reduce(local):
+        shuffled = hybrid_shuffle(local, plan, mesh)
+        out = jax.vmap(jax.vmap(job.reduce_fn, in_axes=1))(shuffled)
+        return assemble_outputs(out, plan)
+
+    shuf_jit = jax.jit(shuf_reduce)
+
+    def legacy_map():
+        return np.asarray(map_jit(subs_dev))                 # device -> host
+
+    V_host = legacy_map()
+
+    def legacy_pack():
+        return jnp.asarray(pack_local_values(V_host, plan)   # host -> device
+                           ).block_until_ready()
+
+    local_dev = legacy_pack()
+
+    def legacy_shuffle_reduce():
+        return shuf_jit(local_dev).block_until_ready()
+
+    legacy_shuffle_reduce()                                   # compile
+    t_map = _timeit(legacy_map, iters)
+    t_pack = _timeit(legacy_pack, iters)
+    t_shuf = _timeit(legacy_shuffle_reduce, iters)
+
+    def legacy_e2e():
+        V = np.asarray(map_jit(subs_dev))
+        local = jnp.asarray(pack_local_values(V, plan))
+        return shuf_jit(local).block_until_ready()
+
+    t_legacy = _timeit(legacy_e2e, iters)
+
+    # ---- fused path --------------------------------------------------------
+    t0 = time.perf_counter()
+    exe = _fused_executable(job, plan, mesh, "unicast", "xla")
+    packed = jnp.asarray(pack_local_subfiles(subfiles, plan))
+    exe(packed).block_until_ready()                           # compile
+    t_compile = time.perf_counter() - t0
+
+    def fused_e2e():
+        packed = jnp.asarray(pack_local_subfiles(subfiles, plan))
+        out = exe(packed)
+        return assemble_outputs(out, plan).block_until_ready()
+
+    t_fused = _timeit(fused_e2e, iters)
+
+    def fused_device_only():
+        return exe(jnp.asarray(pack_local_subfiles(subfiles, plan))
+                   ).block_until_ready()
+
+    t_fused_dev = _timeit(fused_device_only, iters)
+
+    itemsize = 4                                              # float32
+    v_bytes = N * Q * d * itemsize
+    packed_bytes = p.K * plan.local_subfiles.shape[-1] * Q * d * itemsize
+    return {
+        "r": r, "N": N, "Q": Q, "d": d,
+        "legacy": {
+            "total_s": t_legacy,
+            "phases_s": {"map_to_host": t_map, "host_pack_upload": t_pack,
+                         "shuffle_reduce": t_shuf},
+            "interphase_host_bytes": v_bytes + packed_bytes,
+        },
+        "fused": {
+            "total_s": t_fused,
+            "phases_s": {"fused_map_shuffle_reduce": t_fused_dev},
+            "compile_s": t_compile,
+            "interphase_host_bytes": 0,
+        },
+        "speedup": t_legacy / t_fused,
+        "bit_exact": True,
+    }
+
+
+def run(smoke: bool = False, iters: int = 5, verbose: bool = True) -> dict:
+    mesh = make_mesh(MESH_SHAPE, ("rack", "server"))
+    sizes = SMOKE_SIZES if smoke else DEFAULT_SIZES
+    rs = SMOKE_RS if smoke else DEFAULT_RS
+    rows = []
+    for (N, Q, d) in sizes:
+        for r in rs:
+            row = bench_point(mesh, r, N, Q, d, iters)
+            rows.append(row)
+            if verbose:
+                lp = row["legacy"]["phases_s"]
+                print(f"r={r} N={N:4d} Q={Q} d={d:4d}  "
+                      f"legacy {row['legacy']['total_s'] * 1e3:8.2f} ms "
+                      f"(map {lp['map_to_host'] * 1e3:.2f} / pack "
+                      f"{lp['host_pack_upload'] * 1e3:.2f} / shuf "
+                      f"{lp['shuffle_reduce'] * 1e3:.2f})  "
+                      f"fused {row['fused']['total_s'] * 1e3:8.2f} ms  "
+                      f"{row['speedup']:5.2f}x  "
+                      f"host-bytes {row['legacy']['interphase_host_bytes']}"
+                      " -> 0")
+    default_size = DEFAULT_SIZES[0] if not smoke else SMOKE_SIZES[0]
+    default_r = max(rs)
+    report = {
+        "bench": "pipeline",
+        "mesh": {"shape": MESH_SHAPE, "axes": ["rack", "server"],
+                 "backend": jax.default_backend()},
+        "iters": iters,
+        "smoke": smoke,
+        "results": rows,
+        "default_point": {"N": default_size[0], "Q": default_size[1],
+                          "d": default_size[2], "r": default_r},
+        "default_size_speedup": next(
+            (x["speedup"] for x in rows
+             if (x["N"], x["Q"], x["d"]) == default_size
+             and x["r"] == default_r), None),
+    }
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="one small config, few iters (CI)")
+    ap.add_argument("--iters", type=int, default=8)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_pipeline.json"))
+    args = ap.parse_args()
+    report = run(smoke=args.smoke, iters=2 if args.smoke else args.iters)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

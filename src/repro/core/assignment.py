@@ -40,21 +40,26 @@ class Assignment:
     servers_of_subfile: Tuple[Tuple[int, ...], ...]
     meta: Dict[str, object] = dataclasses.field(default_factory=dict)
 
+    def incidence(self) -> np.ndarray:
+        """X[i, s] = 1 iff subfile i is mapped at server s  ([N, K] int64).
+
+        Every derived per-server quantity (:attr:`subfiles_of_server`,
+        :meth:`map_load`, :func:`pair_common_counts`) is one vectorized
+        reduction of this matrix.
+        """
+        X = np.zeros((self.params.N, self.params.K), dtype=np.int64)
+        srv = np.asarray(self.servers_of_subfile, dtype=np.int64)  # [N, r]
+        X[np.arange(self.params.N)[:, None], srv] = 1
+        return X
+
     @property
     def subfiles_of_server(self) -> List[List[int]]:
-        out: List[List[int]] = [[] for _ in range(self.params.K)]
-        for i, servers in enumerate(self.servers_of_subfile):
-            for s in servers:
-                out[s].append(i)
-        return out
+        X = self.incidence()
+        return [np.nonzero(X[:, s])[0].tolist() for s in range(self.params.K)]
 
     def map_load(self) -> np.ndarray:
         """Number of map tasks executed at each server."""
-        load = np.zeros(self.params.K, dtype=np.int64)
-        for servers in self.servers_of_subfile:
-            for s in servers:
-                load[s] += 1
-        return load
+        return self.incidence().sum(axis=0)
 
 
 # ---------------------------------------------------------------------------
@@ -147,37 +152,36 @@ def hybrid_assignment(params: SchemeParams,
 
 def pair_common_counts(assignment: Assignment) -> np.ndarray:
     """C[j, k] = number of subfiles mapped at both servers j and k."""
-    K = assignment.params.K
-    X = np.zeros((assignment.params.N, K), dtype=np.int64)
-    for i, servers in enumerate(assignment.servers_of_subfile):
-        for s in servers:
-            X[i, s] = 1
+    X = assignment.incidence()
     common = X.T @ X
     np.fill_diagonal(common, 0)
     return common
 
 
 def check_hybrid_constraints(assignment: Assignment) -> None:
-    """Assert Theorem IV.1's four constraints hold for a hybrid assignment."""
+    """Assert Theorem IV.1's four constraints hold for a hybrid assignment.
+
+    All four checks are NumPy broadcasts over the pair-common-count matrix —
+    no Python loops over server pairs/triples (the transitivity check used to
+    be an O(K^3) nested loop).
+    """
     p = assignment.params
     common = pair_common_counts(assignment)
     K, M = p.K, p.M
     Y = (common > 0).astype(np.int64)
+    offdiag = ~np.eye(K, dtype=bool)
+    racks = np.arange(K) // p.Kr
 
     # (1) no common files within a rack
-    for j in range(K):
-        for k in range(K):
-            if j != k and p.rack_of(j) == p.rack_of(k):
-                assert common[j, k] == 0, (j, k, common[j, k])
+    same_rack = (racks[:, None] == racks[None, :]) & offdiag
+    bad = same_rack & (common != 0)
+    assert not bad.any(), np.argwhere(bad)[:1]
     # (2) any pair of servers shares 0 or exactly M subfiles  (r = 2 reading;
     #     for general r the common count over a co-assigned pair is a multiple
     #     of M given by the number of r-subsets containing both racks)
     expected = M * comb(p.P - 2, p.r - 2) if p.r >= 2 else 0
-    for j in range(K):
-        for k in range(K):
-            if j == k:
-                continue
-            assert common[j, k] in (0, expected), (j, k, common[j, k], expected)
+    bad = offdiag & ~np.isin(common, (0, expected))
+    assert not bad.any(), (np.argwhere(bad)[:1], expected)
     # (3) degree: each server shares files with exactly (P-1)*[structure] peers
     #     (for r=2 this is P-1; generally the other r-subset members across
     #      all subsets containing the server's rack collapse to the P-1 other
@@ -185,9 +189,12 @@ def check_hybrid_constraints(assignment: Assignment) -> None:
     if p.r >= 2:
         deg = Y.sum(axis=1)
         assert (deg == p.P - 1).all(), deg
-    # (4) transitivity within a layer
-    for i in range(K):
-        for j in range(K):
-            for k in range(K):
-                if len({i, j, k}) == 3:
-                    assert Y[i, j] + Y[j, k] + Y[i, k] != 2, (i, j, k)
+    # (4) transitivity within a layer: no distinct triple with exactly two
+    #     sharing pairs.  Ysum[i, j, k] = Y[i,j] + Y[j,k] + Y[i,k] broadcast.
+    Ysum = Y[:, :, None] + Y[None, :, :] + Y[:, None, :]
+    idx = np.arange(K)
+    distinct = ((idx[:, None, None] != idx[None, :, None])
+                & (idx[None, :, None] != idx[None, None, :])
+                & (idx[:, None, None] != idx[None, None, :]))
+    bad = distinct & (Ysum == 2)
+    assert not bad.any(), np.argwhere(bad)[:1]

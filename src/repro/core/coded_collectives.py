@@ -80,6 +80,18 @@ class HybridShufflePlan:
     n_send: int
     # layer-table position of each locally mapped subfile: [P, Kr, n_loc]
     local_pos: np.ndarray
+    # --- coded-multicast tables (the paper's f(.) on the wire) -------------
+    # Packet m of sender rack i's stream to rack z combines r components,
+    # one per receiver rack in the multicast group; these are all
+    # layer-independent (no Kr axis).  Empty ([P, P, 0, r]) when n_send = 0.
+    # local position (in the sender's vals) of component c: [P, P, n_send, r]
+    mcast_comp_pos: np.ndarray
+    # rack whose reduce-key block component c is destined to: [P, P, n_send, r]
+    mcast_comp_rack: np.ndarray
+    # receiver side-information, receiver i <- source s: local position / key
+    # rack of the r-1 KNOWN components of each packet: [P, P, n_send, r-1]
+    mcast_known_pos: np.ndarray
+    mcast_known_rack: np.ndarray
 
 
 @functools.lru_cache(maxsize=128)
@@ -136,7 +148,13 @@ def compile_hybrid_plan(p: SchemeParams) -> HybridShufflePlan:
 
     cross_send_pos = np.zeros((p.P, p.Kr, p.P, n_send), dtype=np.int64)
     cross_recv_pos = np.zeros((p.P, p.Kr, p.P, n_send), dtype=np.int64)
+    n_known = max(r - 1, 0)
+    mcast_comp_pos = np.zeros((p.P, p.P, n_send, r), dtype=np.int64)
+    mcast_comp_rack = np.zeros((p.P, p.P, n_send, r), dtype=np.int64)
+    mcast_known_pos = np.zeros((p.P, p.P, n_send, n_known), dtype=np.int64)
+    mcast_known_rack = np.zeros((p.P, p.P, n_send, n_known), dtype=np.int64)
     if n_send:
+        subset_index = {tuple(T): t for t, T in enumerate(subsets.tolist())}
         off = np.arange(share)
         for i in range(p.P):
             for z in range(p.P):
@@ -152,8 +170,36 @@ def compile_hybrid_plan(p: SchemeParams) -> HybridShufflePlan:
                 cross_recv_pos[i, :, z, :] = (
                     t_rcv[:, None] * M
                     + pos_in[z, t_rcv, None] * share + off).reshape(-1)
+                # --- coded multicast component tables ----------------------
+                # Packet block a of the i -> z stream realizes the multicast
+                # group S = T ∪ {z} (T = t_snd[a]): component c serves
+                # receiver z2 in S \ {i} with i's share of T_{z2} = S \ {z2}.
+                # The components depend only on (S, w), so the packet i sends
+                # every receiver of S is identical — a true multicast payload.
+                for a, t in enumerate(t_snd):
+                    S = tuple(sorted(subsets[t].tolist() + [z]))
+                    rows = slice(a * share, (a + 1) * share)
+                    for c, z2 in enumerate(x for x in S if x != i):
+                        t2 = subset_index[tuple(x for x in S if x != z2)]
+                        mcast_comp_pos[i, z, rows, c] = (
+                            rank[i, t2] * M + pos_in[i, t2] * share + off)
+                        mcast_comp_rack[i, z, rows, c] = z2
+                # Receiver i decoding source s = z's stream: packet block a
+                # covers T = t_rcv[a] (∋ s, ∌ i), group S = T ∪ {i}; the
+                # known components are s's shares of T_{z2}, z2 in S\{s, i} —
+                # all mapped locally at i since i ∈ T_{z2}.
+                for a, t in enumerate(t_rcv):
+                    S = tuple(sorted(subsets[t].tolist() + [i]))
+                    rows = slice(a * share, (a + 1) * share)
+                    for c, z2 in enumerate(x for x in S if x not in (z, i)):
+                        t2 = subset_index[tuple(x for x in S if x != z2)]
+                        mcast_known_pos[i, z, rows, c] = (
+                            rank[i, t2] * M + pos_in[z, t2] * share + off)
+                        mcast_known_rack[i, z, rows, c] = z2
     return HybridShufflePlan(p, local_subfiles, cross_send_pos, layer_table,
-                             cross_recv_pos, local_mask, n_send, local_pos)
+                             cross_recv_pos, local_mask, n_send, local_pos,
+                             mcast_comp_pos, mcast_comp_rack,
+                             mcast_known_pos, mcast_known_rack)
 
 
 def compile_hybrid_plan_r2(p: SchemeParams) -> HybridShufflePlan:
@@ -173,8 +219,162 @@ HybridShufflePlanR2 = HybridShufflePlan
 # Distributed execution (shard_map over ('rack', 'server'))
 # ---------------------------------------------------------------------------
 
+MULTICAST_MODES = ("unicast", "coded", "coded_xor")
+COMBINE_IMPLS = ("xla", "pallas")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DevicePlanTables:
+    """The plan's index tables as on-device jnp constants (hoisted once per
+    plan — see :func:`device_plan_tables`)."""
+    send_pos: jax.Array          # [P, Kr, P, n_send]
+    recv_pos: jax.Array          # [P, Kr, P, n_send]
+    local_pos: jax.Array         # [P, Kr, n_loc]
+    mcast_comp_pos: jax.Array    # [P, P, n_send, r]
+    mcast_comp_rack: jax.Array
+    mcast_known_pos: jax.Array   # [P, P, n_send, r-1]
+    mcast_known_rack: jax.Array
+
+
+@functools.lru_cache(maxsize=128)
+def device_plan_tables(plan: HybridShufflePlan) -> DevicePlanTables:
+    """jnp views of a plan's index tables, transferred to device once and
+    cached alongside the LRU'd plan (plans hash by identity, and
+    :func:`compile_hybrid_plan` returns the same object per config, so a
+    repeated shuffle never re-uploads its tables)."""
+    return DevicePlanTables(
+        jnp.asarray(plan.cross_send_pos), jnp.asarray(plan.cross_recv_pos),
+        jnp.asarray(plan.local_pos),
+        jnp.asarray(plan.mcast_comp_pos), jnp.asarray(plan.mcast_comp_rack),
+        jnp.asarray(plan.mcast_known_pos),
+        jnp.asarray(plan.mcast_known_rack))
+
+
+def _combine(streams, multicast: str, combine_impl: str):
+    """Encode r component streams (list of same-shape arrays) into one packet
+    stream — the paper's f(.) (eq. (1), unit coefficients) or its GF(2)
+    variant."""
+    if combine_impl == "pallas":
+        from ..kernels.coded_combine import ops as cc_ops
+        if multicast == "coded_xor":
+            return cc_ops.xor_encode(streams)
+        return cc_ops.coded_encode(streams, jnp.ones(len(streams)))
+    if multicast == "coded_xor":
+        return functools.reduce(jnp.bitwise_xor, streams)
+    return functools.reduce(jnp.add, [s.astype(jnp.float32) for s in streams]
+                            ).astype(streams[0].dtype)
+
+
+def _uncombine(f, known, multicast: str, combine_impl: str):
+    """Recover the missing component of packet stream ``f`` from the r-1
+    known components (receiver side information)."""
+    if not known:
+        return f
+    if combine_impl == "pallas":
+        from ..kernels.coded_combine import ops as cc_ops
+        if multicast == "coded_xor":
+            return cc_ops.xor_decode(f, known)
+        return cc_ops.coded_decode(f, known, jnp.ones(len(known) + 1))
+    if multicast == "coded_xor":
+        return functools.reduce(jnp.bitwise_xor, known, f)
+    acc = functools.reduce(jnp.add,
+                           [k.astype(jnp.float32) for k in known])
+    return (f.astype(jnp.float32) - acc).astype(f.dtype)
+
+
+def shuffle_device_body(vals: jax.Array, plan: HybridShufflePlan,
+                        tables: DevicePlanTables,
+                        multicast: str = "unicast",
+                        combine_impl: str = "xla") -> jax.Array:
+    """Per-device body of the two-stage hybrid shuffle, general r.
+
+    Runs inside a shard_map over ('rack', 'server').  ``vals`` is THIS
+    device's [n_loc, Q, d] mapped values (rows ordered as
+    ``plan.local_subfiles[i, j]``); returns its [N, q_srv, d] reduce rows
+    (order = :func:`reduce_ready_order`).  Shared by :func:`hybrid_shuffle`
+    and the fused device-resident pipeline of :mod:`repro.mapreduce.engine`.
+
+    ``multicast='coded'`` replaces raw stage-1 rows with the paper's coded
+    multicast packets f(v_1..v_r) (unit coefficients), decoded at receivers
+    from replicated-map side information; ``'coded_xor'`` is the GF(2)
+    variant (integer payloads, bit-exact).  r = 1 streams carry a single
+    component, so every mode degenerates to unicast.  ``combine_impl``
+    selects the encode/decode implementation: ``'xla'`` (jnp adds) or
+    ``'pallas'`` (the fused single-HBM-pass kernels of
+    :mod:`repro.kernels.coded_combine`, interpret-mode off TPU).
+    """
+    if multicast not in MULTICAST_MODES:
+        raise ValueError(f"multicast must be one of {MULTICAST_MODES}")
+    if combine_impl not in COMBINE_IMPLS:
+        raise ValueError(f"combine_impl must be one of {COMBINE_IMPLS}")
+    p = plan.params
+    q_rack, q_srv = p.Q // p.P, p.Q // p.K
+    n_layer = p.subfiles_per_layer
+    d = vals.shape[-1]
+    n_send = plan.n_send
+    coded = multicast != "unicast" and p.r >= 2
+
+    i = jax.lax.axis_index("rack")
+    j = jax.lax.axis_index("server")
+    my_local = tables.local_pos[i, j]                # [n_loc]
+    key_starts = jnp.arange(p.P) * q_rack
+    key_off = jnp.arange(q_rack)
+
+    # ---- Stage 1: cross-rack all_to_all over 'rack' ------------------------
+    table = jnp.zeros((n_layer, q_rack, d), vals.dtype)
+    my_keys = jax.lax.dynamic_slice_in_dim(vals, i * q_rack, q_rack, 1)
+    table = table.at[my_local].set(my_keys)          # locally mapped rows
+    if n_send > 0:
+        if coded:
+            # encode: gather the r components of every packet of every
+            # destination stream — component c of packet m to rack z is a
+            # locally mapped row restricted to rack mcast_comp_rack[...,c]'s
+            # key block — then combine with f(.)
+            comp_pos = tables.mcast_comp_pos[i]      # [P, n_send, r]
+            cols = (tables.mcast_comp_rack[i][..., None] * q_rack
+                    + key_off)                       # [P, n_send, r, q_rack]
+            comps = vals[comp_pos[..., None], cols]  # [P, n_send, r, qr, d]
+            blocks = _combine([comps[:, :, c] for c in range(p.r)],
+                              multicast, combine_impl)
+        else:
+            my_send = tables.send_pos[i, j]          # [P, n_send]
+
+            def build_block(z):
+                rows = jnp.take(vals, my_send[z], axis=0)   # [n_send, Q, d]
+                return jax.lax.dynamic_slice_in_dim(
+                    rows, key_starts[z], q_rack, 1)         # [n_send, qr, d]
+            blocks = jax.vmap(build_block)(jnp.arange(p.P))  # [P,n_send,qr,d]
+        recvd = jax.lax.all_to_all(blocks, "rack", split_axis=0,
+                                   concat_axis=0, tiled=True)
+        if coded:
+            # decode: subtract the r-1 known components (rows this device
+            # mapped itself — the replicated-map side information)
+            recvd = recvd.reshape(p.P, n_send, q_rack, d)
+            kcols = (tables.mcast_known_rack[i][..., None] * q_rack
+                     + key_off)                      # [P, n_send, r-1, qr]
+            known = vals[tables.mcast_known_pos[i][..., None], kcols]
+            recvd = _uncombine(recvd,
+                               [known[:, :, c] for c in range(p.r - 1)],
+                               multicast, combine_impl)
+        my_recv = tables.recv_pos[i, j]
+        flat_dst = my_recv.reshape(-1)                   # [P*n_send]
+        flat_src = recvd.reshape(p.P * n_send, q_rack, d)
+        valid = (jnp.repeat(jnp.arange(p.P), n_send) != i)
+        # the r senders' shares are disjoint slices of each subset block,
+        # so target rows are hit at most once => add == set
+        table = table.at[flat_dst].add(
+            jnp.where(valid[:, None, None], flat_src, 0))
+
+    # ---- Stage 2: intra-rack all_to_all over 'server' ----------------------
+    per_srv = table.reshape(n_layer, p.Kr, q_srv, d).transpose(1, 0, 2, 3)
+    gathered = jax.lax.all_to_all(per_srv, "server", split_axis=0,
+                                  concat_axis=0, tiled=True)
+    return gathered.reshape(p.Kr * n_layer, q_srv, d)
+
+
 def hybrid_shuffle(values_local: jax.Array, plan: HybridShufflePlan,
-                   mesh: Mesh) -> jax.Array:
+                   mesh: Mesh, multicast: str = "unicast",
+                   combine_impl: str = "xla") -> jax.Array:
     """Two-stage hybrid shuffle, general r.
 
     values_local: [K, n_loc, Q, d], axis 0 sharded over ('rack','server');
@@ -182,56 +382,22 @@ def hybrid_shuffle(values_local: jax.Array, plan: HybridShufflePlan,
       ``plan.local_subfiles[i, j]``.
     Returns [K, N, q_srv, d]: per device, values of ALL N subfiles for its own
       q_srv reduce keys, rows ordered as :func:`reduce_ready_order`.
-    """
-    p = plan.params
-    q_rack, q_srv = p.Q // p.P, p.Q // p.K
-    n_layer = p.subfiles_per_layer
-    d = values_local.shape[-1]
-    n_send = plan.n_send
 
-    send_pos = jnp.asarray(plan.cross_send_pos)      # [P, Kr, P, n_send]
-    recv_pos = jnp.asarray(plan.cross_recv_pos)
-    local_pos = jnp.asarray(plan.local_pos)          # [P, Kr, n_loc]
+    ``multicast`` / ``combine_impl`` select the stage-1 wire format and the
+    f(.) implementation — see :func:`shuffle_device_body`.
+    """
+    tables = device_plan_tables(plan)
 
     def device_fn(vals):                             # [1, n_loc, Q, d]
-        vals = vals[0]
-        i = jax.lax.axis_index("rack")
-        j = jax.lax.axis_index("server")
-        my_send = send_pos[i, j]                     # [P, n_send]
-        my_recv = recv_pos[i, j]
-        my_local = local_pos[i, j]                   # [n_loc]
-        key_starts = jnp.arange(p.P) * q_rack
+        return shuffle_device_body(vals[0], plan, tables, multicast,
+                                   combine_impl)[None]
 
-        # ---- Stage 1: cross-rack all_to_all over 'rack' --------------------
-        table = jnp.zeros((n_layer, q_rack, d), vals.dtype)
-        my_keys = jax.lax.dynamic_slice_in_dim(vals, i * q_rack, q_rack, 1)
-        table = table.at[my_local].set(my_keys)      # locally mapped rows
-        if n_send > 0:
-            def build_block(z):
-                rows = jnp.take(vals, my_send[z], axis=0)   # [n_send, Q, d]
-                return jax.lax.dynamic_slice_in_dim(
-                    rows, key_starts[z], q_rack, 1)         # [n_send, qr, d]
-            blocks = jax.vmap(build_block)(jnp.arange(p.P))  # [P,n_send,qr,d]
-            recvd = jax.lax.all_to_all(blocks, "rack", split_axis=0,
-                                       concat_axis=0, tiled=True)
-            flat_dst = my_recv.reshape(-1)                   # [P*n_send]
-            flat_src = recvd.reshape(p.P * n_send, q_rack, d)
-            valid = (jnp.repeat(jnp.arange(p.P), n_send) != i)
-            # the r senders' shares are disjoint slices of each subset block,
-            # so target rows are hit at most once => add == set
-            table = table.at[flat_dst].add(
-                jnp.where(valid[:, None, None], flat_src, 0))
-
-        # ---- Stage 2: intra-rack all_to_all over 'server' ------------------
-        per_srv = table.reshape(n_layer, p.Kr, q_srv, d).transpose(1, 0, 2, 3)
-        gathered = jax.lax.all_to_all(per_srv, "server", split_axis=0,
-                                      concat_axis=0, tiled=True)
-        out = gathered.reshape(p.Kr * n_layer, q_srv, d)
-        return out[None]
-
+    # pallas_call has no shard_map replication rule on jax 0.4.x; the body
+    # is fully per-device anyway, so the check adds nothing
     fn = shard_map(device_fn, mesh=mesh,
                    in_specs=(P(("rack", "server")),),
-                   out_specs=P(("rack", "server")))
+                   out_specs=P(("rack", "server")),
+                   check=combine_impl != "pallas")
     return fn(values_local)
 
 
@@ -248,6 +414,18 @@ def reduce_ready_order(plan: HybridShufflePlan) -> np.ndarray:
     p = plan.params
     flat = np.asarray(plan.layer_subfiles).reshape(p.P, p.N)
     return np.broadcast_to(flat[:, None, :], (p.P, p.Kr, p.N))
+
+
+def reduce_output_keys(plan: HybridShufflePlan) -> np.ndarray:
+    """Global key id of each reduce row produced by server s: [K, Q/K].
+
+    Output assembly must place server s's row q at global key
+    ``reduce_output_keys(plan)[s, q]`` — derived from the key partition
+    explicitly rather than assuming the flat [K * Q/K] order IS key order
+    (true only for the default contiguous partition)."""
+    p = plan.params
+    return np.asarray([list(p.keys_of_server(s)) for s in range(p.K)],
+                      dtype=np.int64)
 
 
 def pack_local_values(values: np.ndarray,

@@ -80,7 +80,8 @@ def batch_chunk_for_rack(batch: np.ndarray | jax.Array, P_: int,
 
 
 def coded_reduce_scatter_r2(chunk_grads: jax.Array, axis: str,
-                            P_: int, failed: int | None = None) -> jax.Array:
+                            P_: int, failed: int | None = None,
+                            combine_impl: str = "xla") -> jax.Array:
     """Cross-rack stage of hybrid-coded gradient sync (r = 2).
 
     chunk_grads: [P-1, G] — this rack's per-chunk gradient partials, rows
@@ -96,7 +97,15 @@ def coded_reduce_scatter_r2(chunk_grads: jax.Array, axis: str,
     Ownership of its chunks transparently falls back to the partner rack, so
     the result is STILL the exact full-batch gradient (r=2 erasure tolerance).
     The failed rack's own return value is garbage; survivors are exact.
+
+    ``combine_impl``: implementation of the per-destination linear combining
+    f(.) that builds each send block — ``'xla'`` (einsum) or ``'pallas'``
+    (the fused :mod:`repro.kernels.coded_combine` encode kernel; falls back
+    to interpret mode off TPU).
     """
+    if combine_impl not in ("xla", "pallas"):
+        raise ValueError(f"combine_impl must be 'xla' or 'pallas', "
+                         f"got {combine_impl!r}")
     me = jax.lax.axis_index(axis)
     G = chunk_grads.shape[-1]
     assert G % P_ == 0, (G, P_)
@@ -111,12 +120,23 @@ def coded_reduce_scatter_r2(chunk_grads: jax.Array, axis: str,
         own = jnp.where(me == failed, False, own)
 
     # send buffer: for each destination z, sum of my OWNED chunks not
-    # containing z, restricted to z's shard.
+    # containing z, restricted to z's shard — the paper's f(.) with 0/1
+    # coefficients (a partial sum the destination cannot form itself).
     x = chunk_grads.reshape(P_ - 1, P_, shard)          # split into shards
-    def block_for(z):
-        sel = own & (part != z)                          # [P-1]
-        return jnp.einsum("c,cs->s", sel.astype(x.dtype), x[:, z, :])
-    sends = jax.vmap(block_for)(jnp.arange(P_))          # [P, shard]
+    if combine_impl == "pallas":
+        from ..kernels.coded_combine import ops as cc_ops
+        # coefficients vary per destination, payloads are shard-sized rows:
+        # one fused encode per destination (P_ is small and static)
+        sends = jnp.stack([
+            cc_ops.coded_encode(
+                [x[c, z, :] for c in range(P_ - 1)],
+                (own & (part != z)).astype(jnp.float32), block_t=8)
+            for z in range(P_)])                         # [P, shard]
+    else:
+        def block_for(z):
+            sel = own & (part != z)                      # [P-1]
+            return jnp.einsum("c,cs->s", sel.astype(x.dtype), x[:, z, :])
+        sends = jax.vmap(block_for)(jnp.arange(P_))      # [P, shard]
     recvd = jax.lax.all_to_all(sends, axis, split_axis=0, concat_axis=0,
                                tiled=True)               # [P, shard]
     if failed is not None:

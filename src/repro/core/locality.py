@@ -22,7 +22,7 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from .assignment import hybrid_slots, rack_subsets, slot_servers
+from .assignment import rack_subsets, slot_servers
 from .params import SchemeParams
 
 
@@ -37,30 +37,37 @@ def place_replicas(p: SchemeParams, rng: np.random.Generator,
     ``uniform``: r_f distinct servers uniformly at random (the paper's model).
     ``hdfs``: first replica uniform; second in a different rack; third in the
     second's rack on a different server (Hadoop default for r_f = 3).
+
+    Both policies draw all N subfiles' placements in batched ``rng`` calls
+    (the per-subfile Python loop was the Table II setup bottleneck).
     """
+    if policy == "uniform":
+        # row-wise uniform random permutation of the K servers, truncated to
+        # r_f: identical in distribution to ordered sampling without
+        # replacement (rng.choice(K, r_f, replace=False) per row).
+        return np.argsort(rng.random((p.N, p.K)), axis=1)[:, :p.r_f] \
+            .astype(np.int64)
+    if policy != "hdfs":
+        raise ValueError(policy)
+
     out = np.zeros((p.N, p.r_f), dtype=np.int64)
-    for i in range(p.N):
-        if policy == "uniform":
-            out[i] = rng.choice(p.K, size=p.r_f, replace=False)
-        elif policy == "hdfs":
-            first = int(rng.integers(p.K))
-            chosen = [first]
-            if p.r_f >= 2:
-                other_racks = [x for x in range(p.K)
-                               if p.rack_of(x) != p.rack_of(first)]
-                second = int(rng.choice(other_racks))
-                chosen.append(second)
-            if p.r_f >= 3:
-                same_rack = [x for x in range(p.K)
-                             if p.rack_of(x) == p.rack_of(chosen[1])
-                             and x != chosen[1]]
-                chosen.append(int(rng.choice(same_rack)))
-            while len(chosen) < p.r_f:
-                rest = [x for x in range(p.K) if x not in chosen]
-                chosen.append(int(rng.choice(rest)))
-            out[i] = chosen[:p.r_f]
-        else:
-            raise ValueError(policy)
+    first = rng.integers(p.K, size=p.N)
+    out[:, 0] = first
+    if p.r_f >= 2:
+        # uniform over the K - Kr servers outside first's rack: draw a rack
+        # offset in [1, P) and a slot in [0, Kr)
+        rack2 = (first // p.Kr + rng.integers(1, p.P, size=p.N)) % p.P
+        out[:, 1] = rack2 * p.Kr + rng.integers(p.Kr, size=p.N)
+    if p.r_f >= 3:
+        # same rack as the second replica, different slot
+        slot3 = (out[:, 1] % p.Kr + rng.integers(1, p.Kr, size=p.N)) % p.Kr
+        out[:, 2] = (out[:, 1] // p.Kr) * p.Kr + slot3
+    for c in range(3, p.r_f):
+        # replicas past the Hadoop triple: uniform over the unchosen servers
+        taken = np.zeros((p.N, p.K), dtype=bool)
+        np.put_along_axis(taken, out[:, :c], True, axis=1)
+        scores = np.where(taken, np.inf, rng.random((p.N, p.K)))
+        out[:, c] = scores.argmin(axis=1)
     return out
 
 
@@ -79,45 +86,49 @@ def group_servers(p: SchemeParams) -> List[Tuple[int, ...]]:
     return out
 
 
+def _locality_incidence(p: SchemeParams, replicas: np.ndarray
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """(node[i, g], rack[i, g]) integer hit counts of assigning subfile i to
+    group g: how many of g's servers host a replica of i / sit in a rack that
+    hosts one.  Built as one-hot replica/rack incidence matmuls — the
+    O(N*G*r) Python triple loop collapsed to two [N, K] @ [K, G] products."""
+    groups = np.asarray(group_servers(p), dtype=np.int64)     # [G, r]
+    G = groups.shape[0]
+    # replica one-hot incidences
+    has_server = np.zeros((p.N, p.K), dtype=np.int64)         # [N, K]
+    has_server[np.arange(p.N)[:, None], replicas.astype(np.int64)] = 1
+    has_rack = np.zeros((p.N, p.P), dtype=np.int64)           # [N, P] 0/1
+    has_rack[np.arange(p.N)[:, None], replicas.astype(np.int64) // p.Kr] = 1
+    # group-side incidences: server membership / per-rack server counts
+    g_server = np.zeros((G, p.K), dtype=np.int64)
+    g_server[np.arange(G)[:, None], groups] = 1               # distinct srvs
+    g_rack = np.zeros((G, p.P), dtype=np.int64)
+    np.add.at(g_rack, (np.repeat(np.arange(G), groups.shape[1]),
+                       (groups // p.Kr).ravel()), 1)
+    return has_server @ g_server.T, has_rack @ g_rack.T
+
+
 def locality_matrix(p: SchemeParams, replicas: np.ndarray,
                     lam: float = 0.8) -> np.ndarray:
     """C[i, g] = lam*NodeLocality + (1-lam)*RackLocality of assigning subfile
     i to group g's server set (Section V's measure, generalized to r >= 2)."""
     if not (0.5 < lam <= 1.0):
         raise ValueError("paper requires lam in (0.5, 1]")
-    groups = group_servers(p)
-    C = np.zeros((p.N, len(groups)))
-    replica_racks = [set(p.rack_of(int(s)) for s in replicas[i])
-                     for i in range(p.N)]
-    replica_servers = [set(int(s) for s in replicas[i]) for i in range(p.N)]
-    for g, servers in enumerate(groups):
-        racks = [p.rack_of(s) for s in servers]
-        for i in range(p.N):
-            node = sum(1 for s in servers if s in replica_servers[i])
-            rack = sum(1 for rk in racks if rk in replica_racks[i])
-            C[i, g] = lam * node + (1.0 - lam) * rack
-    return C
+    node, rack = _locality_incidence(p, replicas)
+    return lam * node + (1.0 - lam) * rack
 
 
 def locality_of_perm(p: SchemeParams, replicas: np.ndarray,
                      perm: Sequence[int]) -> Tuple[float, float]:
     """(node_locality, rack_locality) in [0, 1] — Table II's percentages:
     fraction of (map-replica, server) placements that are local."""
-    groups = group_servers(p)
-    slots = hybrid_slots(p)
-    subsets = rack_subsets(p.P, p.r)
-    node_hits = 0
-    rack_hits = 0
-    for slot_index, (layer, t_idx, _w) in enumerate(slots):
-        i = perm[slot_index]
-        g = layer * len(subsets) + t_idx
-        servers = groups[g]
-        rset = set(int(s) for s in replicas[i])
-        rracks = set(p.rack_of(int(s)) for s in replicas[i])
-        node_hits += sum(1 for s in servers if s in rset)
-        rack_hits += sum(1 for s in servers if p.rack_of(s) in rracks)
+    node, rack = _locality_incidence(p, replicas)
+    # slot s belongs to group s // M (hybrid_slots is group-major, M per group)
+    group_of_slot = np.arange(p.N) // p.M
+    perm = np.asarray(perm, dtype=np.int64)
     denom = p.N * p.r
-    return node_hits / denom, rack_hits / denom
+    return (int(node[perm, group_of_slot].sum()) / denom,
+            int(rack[perm, group_of_slot].sum()) / denom)
 
 
 # ---------------------------------------------------------------------------

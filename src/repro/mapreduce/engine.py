@@ -9,28 +9,41 @@ costs alongside the (bit-exact) results.
 Two execution paths:
   * run_job            — single-device: dense shuffle oracle + analytic costs
   * run_job_distributed — multi-device: the real two-stage shard_map shuffle
-    of :mod:`repro.core.coded_collectives` over a ('rack','server') mesh
+    of :mod:`repro.core.coded_collectives` over a ('rack','server') mesh.
+    Default ``fused=True`` runs map -> pack -> shuffle -> reduce as ONE
+    jitted, device-resident shard_map program: each device maps only its own
+    n_loc assigned subfiles, packs via on-device gathers from the plan's
+    cached index-table constants, shuffles, and reduces its own keys — zero
+    host transfers between phases, input buffer donated.  ``fused=False``
+    keeps the legacy host-round-trip path (single-device map of all N, host
+    NumPy packing, re-upload) for comparison — see
+    ``benchmarks/pipeline_bench.py``.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Dict
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core.assignment import (coded_assignment, hybrid_assignment,
                                uncoded_assignment)
 from ..core.coded_collectives import (HybridShufflePlan,
                                       compile_hybrid_plan,
+                                      device_plan_tables,
                                       hybrid_shuffle, pack_local_values,
-                                      reduce_ready_order)
+                                      reduce_output_keys,
+                                      reduce_ready_order,
+                                      shuffle_device_body)
 from ..core.costs import coded_cost, hybrid_cost, uncoded_cost
 from ..core.params import SchemeParams
 from ..core.shuffle_plan import count_plan, make_plan
+from ..distributed.meshes import shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,29 +95,96 @@ def run_job(job: MapReduceJob, subfiles: jax.Array, params: SchemeParams,
     return JobResult(outputs, intra, cross, scheme)
 
 
+def pack_local_subfiles(subfiles: np.ndarray,
+                        plan: HybridShufflePlan) -> np.ndarray:
+    """Distribute raw subfile data into the fused pipeline's per-device
+    layout: [K, n_loc, ...] — device (i, j)'s rows are ITS assigned subfiles
+    in ``plan.local_subfiles[i, j]`` order (the only host-side step of the
+    fused path; everything after lives on device)."""
+    p = plan.params
+    return np.asarray(subfiles)[plan.local_subfiles.reshape(p.K, -1)]
+
+
+def assemble_outputs(out: jax.Array, plan: HybridShufflePlan) -> jax.Array:
+    """[K, Q/K, d_out] per-server reduce rows -> [Q, d_out] in global key
+    order, derived explicitly from :func:`reduce_output_keys` (row m of the
+    flattened output holds key ``keys.ravel()[m]``, which is m only for the
+    default contiguous partition)."""
+    keys = reduce_output_keys(plan)
+    flat = out.reshape(out.shape[0] * out.shape[1], -1)
+    return flat[np.argsort(keys.reshape(-1), kind="stable")]
+
+
+@functools.lru_cache(maxsize=64)
+def _fused_executable(job: MapReduceJob, plan: HybridShufflePlan, mesh: Mesh,
+                      multicast: str, combine_impl: str):
+    """Compile the end-to-end device-resident pipeline for (job, plan, mesh):
+    ONE jitted shard_map program running map, pack, two-stage shuffle and
+    reduce with no host round-trip.
+
+    The cache keys on the job OBJECT (its map/reduce closures compare by
+    identity, standard jit semantics) — reuse one job instance across calls
+    to hit the compiled executable; a fresh factory call recompiles.  The
+    packed input is donated so XLA may reuse its buffer where shapes/dtypes
+    admit aliasing; intermediates of the fused program are XLA-managed and
+    never materialize host-side at all."""
+    p = plan.params
+    tables = device_plan_tables(plan)       # on-device constants, plan-cached
+
+    def device_fn(subs):                    # [1, n_loc, ...subfile dims]
+        vals = jax.vmap(lambda s: job.map_fn(s, p.Q))(subs[0])  # [n_loc,Q,d]
+        rows = shuffle_device_body(vals, plan, tables, multicast,
+                                   combine_impl)                # [N,q_srv,d]
+        return jax.vmap(job.reduce_fn, in_axes=1)(rows)[None]   # [1,q_srv,*]
+
+    fn = shard_map(device_fn, mesh=mesh,
+                   in_specs=(P(("rack", "server")),),
+                   out_specs=P(("rack", "server")),
+                   check=combine_impl != "pallas")
+    # donate the packed input: XLA aliases it into the program where
+    # shapes/dtypes admit (a no-op otherwise); donation is unimplemented on
+    # the cpu backend (warns and copies), so gate it
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(fn, donate_argnums=donate)
+
+
 def run_job_distributed(job: MapReduceJob, subfiles: np.ndarray,
                         params: SchemeParams, mesh: Mesh,
-                        r: int | None = None) -> JobResult:
+                        r: int | None = None, *, fused: bool = True,
+                        multicast: str = "unicast",
+                        combine_impl: str = "xla") -> JobResult:
     """Multi-device execution: real all_to_all shuffle (hybrid scheme,
     general map-replication r in [1, P]).
 
     ``mesh`` must have axes ('rack', 'server') with sizes (P, Kr).  Each
     device maps only ITS assigned subfiles (with r-fold replication across
-    racks), shuffles via :func:`hybrid_shuffle`, and reduces its own keys.
-    ``r`` overrides ``params.r`` (the knob for sweeping the paper's
+    racks), shuffles via the two-stage hybrid schedule, and reduces its own
+    keys.  ``r`` overrides ``params.r`` (the knob for sweeping the paper's
     computation/communication tradeoff curve).  Returns outputs identical
     to :func:`run_job` (asserted in tests).
+
+    ``fused=True`` (default) runs the whole map->pack->shuffle->reduce chain
+    as one jitted device-resident program (zero inter-phase host transfers);
+    ``fused=False`` is the legacy path: dense single-device map of ALL N
+    subfiles, host-side packing, re-upload, then the shuffle.  ``multicast``
+    and ``combine_impl`` are forwarded to the shuffle (coded multicast
+    packets and the Pallas f(.) kernels — see
+    :func:`repro.core.coded_collectives.shuffle_device_body`).
     """
     p = params if r is None or r == params.r else \
         dataclasses.replace(params, r=r)
     plan = compile_hybrid_plan(p)
-    V = np.asarray(map_phase(job, jnp.asarray(subfiles), p.Q))   # [N, Q, d]
-    local = pack_local_values(V, plan)                  # [K, n_loc, Q, d]
-
-    shuffled = hybrid_shuffle(jnp.asarray(local), plan, mesh)
-    # [K, N, q_srv, d]; per-device rows ordered by reduce_ready_order
-    out = jax.vmap(jax.vmap(job.reduce_fn, in_axes=1))(shuffled)
-    # out: [K, q_srv, d_out] -> assemble [Q, d_out] in key order
-    final = out.reshape(p.Q, -1)
+    if fused:
+        local_subs = jnp.asarray(pack_local_subfiles(subfiles, plan))
+        exe = _fused_executable(job, plan, mesh, multicast, combine_impl)
+        out = exe(local_subs)                           # [K, q_srv, d_out]
+    else:
+        V = np.asarray(map_phase(job, jnp.asarray(subfiles), p.Q))  # [N,Q,d]
+        local = pack_local_values(V, plan)              # [K, n_loc, Q, d]
+        shuffled = hybrid_shuffle(jnp.asarray(local), plan, mesh,
+                                  multicast, combine_impl)
+        # [K, N, q_srv, d]; per-device rows ordered by reduce_ready_order
+        out = jax.vmap(jax.vmap(job.reduce_fn, in_axes=1))(shuffled)
+    final = assemble_outputs(out, plan)                 # [Q, d_out]
     c = hybrid_cost(p)
     return JobResult(final, c.intra, c.cross, "hybrid")

@@ -38,6 +38,24 @@ def groupby_mean_job() -> MapReduceJob:
     return MapReduceJob("groupby_mean", 2, map_fn, reduce_fn)
 
 
+def wide_histogram_job(d: int) -> MapReduceJob:
+    """Histogram with a width-d payload per (key, subfile): counts scaled by
+    a fixed integer weight vector.  Integer-valued float32 throughout, so
+    every execution path (including coded multicast encode/decode) is
+    bit-exact — the shuffle-bound workload of ``benchmarks/pipeline_bench``.
+    """
+    def map_fn(tokens: jax.Array, Q: int) -> jax.Array:
+        bucket = (tokens.astype(jnp.uint32) % jnp.uint32(Q)).astype(jnp.int32)
+        counts = jnp.zeros((Q,), jnp.float32).at[bucket].add(1.0)
+        w = (jnp.arange(d, dtype=jnp.float32) % 7.0) + 1.0
+        return counts[:, None] * w[None, :]                  # [Q, d]
+
+    def reduce_fn(vals: jax.Array) -> jax.Array:             # [N, d]
+        return vals.sum(axis=0)
+
+    return MapReduceJob(f"wide_histogram_d{d}", d, map_fn, reduce_fn)
+
+
 def terasort_bucket_job(key_space: int = 2**20,
                         payload_quantiles: int = 8) -> MapReduceJob:
     """TeraSort bucketing phase (cf. CodedTeraSort [Li et al., 2017]): each

@@ -54,6 +54,66 @@ def test_distributed_hybrid_shuffle():
     print("hybrid_shuffle_r2 alias: OK (unchanged behavior)")
 
 
+def test_coded_multicast_shuffle():
+    """Stage-1 coded multicast wire format (the paper's f(.) with receiver-
+    side decode from replicated-map side information): bit-exact vs the
+    oracle for r in {2, 3}, under both the XLA and the Pallas coded_combine
+    implementations, in sum and GF(2)/XOR codecs."""
+    mesh = make_mesh((4, 2), ("rack", "server"))
+    for r in (2, 3):
+        p = SchemeParams(K=8, P=4, Q=16, N=48, r=r)
+        plan = compile_hybrid_plan(p)
+        rng = np.random.default_rng(10 + r)
+        V = rng.integers(-100, 100, size=(p.N, p.Q, 3)).astype(np.float32)
+        local = jnp.asarray(pack_local_values(V, plan))
+        ref = plan_shuffle_reference(V, p)
+        for impl in ("xla", "pallas"):
+            out = np.asarray(hybrid_shuffle(local, plan, mesh,
+                                            multicast="coded",
+                                            combine_impl=impl))
+            np.testing.assert_array_equal(out, ref)
+        Vi = rng.integers(0, 2 ** 30, size=(p.N, p.Q, 3)).astype(np.int32)
+        li = jnp.asarray(pack_local_values(Vi, plan))
+        refi = plan_shuffle_reference(Vi, p)
+        for impl in ("xla", "pallas"):
+            out = np.asarray(hybrid_shuffle(li, plan, mesh,
+                                            multicast="coded_xor",
+                                            combine_impl=impl))
+            np.testing.assert_array_equal(out, refi)
+        print(f"coded multicast shuffle r={r}: OK "
+              "(sum+xor, xla+pallas, bit-exact)")
+
+
+def test_fused_pipeline_parity():
+    """The single jitted device-resident map->pack->shuffle->reduce program
+    is bit-exact vs the run_job oracle for r in {1, 2, 3}, including under
+    coded multicast and the Pallas combine kernels."""
+    mesh = make_mesh((4, 2), ("rack", "server"))
+    p = SchemeParams(K=8, P=4, Q=16, N=48, r=2)
+    rng = np.random.default_rng(20)
+    job = histogram_job()
+    subs = np.asarray(rng.integers(0, 1 << 16, size=(p.N, 256)), np.int32)
+    ref = run_job(job, jnp.asarray(subs), p, "hybrid")
+    for r in (1, 2, 3):
+        got = run_job_distributed(job, subs, p, mesh, r=r, fused=True)
+        np.testing.assert_array_equal(np.asarray(got.outputs),
+                                      np.asarray(ref.outputs))
+        print(f"fused pipeline r={r}: OK (bit-exact vs run_job)")
+    got = run_job_distributed(job, subs, p, mesh, fused=True,
+                              multicast="coded", combine_impl="pallas")
+    np.testing.assert_array_equal(np.asarray(got.outputs),
+                                  np.asarray(ref.outputs))
+    print("fused pipeline coded/pallas: OK (bit-exact)")
+
+    job2 = groupby_mean_job()
+    rows = jnp.asarray(rng.normal(size=(p.N, 128, 2)) * 100, jnp.float32)
+    ref2 = run_job(job2, rows, p, "hybrid")
+    got2 = run_job_distributed(job2, np.asarray(rows), p, mesh, fused=True)
+    np.testing.assert_allclose(np.asarray(got2.outputs),
+                               np.asarray(ref2.outputs), rtol=1e-5)
+    print("fused groupby job: OK")
+
+
 def test_distributed_mapreduce_jobs():
     p = SchemeParams(K=8, P=4, Q=16, N=48, r=2)
     mesh = make_mesh((4, 2), ("rack", "server"))
@@ -63,15 +123,17 @@ def test_distributed_mapreduce_jobs():
     subfiles = jnp.asarray(rng.integers(0, 1 << 16, size=(p.N, 256)),
                            dtype=jnp.int32)
     ref = run_job(job, subfiles, p, "hybrid")
-    got = run_job_distributed(job, np.asarray(subfiles), p, mesh)
+    # legacy host-round-trip path (the fused default has its own test)
+    got = run_job_distributed(job, np.asarray(subfiles), p, mesh, fused=False)
     np.testing.assert_allclose(np.asarray(got.outputs),
                                np.asarray(ref.outputs), rtol=0, atol=0)
     assert got.cross_cost == ref.cross_cost
-    print("distributed histogram job: OK")
+    print("distributed histogram job (legacy path): OK")
 
     # the r knob: same job, r=3 replication — same bit-exact outputs,
     # lower cross-rack cost
-    got3 = run_job_distributed(job, np.asarray(subfiles), p, mesh, r=3)
+    got3 = run_job_distributed(job, np.asarray(subfiles), p, mesh, r=3,
+                               fused=False)
     np.testing.assert_allclose(np.asarray(got3.outputs),
                                np.asarray(ref.outputs), rtol=0, atol=0)
     assert got3.cross_cost < got.cross_cost
@@ -80,10 +142,10 @@ def test_distributed_mapreduce_jobs():
     job = groupby_mean_job()
     rows = jnp.asarray(rng.normal(size=(p.N, 128, 2)) * 100, jnp.float32)
     ref = run_job(job, rows, p, "hybrid")
-    got = run_job_distributed(job, np.asarray(rows), p, mesh)
+    got = run_job_distributed(job, np.asarray(rows), p, mesh, fused=False)
     np.testing.assert_allclose(np.asarray(got.outputs),
                                np.asarray(ref.outputs), rtol=1e-5)
-    print("distributed groupby job: OK")
+    print("distributed groupby job (legacy path): OK")
 
 
 def test_coded_reduce_scatter():
@@ -113,6 +175,18 @@ def test_coded_reduce_scatter():
             shard = total.reshape(P_, G // P_)[rack]
             np.testing.assert_allclose(out[rack * 2 + srv], shard, rtol=1e-5)
     print("coded reduce-scatter r=2: OK (== full-batch sum)")
+
+    # the Pallas combine path builds identical send blocks (f(.) as the
+    # fused coded_combine encode kernel, interpret mode on CPU)
+    def body_pl(x):
+        return coded_reduce_scatter_r2(x[0], "rack", P_,
+                                       combine_impl="pallas")[None]
+
+    fn_pl = shard_map(body_pl, mesh=mesh,
+                      in_specs=(P(("rack", "server")),),
+                      out_specs=P(("rack", "server")), check=False)
+    np.testing.assert_allclose(np.asarray(fn_pl(inp)), out, rtol=1e-6)
+    print("coded reduce-scatter combine_impl=pallas: OK (== xla path)")
 
     # straggler tolerance: rack 3's data lost; survivors still exact
     def body_f(x):
@@ -147,6 +221,8 @@ def test_hierarchical_allreduce():
 
 if __name__ == "__main__":
     test_distributed_hybrid_shuffle()
+    test_coded_multicast_shuffle()
+    test_fused_pipeline_parity()
     test_distributed_mapreduce_jobs()
     test_coded_reduce_scatter()
     test_hierarchical_allreduce()

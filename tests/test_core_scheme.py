@@ -90,6 +90,34 @@ def test_uncoded_pairs_share_nothing():
     assert common.max() == 0
 
 
+def test_incidence_matrix_consistency():
+    """subfiles_of_server / map_load / pair_common_counts all derive from
+    one incidence matrix and agree with the servers_of_subfile tuples."""
+    p = SchemeParams(9, 3, 18, 72, 2)
+    a = hybrid_assignment(p)
+    X = a.incidence()
+    assert X.shape == (p.N, p.K) and X.sum() == p.N * p.r
+    for i, servers in enumerate(a.servers_of_subfile):
+        assert set(np.nonzero(X[i])[0].tolist()) == set(servers)
+    by_server = a.subfiles_of_server
+    for s in range(p.K):
+        assert by_server[s] == np.nonzero(X[:, s])[0].tolist()
+    np.testing.assert_array_equal(a.map_load(), X.sum(axis=0))
+
+
+def test_constraint_check_rejects_corrupted_assignment():
+    """The broadcast-vectorized Theorem IV.1 checks still FAIL on an
+    assignment that violates them (swap one subfile's servers into a single
+    rack — breaks constraint 1)."""
+    p = SchemeParams(9, 3, 18, 72, 2)
+    a = hybrid_assignment(p)
+    servers = list(a.servers_of_subfile)
+    servers[0] = (0, 1)                       # two servers of rack 0
+    bad = Assignment("hybrid", p, tuple(servers), a.meta)
+    with pytest.raises(AssertionError):
+        check_hybrid_constraints(bad)
+
+
 # ---------------------------------------------------------------------------
 # Counted schedules == closed forms  (the paper's Props 1-2 / Thm III.1)
 # ---------------------------------------------------------------------------

@@ -21,7 +21,8 @@ def _k(i):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("r", [2, 3, 4])
-@pytest.mark.parametrize("T,d", [(64, 128), (100, 96), (257, 40)])
+@pytest.mark.parametrize("T,d", [(64, 128), (100, 96), (257, 40),
+                                 (1, 7), (300, 130)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_coded_encode_decode(r, T, d, dtype):
     streams = [jax.random.normal(_k(i), (T, d), jnp.float32).astype(dtype)

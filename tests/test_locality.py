@@ -1,17 +1,70 @@
-"""Section IV locality-optimization tests (Table II reproduction)."""
+"""Section IV locality-optimization tests (Table II reproduction), plus
+exact-parity checks of the vectorized locality kernels against the original
+pure-Python loop implementations (kept here as references)."""
 import numpy as np
 import pytest
 
 from repro.core.params import SchemeParams
-from repro.core.assignment import hybrid_assignment, check_hybrid_constraints
+from repro.core.assignment import (hybrid_assignment, hybrid_slots,
+                                   check_hybrid_constraints, rack_subsets)
 from repro.core.locality import (
-    greedy_perm, locality_matrix, locality_of_perm, optimal_perm,
-    place_replicas, random_perm, table2_experiment,
+    greedy_perm, group_servers, locality_matrix, locality_of_perm,
+    optimal_perm, place_replicas, random_perm, table2_experiment,
 )
 
 
 def _params(K, P, rf, N):
     return SchemeParams(K, P, Q=K, N=N, r=2, r_f=rf)
+
+
+# ---------------------------------------------------------------------------
+# Reference loop implementations (the pre-vectorization code, verbatim):
+# the incidence-matmul versions must match them EXACTLY.
+# ---------------------------------------------------------------------------
+
+def _locality_matrix_loops(p, replicas, lam=0.8):
+    groups = group_servers(p)
+    C = np.zeros((p.N, len(groups)))
+    replica_racks = [set(p.rack_of(int(s)) for s in replicas[i])
+                     for i in range(p.N)]
+    replica_servers = [set(int(s) for s in replicas[i]) for i in range(p.N)]
+    for g, servers in enumerate(groups):
+        racks = [p.rack_of(s) for s in servers]
+        for i in range(p.N):
+            node = sum(1 for s in servers if s in replica_servers[i])
+            rack = sum(1 for rk in racks if rk in replica_racks[i])
+            C[i, g] = lam * node + (1.0 - lam) * rack
+    return C
+
+
+def _locality_of_perm_loops(p, replicas, perm):
+    groups = group_servers(p)
+    slots = hybrid_slots(p)
+    subsets = rack_subsets(p.P, p.r)
+    node_hits = rack_hits = 0
+    for slot_index, (layer, t_idx, _w) in enumerate(slots):
+        i = perm[slot_index]
+        servers = groups[layer * len(subsets) + t_idx]
+        rset = set(int(s) for s in replicas[i])
+        rracks = set(p.rack_of(int(s)) for s in replicas[i])
+        node_hits += sum(1 for s in servers if s in rset)
+        rack_hits += sum(1 for s in servers if p.rack_of(s) in rracks)
+    return node_hits / (p.N * p.r), rack_hits / (p.N * p.r)
+
+
+@pytest.mark.parametrize("K,P,rf,N", [
+    (8, 2, 2, 160), (9, 3, 3, 90), (16, 4, 2, 192), (10, 5, 2, 100),
+    (21, 3, 2, 84),
+])
+def test_vectorized_locality_matches_loops_exactly(K, P, rf, N):
+    p = _params(K, P, rf, N)
+    rng = np.random.default_rng(K * N)
+    reps = place_replicas(p, rng)
+    np.testing.assert_array_equal(locality_matrix(p, reps),
+                                  _locality_matrix_loops(p, reps))
+    perm = rng.permutation(p.N)
+    assert locality_of_perm(p, reps, perm) == \
+        _locality_of_perm_loops(p, reps, perm)
 
 
 def test_replica_placement_distinct():
