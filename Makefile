@@ -3,7 +3,7 @@
 # is the full tier-1 suite in one command.
 PYTEST ?= python -m pytest
 
-.PHONY: test test-all bench bench-pipeline
+.PHONY: test test-all bench bench-pipeline bench-sim
 
 test:
 	$(PYTEST) -q -m "not slow"
@@ -16,3 +16,6 @@ bench:
 
 bench-pipeline:
 	PYTHONPATH=src python benchmarks/pipeline_bench.py
+
+bench-sim:
+	PYTHONPATH=src python benchmarks/sim_bench.py

@@ -20,8 +20,6 @@ seed.  ``--smoke`` runs one small config for CI.
 """
 from __future__ import annotations
 
-import argparse
-import json
 import os
 import time
 
@@ -32,6 +30,11 @@ os.environ["XLA_FLAGS"] = (
 import numpy as np                                             # noqa: E402
 import jax                                                     # noqa: E402
 import jax.numpy as jnp                                        # noqa: E402
+
+try:                                                           # noqa: E402
+    from ._common import emit_report, make_parser, seeded_rng
+except ImportError:                       # run as a script, not a package
+    from _common import emit_report, make_parser, seeded_rng
 
 from repro.core.coded_collectives import (                     # noqa: E402
     compile_hybrid_plan, hybrid_shuffle, pack_local_values)
@@ -66,12 +69,13 @@ def _timeit(fn, iters: int) -> float:
     return best
 
 
-def bench_point(mesh, r: int, N: int, Q: int, d: int, iters: int) -> dict:
+def bench_point(mesh, r: int, N: int, Q: int, d: int, iters: int,
+                seed: int = 0) -> dict:
     p = SchemeParams(K=MESH_SHAPE[0] * MESH_SHAPE[1], P=MESH_SHAPE[0],
                      Q=Q, N=N, r=r)
     plan = compile_hybrid_plan(p)
     job = wide_histogram_job(d)
-    rng = np.random.default_rng(r)
+    rng = seeded_rng(seed * 1009 + r)     # distinct data per (seed, r)
     subfiles = rng.integers(0, 1 << 16, size=(N, SUBFILE_TOKENS)
                             ).astype(np.int32)
 
@@ -165,14 +169,15 @@ def bench_point(mesh, r: int, N: int, Q: int, d: int, iters: int) -> dict:
     }
 
 
-def run(smoke: bool = False, iters: int = 5, verbose: bool = True) -> dict:
+def run(smoke: bool = False, iters: int = 5, verbose: bool = True,
+        seed: int = 0) -> dict:
     mesh = make_mesh(MESH_SHAPE, ("rack", "server"))
     sizes = SMOKE_SIZES if smoke else DEFAULT_SIZES
     rs = SMOKE_RS if smoke else DEFAULT_RS
     rows = []
     for (N, Q, d) in sizes:
         for r in rs:
-            row = bench_point(mesh, r, N, Q, d, iters)
+            row = bench_point(mesh, r, N, Q, d, iters, seed=seed)
             rows.append(row)
             if verbose:
                 lp = row["legacy"]["phases_s"]
@@ -188,11 +193,9 @@ def run(smoke: bool = False, iters: int = 5, verbose: bool = True) -> dict:
     default_size = DEFAULT_SIZES[0] if not smoke else SMOKE_SIZES[0]
     default_r = max(rs)
     report = {
-        "bench": "pipeline",
         "mesh": {"shape": MESH_SHAPE, "axes": ["rack", "server"],
                  "backend": jax.default_backend()},
         "iters": iters,
-        "smoke": smoke,
         "results": rows,
         "default_point": {"N": default_size[0], "Q": default_size[1],
                           "d": default_size[2], "r": default_r},
@@ -205,18 +208,11 @@ def run(smoke: bool = False, iters: int = 5, verbose: bool = True) -> dict:
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--smoke", action="store_true",
-                    help="one small config, few iters (CI)")
-    ap.add_argument("--iters", type=int, default=8)
-    ap.add_argument("--out", default=os.path.join(
-        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        "BENCH_pipeline.json"))
-    args = ap.parse_args()
-    report = run(smoke=args.smoke, iters=2 if args.smoke else args.iters)
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2)
-    print(f"wrote {args.out}")
+    args = make_parser(__doc__, "BENCH_pipeline.json").parse_args()
+    report = run(smoke=args.smoke, iters=2 if args.smoke else args.iters,
+                 seed=args.seed)
+    emit_report(report, "pipeline", args.out, smoke=args.smoke,
+                seed=args.seed)
 
 
 if __name__ == "__main__":

@@ -46,7 +46,9 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from math import comb
+from typing import Dict
 
 import numpy as np
 
@@ -94,9 +96,8 @@ class HybridShufflePlan:
     mcast_known_rack: np.ndarray
 
 
-@functools.lru_cache(maxsize=128)
-def compile_hybrid_plan(p: SchemeParams) -> HybridShufflePlan:
-    """Compile the static shuffle plan for any r in [1, P] with r | M.
+def _compile_hybrid_plan_impl(p: SchemeParams) -> HybridShufflePlan:
+    """Uncached plan compilation for any r in [1, P] with r | M.
 
     All tables are built by vectorized index arithmetic on the structural
     (layer, subset, w) coordinates; cost is O(N + P^2 * C(P, r)).
@@ -202,6 +203,80 @@ def compile_hybrid_plan(p: SchemeParams) -> HybridShufflePlan:
                              mcast_known_pos, mcast_known_rack)
 
 
+# ---------------------------------------------------------------------------
+# Plan cache: configurable LRU with introspection
+# ---------------------------------------------------------------------------
+#
+# The cache maxsize is configurable (the multi-job scheduler of `repro.sim`
+# charges plan-compile latency on cache miss, and sweeps want to bound or
+# disable caching): set the REPRO_PLAN_CACHE_MAXSIZE env var before import,
+# or call :func:`configure_plan_cache` at runtime.
+
+PLAN_CACHE_MAXSIZE_ENV = "REPRO_PLAN_CACHE_MAXSIZE"
+_PLAN_CACHE_DEFAULT_MAXSIZE = 128
+
+
+def _plan_cache_default_maxsize() -> int:
+    raw = os.environ.get(PLAN_CACHE_MAXSIZE_ENV, "")
+    try:
+        return int(raw)
+    except ValueError:
+        return _PLAN_CACHE_DEFAULT_MAXSIZE
+
+
+def _drop_device_tables() -> None:
+    # device_plan_tables is defined later in the module (it needs the plan
+    # type); guard for the import-time configure_plan_cache() call
+    fn = globals().get("device_plan_tables")
+    if fn is not None:
+        fn.cache_clear()
+
+
+def configure_plan_cache(maxsize: int | None = None):
+    """(Re)build the LRU plan cache with the given maxsize (``None`` -> the
+    ``REPRO_PLAN_CACHE_MAXSIZE`` env var, falling back to 128).  Drops all
+    cached plans (and their on-device table uploads — see
+    :func:`plan_cache_clear`); returns the new cache wrapper."""
+    global _PLAN_CACHE
+    if maxsize is None:
+        maxsize = _plan_cache_default_maxsize()
+    _PLAN_CACHE = functools.lru_cache(maxsize=maxsize)(
+        _compile_hybrid_plan_impl)
+    _drop_device_tables()
+    return _PLAN_CACHE
+
+
+_PLAN_CACHE = configure_plan_cache()
+
+
+def compile_hybrid_plan(p: SchemeParams) -> HybridShufflePlan:
+    """LRU-cached plan compilation (see :func:`_compile_hybrid_plan_impl`);
+    repeated calls for a seen :class:`SchemeParams` return the SAME plan
+    object in O(1)."""
+    return _PLAN_CACHE(p)
+
+
+def plan_cache_info():
+    """``functools`` CacheInfo(hits, misses, maxsize, currsize) of the plan
+    cache — the scheduler reads this to account compile cost on miss."""
+    return _PLAN_CACHE.cache_info()
+
+
+def plan_cache_clear() -> None:
+    """Drop all cached plans AND their on-device index tables:
+    :func:`device_plan_tables` keys on plan identity, so a cleared plan
+    cache would otherwise pin every evicted plan (and its device arrays)
+    alive inside the tables cache."""
+    _PLAN_CACHE.cache_clear()
+    _drop_device_tables()
+
+
+# Back-compat: existing call sites treat compile_hybrid_plan as the
+# lru_cache wrapper itself.
+compile_hybrid_plan.cache_info = plan_cache_info    # type: ignore[attr-defined]
+compile_hybrid_plan.cache_clear = plan_cache_clear  # type: ignore[attr-defined]
+
+
 def compile_hybrid_plan_r2(p: SchemeParams) -> HybridShufflePlan:
     """Back-compat alias: the r = 2 instance of :func:`compile_hybrid_plan`
     (rejects other r, as the pre-general-r API did)."""
@@ -241,13 +316,22 @@ def device_plan_tables(plan: HybridShufflePlan) -> DevicePlanTables:
     """jnp views of a plan's index tables, transferred to device once and
     cached alongside the LRU'd plan (plans hash by identity, and
     :func:`compile_hybrid_plan` returns the same object per config, so a
-    repeated shuffle never re-uploads its tables)."""
-    return DevicePlanTables(
-        jnp.asarray(plan.cross_send_pos), jnp.asarray(plan.cross_recv_pos),
-        jnp.asarray(plan.local_pos),
-        jnp.asarray(plan.mcast_comp_pos), jnp.asarray(plan.mcast_comp_rack),
-        jnp.asarray(plan.mcast_known_pos),
-        jnp.asarray(plan.mcast_known_rack))
+    repeated shuffle never re-uploads its tables).
+
+    The upload is forced OUTSIDE any active trace
+    (``ensure_compile_time_eval``): the first call for a plan may happen
+    inside a jitted caller (e.g. ``jax.jit(lambda v: hybrid_shuffle(...))``
+    on a cold cache), and caching trace-scoped tracers here would leak them
+    into every later caller."""
+    with jax.ensure_compile_time_eval():
+        return DevicePlanTables(
+            jnp.asarray(plan.cross_send_pos),
+            jnp.asarray(plan.cross_recv_pos),
+            jnp.asarray(plan.local_pos),
+            jnp.asarray(plan.mcast_comp_pos),
+            jnp.asarray(plan.mcast_comp_rack),
+            jnp.asarray(plan.mcast_known_pos),
+            jnp.asarray(plan.mcast_known_rack))
 
 
 def _combine(streams, multicast: str, combine_impl: str):
@@ -434,6 +518,42 @@ def pack_local_values(values: np.ndarray,
     :func:`hybrid_shuffle`: [K, n_loc, Q, d]."""
     p = plan.params
     return values[plan.local_subfiles.reshape(p.K, -1)]
+
+
+def plan_transfer_matrices(plan: HybridShufflePlan,
+                           multicast: str = "coded") -> Dict[str, np.ndarray]:
+    """Per-round transfer matrices of the EXECUTABLE hybrid shuffle.
+
+    Returns the actual traffic the compiled plan moves (all layers summed),
+    in <key, value> pairs:
+
+      * ``cross_rack_matrix`` [P, P]: stage-1 pairs the root switch carries
+        from rack i to rack z.  ``multicast='unicast'`` counts the wire
+        format of the all_to_all realization (each destination stream is a
+        separate copy: Kr * n_send * q_rack per (i, z) pair); ``'coded'`` /
+        ``'coded_xor'`` count the paper metric — each coded packet serves r
+        destination racks and traverses the root ONCE, so 1/r is attributed
+        to each of its r streams (row sums = per-sender root load, total =
+        ``hybrid_cost(p).cross``).
+      * ``intra_per_rack`` [P]: stage-2 pairs through each ToR switch
+        (identical per rack by symmetry; total = ``hybrid_cost(p).intra``).
+
+    The `repro.sim` network model consumes these loads, so simulated traffic
+    is the executable schedule — not a formula (their equality with the
+    closed forms is nevertheless asserted in tests).
+    """
+    if multicast not in MULTICAST_MODES:
+        raise ValueError(f"multicast must be one of {MULTICAST_MODES}")
+    p = plan.params
+    q_rack, q_srv = p.Q // p.P, p.Q // p.K
+    per_stream = float(p.Kr * plan.n_send * q_rack)
+    if multicast != "unicast" and p.r >= 2:
+        per_stream /= p.r
+    cross = np.full((p.P, p.P), per_stream)
+    np.fill_diagonal(cross, 0.0)
+    intra_rack = float(p.Kr * (p.Kr - 1) * p.subfiles_per_layer * q_srv)
+    return {"cross_rack_matrix": cross,
+            "intra_per_rack": np.full((p.P,), intra_rack)}
 
 
 def plan_shuffle_reference(values: np.ndarray, p: SchemeParams) -> np.ndarray:

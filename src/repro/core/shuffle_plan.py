@@ -230,6 +230,72 @@ def execute_plan(assignment: Assignment,
     return know
 
 
+# ---------------------------------------------------------------------------
+# Stage traffic export (consumed by the repro.sim network model)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StageTraffic:
+    """Aggregate link loads of one sequential shuffle stage, in pairs.
+
+    ``cross_pairs`` counts root-switch traversals (a multicast counted ONCE,
+    the paper metric); ``intra_pairs_per_rack[q]`` counts pairs through rack
+    q's ToR switch.  A scheme's shuffle is a SEQUENCE of stages: the hybrid
+    scheme is literally sequential (cross coded stage, then intra unicast);
+    for uncoded/coded the single mixed stage is split into its cross and
+    intra components, matching the serialization assumed by
+    :meth:`repro.core.costs.CommCost.weighted_time`.
+    """
+    stage: str                              # 'cross' | 'intra'
+    cross_pairs: float
+    intra_pairs_per_rack: Tuple[float, ...]
+
+    @property
+    def intra_pairs(self) -> float:
+        return float(sum(self.intra_pairs_per_rack))
+
+
+def _as_stages(cross: float, intra_per_rack: np.ndarray) -> List[StageTraffic]:
+    stages = []
+    if cross > 0:
+        stages.append(StageTraffic("cross", float(cross),
+                                   tuple(0.0 for _ in intra_per_rack)))
+    if intra_per_rack.sum() > 0:
+        stages.append(StageTraffic("intra", 0.0,
+                                   tuple(float(x) for x in intra_per_rack)))
+    return stages
+
+
+def plan_stage_traffic(assignment: Assignment) -> List[StageTraffic]:
+    """Enumerate the scheme's explicit schedule into per-stage link loads.
+
+    Exact per-rack attribution: an intra message loads its sender's ToR;
+    a cross message loads the root once (multicast counted once).  Totals
+    are proven equal to the closed forms in tests.
+    """
+    p = assignment.params
+    cross = 0.0
+    intra = np.zeros(p.P)
+    for m in make_plan(assignment):
+        if m.is_cross(p):
+            cross += 1.0
+        else:
+            intra[p.rack_of(m.sender)] += 1.0
+    return _as_stages(cross, intra)
+
+
+def scheme_stage_traffic(p: SchemeParams, scheme: str,
+                         check: bool = True) -> List[StageTraffic]:
+    """Closed-form stage traffic (Props 1-2 / Thm III.1, balanced per-rack
+    split — all three designs are rack-symmetric).  O(1); use this for large
+    N where enumerating the schedule is too slow."""
+    from .costs import coded_cost, hybrid_cost, uncoded_cost
+    cost_fn = {"uncoded": uncoded_cost, "coded": coded_cost,
+               "hybrid": hybrid_cost}[scheme]
+    c = cost_fn(p, check=check)
+    return _as_stages(c.cross, np.full(p.P, c.intra / p.P))
+
+
 def check_reduce_ready(assignment: Assignment,
                        know: List[Dict[Tuple[int, int], int]],
                        values: np.ndarray) -> None:

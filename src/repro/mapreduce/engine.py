@@ -23,7 +23,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Dict
+import time
+from typing import Callable, Dict, List
 
 import numpy as np
 
@@ -188,3 +189,90 @@ def run_job_distributed(job: MapReduceJob, subfiles: np.ndarray,
     final = assemble_outputs(out, plan)                 # [Q, d_out]
     c = hybrid_cost(p)
     return JobResult(final, c.intra, c.cross, "hybrid")
+
+
+# ---------------------------------------------------------------------------
+# Per-phase timing instrumentation (calibration feed for repro.sim)
+# ---------------------------------------------------------------------------
+
+def _best_of(fn: Callable[[], object], iters: int) -> float:
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure_phase_timings(job: MapReduceJob, subfiles: np.ndarray,
+                          params: SchemeParams, mesh: Mesh,
+                          iters: int = 3) -> Dict[str, object]:
+    """Measure REAL per-phase wall clock of the hybrid pipeline, in the row
+    format :func:`repro.sim.cluster.calibrate` consumes.
+
+    Phases are timed separately on warm jitted executables: plan compile
+    (cold, LRU cache cleared), map (all N subfiles), host pack, distributed
+    shuffle, and reduce.  ``work`` holds the value-unit conventions of
+    :class:`repro.sim.cluster.CostModel`; the fitted beta is therefore a
+    per-value-unit rate of THIS host — a calibration proxy, not a TPU claim
+    (the simulator divides work across the K simulated servers).
+    """
+    from ..core.coded_collectives import plan_cache_clear
+
+    p = params
+    plan_cache_clear()
+    t0 = time.perf_counter()
+    plan = compile_hybrid_plan(p)
+    compile_s = time.perf_counter() - t0
+
+    subs_dev = jnp.asarray(subfiles)
+    map_jit = jax.jit(lambda s: map_phase(job, s, p.Q))
+    V_host = np.asarray(map_jit(subs_dev))                       # warm-up
+    map_s = _best_of(lambda: np.asarray(map_jit(subs_dev)), iters)
+
+    pack_s = _best_of(
+        lambda: jnp.asarray(pack_local_values(V_host, plan)
+                            ).block_until_ready(), iters)
+    local_dev = jnp.asarray(pack_local_values(V_host, plan))
+
+    shuf_jit = jax.jit(lambda v: hybrid_shuffle(v, plan, mesh))
+    shuffled = shuf_jit(local_dev)
+    shuffled.block_until_ready()                                 # warm-up
+    shuffle_s = _best_of(
+        lambda: shuf_jit(local_dev).block_until_ready(), iters)
+
+    red_jit = jax.jit(jax.vmap(jax.vmap(job.reduce_fn, in_axes=1)))
+    red_jit(shuffled).block_until_ready()                        # warm-up
+    reduce_s = _best_of(
+        lambda: red_jit(shuffled).block_until_ready(), iters)
+
+    d = job.d
+    return {
+        "work": {
+            "map": float(p.N) * p.Q * d,
+            "pack": float(p.K) * plan.local_subfiles.shape[-1] * p.Q * d,
+            "reduce": float(p.N) * p.Q * d,
+            "plan_compile": float(p.N),
+        },
+        "seconds": {"map": map_s, "pack": pack_s, "reduce": reduce_s,
+                    "plan_compile": compile_s},
+        "meta": {"K": p.K, "P": p.P, "Q": p.Q, "N": p.N, "r": p.r, "d": d,
+                 "job": job.name, "shuffle_s": shuffle_s,
+                 "backend": jax.default_backend()},
+    }
+
+
+def measure_calibration_grid(job_factory: Callable[[int], MapReduceJob],
+                             mesh: Mesh, points: List[tuple],
+                             iters: int = 3) -> List[Dict[str, object]]:
+    """Run :func:`measure_phase_timings` over (params, d) points — enough
+    rows for the affine per-phase fit of :func:`repro.sim.cluster.calibrate`
+    to be overdetermined."""
+    rows = []
+    for params, d in points:
+        job = job_factory(d)
+        rng = np.random.default_rng(params.N)
+        subs = rng.integers(0, 1 << 16,
+                            size=(params.N, 256)).astype(np.int32)
+        rows.append(measure_phase_timings(job, subs, params, mesh, iters))
+    return rows

@@ -1,0 +1,30 @@
+"""repro.sim — rack-level cluster simulator + multi-job scheduler.
+
+Answers the question the closed forms cannot: what is job completion TIME
+under link contention, stragglers, skewed bandwidth, or a stream of
+concurrent jobs?  See docs/simulator.md for the event model, calibration
+recipe, scheduler policies and scenario catalog.
+"""
+from .cluster import (ClusterSim, CostModel, DeterministicSlowdown,
+                      ExponentialTail, JobStats, NoStragglers, PhaseCoeffs,
+                      RackCorrelated, StragglerModel, calibrate,
+                      measurements_from_pipeline_bench, phase_work,
+                      simulate_single_job)
+from .network import ROOT, FluidNetwork, RackTopology, tor
+from .scheduler import (Decision, MultiJobScheduler, POLICIES, SchemeChooser,
+                        run_scheduled)
+from .workload import (BurstyWorkload, DiurnalWorkload, JOB_ZOO, JobSpec,
+                       PoissonWorkload, Workload, default_catalog,
+                       valid_subfile_counts)
+
+__all__ = [
+    "ClusterSim", "CostModel", "DeterministicSlowdown", "ExponentialTail",
+    "JobStats", "NoStragglers", "PhaseCoeffs", "RackCorrelated",
+    "StragglerModel", "calibrate", "measurements_from_pipeline_bench",
+    "phase_work", "simulate_single_job",
+    "ROOT", "FluidNetwork", "RackTopology", "tor",
+    "Decision", "MultiJobScheduler", "POLICIES", "SchemeChooser",
+    "run_scheduled",
+    "BurstyWorkload", "DiurnalWorkload", "JOB_ZOO", "JobSpec",
+    "PoissonWorkload", "Workload", "default_catalog", "valid_subfile_counts",
+]

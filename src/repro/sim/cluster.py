@@ -1,0 +1,428 @@
+"""Deterministic discrete-event cluster simulator for (Hybrid) Coded
+MapReduce on a server-rack architecture.
+
+A job advances through the phases of the executable pipeline
+(:mod:`repro.mapreduce.engine`):
+
+    [plan compile] -> map -> pack -> shuffle (sequential stages) -> reduce
+
+Compute phases (map / pack / reduce) run per server with an affine cost
+``alpha + beta * work`` (work units documented on :class:`CostModel`),
+multiplied by a pluggable straggler factor, and complete at a barrier (the
+phase ends when the SLOWEST server does — stragglers hurt exactly as in
+practice).  The shuffle runs as fluid flows on the two-tier network of
+:mod:`repro.sim.network`, where concurrent jobs contend for the root and ToR
+switches under fair share.  Shuffle stage loads come from the stage-traffic
+export of :mod:`repro.core.shuffle_plan` (enumerated schedules) or its
+closed-form equivalent — i.e. the simulated traffic IS the schedule the
+executable shuffle moves.
+
+Everything is driven by one seeded ``numpy`` Generator and a sequence-
+numbered event queue, so a (workload, topology, seed) triple reproduces a
+bit-identical event trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.params import SchemeParams
+from ..core.shuffle_plan import StageTraffic, scheme_stage_traffic
+from .events import EventQueue, TraceEntry
+from .network import ROOT, FluidNetwork, RackTopology, tor
+from .workload import JobSpec
+
+COMPUTE_PHASES = ("map", "pack", "reduce")
+
+
+# ---------------------------------------------------------------------------
+# Phase cost model + calibration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PhaseCoeffs:
+    """``seconds = alpha + beta * work`` for one phase on one server."""
+    alpha: float = 0.0
+    beta: float = 0.0
+
+    def seconds(self, work: float) -> float:
+        return self.alpha + self.beta * work
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Per-phase affine compute costs.
+
+    Work units (value-units, matching the network's pair x width unit):
+      * map    — intermediate values computed per server: n_loc * Q * d
+      * pack   — values gathered/laid out per server:     n_loc * Q * d
+      * reduce — values folded per server:                N * (Q/K) * d
+      * plan_compile — subfiles N (charged once per plan-cache MISS; the
+        scheduler reads `repro.core.coded_collectives.plan_cache_info`)
+    """
+    map: PhaseCoeffs = PhaseCoeffs()
+    pack: PhaseCoeffs = PhaseCoeffs()
+    reduce: PhaseCoeffs = PhaseCoeffs()
+    plan_compile: PhaseCoeffs = PhaseCoeffs()
+
+    def phase_coeffs(self, phase: str) -> PhaseCoeffs:
+        return getattr(self, phase)
+
+
+ZERO_COST = CostModel()
+
+
+def phase_work(p: SchemeParams, scheme: str, d: int) -> Dict[str, float]:
+    """Per-server work units of each compute phase (see :class:`CostModel`).
+
+    ``n_loc`` is the per-server map load: N/K subfiles uncoded, r-fold
+    replicated (rN/K) for coded and hybrid — the computation side of the
+    paper's computation/communication tradeoff.
+    """
+    repl = 1 if scheme == "uncoded" else p.r
+    n_loc = p.N * repl / p.K
+    return {
+        "map": n_loc * p.Q * d,
+        "pack": n_loc * p.Q * d,
+        "reduce": p.N * (p.Q / p.K) * d,
+    }
+
+
+def _fit_affine(work: np.ndarray, secs: np.ndarray) -> PhaseCoeffs:
+    """Least-squares fit of secs ~ alpha + beta * work (alpha clipped >= 0)."""
+    if len(work) < 2:                     # underdetermined: pure rate model
+        return PhaseCoeffs(alpha=0.0,
+                           beta=float(max(secs[0] / max(work[0], 1e-12), 0.0)))
+    A = np.stack([np.ones_like(work), work], axis=1)
+    (alpha, beta), *_ = np.linalg.lstsq(A, secs, rcond=None)
+    return PhaseCoeffs(alpha=float(max(alpha, 0.0)), beta=float(max(beta, 0.0)))
+
+
+def calibrate(measurements: Sequence[Dict[str, object]]) -> CostModel:
+    """Fit per-phase alpha/beta from measured phase timings.
+
+    ``measurements`` rows come from
+    :func:`repro.mapreduce.engine.measure_phase_timings` (preferred: true
+    per-phase split on the real pipeline) or from ``BENCH_pipeline.json``
+    rows adapted via :func:`measurements_from_pipeline_bench`.  Each row
+    holds ``work`` and ``seconds`` dicts keyed by phase name; phases missing
+    everywhere keep zero cost.
+    """
+    fitted: Dict[str, PhaseCoeffs] = {}
+    for phase in COMPUTE_PHASES + ("plan_compile",):
+        work, secs = [], []
+        for row in measurements:
+            w = row["work"].get(phase)            # type: ignore[union-attr]
+            s = row["seconds"].get(phase)         # type: ignore[union-attr]
+            if w is not None and s is not None:
+                work.append(float(w))
+                secs.append(float(s))
+        if work:
+            fitted[phase] = _fit_affine(np.asarray(work), np.asarray(secs))
+    return CostModel(**fitted)
+
+
+def measurements_from_pipeline_bench(report: Dict) -> List[Dict[str, object]]:
+    """Adapt ``BENCH_pipeline.json`` rows into :func:`calibrate` rows.
+
+    The legacy-path phase split maps onto the model as: ``map_to_host`` is a
+    single-device map of all N subfiles (work N*Q*d), ``host_pack_upload``
+    moves the r-fold replicated packed tensor (work r*N*Q*d); the fused
+    ``shuffle_reduce`` phase is not separable there — use
+    ``measure_phase_timings`` for reduce calibration.
+    """
+    rows = []
+    for x in report.get("results", []):
+        N, Q, d, r = x["N"], x["Q"], x["d"], x["r"]
+        ph = x["legacy"]["phases_s"]
+        rows.append({
+            "work": {"map": N * Q * d, "pack": r * N * Q * d},
+            "seconds": {"map": ph["map_to_host"],
+                        "pack": ph["host_pack_upload"]},
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Straggler models
+# ---------------------------------------------------------------------------
+
+class StragglerModel:
+    """Multiplicative per-server slowdown factors (>= 1) for one compute
+    phase of one job.  Sampled ONCE per (job, phase) from the simulator's
+    seeded rng — deterministic given the seed."""
+
+    def factors(self, rng: np.random.Generator, K: int, P: int) -> np.ndarray:
+        raise NotImplementedError
+
+
+class NoStragglers(StragglerModel):
+    def factors(self, rng: np.random.Generator, K: int, P: int) -> np.ndarray:
+        return np.ones(K)
+
+
+@dataclasses.dataclass
+class DeterministicSlowdown(StragglerModel):
+    """Fixed per-server factors (e.g. one known-slow machine)."""
+    server_factors: Tuple[float, ...]
+
+    def factors(self, rng: np.random.Generator, K: int, P: int) -> np.ndarray:
+        f = np.asarray(self.server_factors, dtype=float)
+        if f.shape != (K,):
+            raise ValueError(f"need {K} per-server factors, got {f.shape}")
+        if (f < 1.0).any():
+            raise ValueError("slowdown factors must be >= 1")
+        return f
+
+
+@dataclasses.dataclass
+class ExponentialTail(StragglerModel):
+    """1 + Exp(scale) per server — the classic heavy-tail straggler model."""
+    scale: float = 0.2
+
+    def factors(self, rng: np.random.Generator, K: int, P: int) -> np.ndarray:
+        return 1.0 + rng.exponential(self.scale, size=K)
+
+
+@dataclasses.dataclass
+class RackCorrelated(StragglerModel):
+    """Whole racks slow down together (shared ToR/PDU failures): each rack
+    is slowed by ``factor`` with probability ``p_slow``."""
+    p_slow: float = 0.1
+    factor: float = 3.0
+
+    def factors(self, rng: np.random.Generator, K: int, P: int) -> np.ndarray:
+        slow = rng.random(P) < self.p_slow
+        per_rack = np.where(slow, self.factor, 1.0)
+        return np.repeat(per_rack, K // P)
+
+
+# ---------------------------------------------------------------------------
+# The simulator
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _SimJob:
+    job_id: int
+    spec: JobSpec
+    params: SchemeParams
+    scheme: str
+    stages: List[StageTraffic]
+    compile_s: float
+    submit_time: float
+    phase: str = "submitted"
+    stage_idx: int = 0
+    open_flows: int = 0
+    phase_start: float = 0.0
+    phase_times: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class JobStats:
+    job_id: int
+    name: str
+    scheme: str
+    r: int
+    arrival: float
+    submit: float
+    finish: float
+    phase_times: Dict[str, float]
+
+    @property
+    def jct(self) -> float:
+        """Completion time from ARRIVAL (includes scheduler queueing)."""
+        return self.finish - self.arrival
+
+
+class ClusterSim:
+    """Fluid discrete-event simulator of one server-rack cluster.
+
+    ``submit`` may be called before ``run`` (a static batch) or from
+    callbacks during the run (the online scheduler).  ``stages`` defaults to
+    the closed-form stage traffic of the chosen scheme; pass enumerated
+    ``plan_stage_traffic`` output (or loads derived from
+    ``plan_transfer_matrices``) to simulate an explicit schedule.
+    """
+
+    def __init__(self, topology: RackTopology, K: int,
+                 cost_model: CostModel = ZERO_COST,
+                 stragglers: StragglerModel | None = None,
+                 seed: int = 0) -> None:
+        if K % topology.P != 0:
+            raise ValueError(f"P={topology.P} must divide K={K}")
+        self.topology = topology
+        self.K = K
+        self.cost_model = cost_model
+        self.stragglers = stragglers or NoStragglers()
+        self.rng = np.random.default_rng(seed)
+        self.network = FluidNetwork(topology)
+        self.queue = EventQueue()
+        self.now = 0.0
+        self.trace: List[TraceEntry] = []
+        self.stats: List[JobStats] = []
+        self.on_job_done: Optional[Callable[[JobStats], None]] = None
+        self._jobs: Dict[int, _SimJob] = {}
+        self._next_job_id = 0
+
+    # ---- public API --------------------------------------------------------
+
+    def at(self, time: float, fn: Callable[[], None], kind: str = "callback",
+           data: Tuple = ()) -> None:
+        """Schedule an arbitrary callback (arrivals, scheduler wakeups)."""
+        self.queue.push(max(time, self.now), kind, data, fn)
+
+    def submit(self, spec: JobSpec, scheme: str, r: int,
+               time: float | None = None,
+               stages: List[StageTraffic] | None = None,
+               compile_s: float = 0.0, check: bool = True) -> int:
+        """Enqueue a job start; returns its sim job id."""
+        t = self.now if time is None else max(float(time), self.now)
+        p = SchemeParams(K=self.K, P=self.topology.P, Q=spec.Q, N=spec.N, r=r)
+        if stages is None:
+            stages = scheme_stage_traffic(p, scheme, check=check)
+        job = _SimJob(self._next_job_id, spec, p, scheme, stages,
+                      float(compile_s), t)
+        self._next_job_id += 1
+        self._jobs[job.job_id] = job
+        self.queue.push(t, "submit", (job.job_id,),
+                        lambda j=job: self._start_job(j))
+        return job.job_id
+
+    def run(self, until: float = float("inf")) -> List[JobStats]:
+        """Advance until no work is left (or ``until``); returns all
+        completed-job stats in completion order."""
+        while True:
+            # advance in DELTAS, not absolute times: at large t the next
+            # flow-completion dt can be below the float resolution of
+            # ``now + dt``, and an absolute-time loop would spin forever
+            dt_flow = self.network.time_to_next_completion()
+            t_event = self.queue.peek_time()
+            dt_event = t_event - self.now
+            if dt_flow == float("inf") and dt_event == float("inf"):
+                break
+            if min(self.now + dt_flow, t_event) > until:
+                # truncated run: drain flows up to the horizon so a resumed
+                # run() continues from consistent state; advance the clock
+                # FIRST so completion callbacks stamp times at the horizon
+                dt = until - self.now
+                self.now = until
+                for flow in self.network.advance(dt):
+                    self._trace("flow_done", flow.tag)
+                    self._flow_done(flow.tag[0])
+                break
+            if dt_flow < dt_event:
+                done = self.network.advance(dt_flow)
+                self.now += dt_flow
+            else:
+                done = self.network.advance(max(dt_event, 0.0))
+                self.now = t_event
+            for flow in done:
+                self._trace("flow_done", flow.tag)
+                self._flow_done(flow.tag[0])
+            while self.queue and self.queue.peek_time() <= self.now:
+                ev = self.queue.pop()
+                self._trace(ev.kind, ev.data)
+                if ev.fn is not None:
+                    ev.fn()
+        return self.stats
+
+    # ---- internals ---------------------------------------------------------
+
+    def _trace(self, kind: str, data: Tuple) -> None:
+        self.trace.append((round(self.now, 12), kind, tuple(data)))
+
+    def _start_job(self, job: _SimJob) -> None:
+        if job.compile_s > 0:
+            job.phase = "plan_compile"
+            job.phase_start = self.now
+            self.queue.push(self.now + job.compile_s, "phase_done",
+                            (job.job_id, "plan_compile"),
+                            lambda: self._phase_done(job, "plan_compile"))
+        else:
+            self._begin_compute(job, "map")
+
+    def _begin_compute(self, job: _SimJob, phase: str) -> None:
+        job.phase = phase
+        job.phase_start = self.now
+        coeffs = self.cost_model.phase_coeffs(phase)
+        work = phase_work(job.params, job.scheme, job.spec.d)[phase]
+        factors = self.stragglers.factors(self.rng, self.K, self.topology.P)
+        dur = float(np.max(factors) * coeffs.seconds(work))
+        self.queue.push(self.now + dur, "phase_done", (job.job_id, phase),
+                        lambda: self._phase_done(job, phase))
+
+    def _begin_shuffle_stage(self, job: _SimJob) -> None:
+        stage = job.stages[job.stage_idx]
+        job.phase = f"shuffle:{stage.stage}"
+        job.phase_start = self.now
+        d = job.spec.d
+        job.open_flows = 0
+        if stage.cross_pairs > 0:
+            self.network.start_flow(ROOT, stage.cross_pairs * d,
+                                    (job.job_id, "cross"))
+            job.open_flows += 1
+        for rack, load in enumerate(stage.intra_pairs_per_rack):
+            if load > 0:
+                self.network.start_flow(tor(rack), load * d,
+                                        (job.job_id, "intra", rack))
+                job.open_flows += 1
+        if job.open_flows == 0:                    # empty stage (e.g. r = K)
+            self._stage_done(job)
+
+    def _flow_done(self, job_id: int) -> None:
+        job = self._jobs[job_id]
+        job.open_flows -= 1
+        if job.open_flows == 0:
+            latency = self.topology.latency(job.stages[job.stage_idx].stage)
+            if latency > 0:
+                self.queue.push(self.now + latency, "stage_latency",
+                                (job.job_id,),
+                                lambda: self._stage_done(job))
+            else:
+                self._stage_done(job)
+
+    def _stage_done(self, job: _SimJob) -> None:
+        job.phase_times[f"shuffle:{job.stages[job.stage_idx].stage}"] = \
+            self.now - job.phase_start
+        job.stage_idx += 1
+        if job.stage_idx < len(job.stages):
+            self._begin_shuffle_stage(job)
+        else:
+            self._begin_compute(job, "reduce")
+
+    def _phase_done(self, job: _SimJob, phase: str) -> None:
+        job.phase_times[phase] = self.now - job.phase_start
+        if phase == "plan_compile":
+            self._begin_compute(job, "map")
+        elif phase == "map":
+            self._begin_compute(job, "pack")
+        elif phase == "pack":
+            job.stage_idx = 0
+            if job.stages:
+                self._begin_shuffle_stage(job)
+            else:
+                self._begin_compute(job, "reduce")
+        elif phase == "reduce":
+            job.phase = "done"
+            stats = JobStats(job.job_id, job.spec.name, job.scheme,
+                             job.params.r, job.spec.arrival, job.submit_time,
+                             self.now, dict(job.phase_times))
+            self.stats.append(stats)
+            self._trace("job_done", (job.job_id, job.scheme, job.params.r))
+            if self.on_job_done is not None:
+                self.on_job_done(stats)
+
+
+def simulate_single_job(spec: JobSpec, topology: RackTopology, K: int,
+                        scheme: str, r: int,
+                        cost_model: CostModel = ZERO_COST,
+                        stragglers: StragglerModel | None = None,
+                        seed: int = 0, check: bool = True) -> JobStats:
+    """One job, empty cluster — the zero-contention special case whose JCT
+    must equal ``CommCost.weighted_time`` when compute costs are zero."""
+    sim = ClusterSim(topology, K, cost_model, stragglers, seed)
+    sim.submit(spec, scheme, r, time=spec.arrival, check=check)
+    (stats,) = sim.run()
+    return stats

@@ -1,0 +1,56 @@
+"""Deterministic discrete-event primitives for the cluster simulator.
+
+Two ingredients make the whole simulator reproducible bit-for-bit:
+
+  * every scheduled event carries a monotonically increasing sequence
+    number, so simultaneous events pop in a deterministic order (the order
+    they were scheduled) regardless of heap internals;
+  * the trace is a plain list of ``(time, kind, detail)`` tuples appended in
+    processing order — two runs with the same seed must produce IDENTICAL
+    traces (asserted in ``tests/test_sim.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Callable, List, Optional, Tuple
+
+TraceEntry = Tuple[float, str, Tuple[Any, ...]]
+
+
+@dataclasses.dataclass(order=True)
+class Event:
+    time: float
+    seq: int
+    kind: str = dataclasses.field(compare=False)
+    data: Tuple[Any, ...] = dataclasses.field(compare=False, default=())
+    # optional callback fired when the event is processed
+    fn: Optional[Callable[[], None]] = dataclasses.field(
+        compare=False, default=None)
+
+
+class EventQueue:
+    """Min-heap of events keyed on (time, seq) — fully deterministic."""
+
+    def __init__(self) -> None:
+        self._heap: List[Event] = []
+        self._seq = 0
+
+    def push(self, time: float, kind: str, data: Tuple[Any, ...] = (),
+             fn: Optional[Callable[[], None]] = None) -> Event:
+        ev = Event(float(time), self._seq, kind, data, fn)
+        self._seq += 1
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)
+
+    def peek_time(self) -> float:
+        return self._heap[0].time if self._heap else float("inf")
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

@@ -1,0 +1,142 @@
+"""Two-tier server-rack network: ToR switches + root switch, fluid fair share.
+
+Topology (the paper's Fig. 1): K servers in P racks; every server hangs off
+its rack's Top-of-Rack switch, and the P ToR switches hang off one root
+switch.  Intra-rack transfers traverse only the sender's ToR; cross-rack
+transfers traverse the root (a coded multicast counted ONCE — the paper
+metric).
+
+The contention model is processor-sharing fluid flow: each resource (the
+root switch, or one ToR switch) divides its capacity EQUALLY among its
+active flows.  The simulator aggregates one flow per (job, stage, resource),
+so the equal split is per-JOB fairness — the standard abstraction for
+datacenter flow-level simulation (cf. flow-level models in coflow/Varys
+literature).
+
+Calibration identity: with one job, no stragglers, and a uniform topology,
+the hybrid shuffle drains its cross stage in ``cross_pairs / cross_bw``
+(single flow on the root) and its intra stage in ``intra_total / intra_bw``
+(P parallel per-rack flows of ``intra_total / P`` each on ToR capacity
+``intra_bw / P``) — exactly :meth:`repro.core.costs.CommCost.weighted_time`.
+That equality on the full Table I grid is asserted by
+``benchmarks/sim_bench.py`` and ``tests/test_table1_regression.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple, Union
+
+Resource = Union[str, Tuple[str, int]]          # 'root' | ('tor', rack)
+
+ROOT: Resource = "root"
+
+
+def tor(rack: int) -> Resource:
+    return ("tor", rack)
+
+
+@dataclasses.dataclass(frozen=True)
+class RackTopology:
+    """Bandwidths are in value-units/s (pairs x payload width d).
+
+    ``cross_bw`` is the root-switch capacity; ``intra_bw`` is the AGGREGATE
+    intra tier capacity, split evenly over the P ToR switches (so one rack's
+    ToR runs at ``intra_bw / P``) — the convention under which zero-contention
+    simulated shuffle time equals ``CommCost.weighted_time(intra_bw,
+    cross_bw)``.  ``rack_bw_scale`` skews individual ToR switches (straggling
+    racks / heterogeneous hardware); ``cross_latency`` / ``intra_latency``
+    add a fixed per-stage latency floor.
+    """
+    P: int
+    cross_bw: float = 1.0
+    intra_bw: float = 10.0
+    rack_bw_scale: Tuple[float, ...] | None = None
+    cross_latency: float = 0.0
+    intra_latency: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.P < 1 or self.cross_bw <= 0 or self.intra_bw <= 0:
+            raise ValueError("need P >= 1 and positive bandwidths")
+        if self.rack_bw_scale is not None:
+            if len(self.rack_bw_scale) != self.P:
+                raise ValueError(f"rack_bw_scale must have P={self.P} entries")
+            if any(s <= 0 for s in self.rack_bw_scale):
+                raise ValueError("rack_bw_scale entries must be positive")
+
+    def capacity(self, res: Resource) -> float:
+        if res == ROOT:
+            return self.cross_bw
+        _, rack = res
+        scale = self.rack_bw_scale[rack] if self.rack_bw_scale else 1.0
+        return self.intra_bw / self.P * scale
+
+    def latency(self, stage: str) -> float:
+        return self.cross_latency if stage == "cross" else self.intra_latency
+
+
+@dataclasses.dataclass
+class Flow:
+    flow_id: int
+    resource: Resource
+    remaining: float                 # value-units left to move
+    tag: Tuple                       # (job_id, phase, ...) — for the trace
+
+
+class FluidNetwork:
+    """Set of active flows advancing under per-resource equal share."""
+
+    def __init__(self, topology: RackTopology) -> None:
+        self.topology = topology
+        self.flows: Dict[int, Flow] = {}
+        self._next_id = 0
+
+    def start_flow(self, resource: Resource, size: float, tag: Tuple) -> int:
+        fid = self._next_id
+        self._next_id += 1
+        self.flows[fid] = Flow(fid, resource, max(float(size), 0.0), tag)
+        return fid
+
+    def _counts(self) -> Dict[Resource, int]:
+        counts: Dict[Resource, int] = {}
+        for f in self.flows.values():
+            counts[f.resource] = counts.get(f.resource, 0) + 1
+        return counts
+
+    def rates(self) -> Dict[int, float]:
+        """Current drain rate of every active flow (equal share)."""
+        counts = self._counts()
+        return {fid: self.topology.capacity(f.resource) / counts[f.resource]
+                for fid, f in self.flows.items()}
+
+    def backlog(self, resource: Resource) -> float:
+        """Total value-units queued on a resource (scheduler load signal)."""
+        return sum(f.remaining for f in self.flows.values()
+                   if f.resource == resource)
+
+    def time_to_next_completion(self) -> float:
+        """Time until the earliest active flow drains at current rates
+        (inf when no flows are active)."""
+        rates = self.rates()
+        dt = float("inf")
+        for fid, f in sorted(self.flows.items()):
+            dt = min(dt, f.remaining / rates[fid])
+        return dt
+
+    def advance(self, dt: float) -> List[Flow]:
+        """Drain all flows for ``dt`` seconds; return completed flows in
+        deterministic (flow_id) order.  A flow whose residue would drain in
+        under a nanosecond at its current rate completes now — the guard
+        that keeps float round-off from stranding un-advanceable slivers."""
+        if not self.flows:
+            return []
+        rates = self.rates()
+        done: List[Flow] = []
+        for fid in sorted(self.flows):
+            f = self.flows[fid]
+            f.remaining -= rates[fid] * dt
+            if f.remaining <= rates[fid] * 1e-9:
+                f.remaining = 0.0
+                done.append(f)
+        for f in done:
+            del self.flows[f.flow_id]
+        return done

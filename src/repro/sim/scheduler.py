@@ -1,0 +1,235 @@
+"""Online multi-job scheduler over the cluster simulator.
+
+Two separable decisions, both made ONLINE as jobs arrive:
+
+  * **scheme choice** (:class:`SchemeChooser`): for each admitted job, pick
+    (scheme, r) ∈ {uncoded} ∪ {coded, hybrid} x rs minimizing the job's
+    estimated completion time under the CURRENT cluster load — estimated
+    with the same cost model and stage-traffic closed forms the simulator
+    itself uses, plus the observed backlog on the root/ToR switches and a
+    plan-compile charge when the hybrid plan is not in the REAL LRU plan
+    cache (:func:`repro.core.coded_collectives.plan_cache_info`);
+  * **admission order** (:class:`MultiJobScheduler`): at most
+    ``max_concurrent`` jobs share the network at once; the queue drains in
+    FIFO, SRPT (shortest estimated completion first) or FAIR
+    (least-attained-service per job kind) order.
+
+A fixed-scheme chooser (``adaptive=False``) is the baseline the benchmarks
+compare against: same workload, same admission policy, every job forced to
+one (scheme, r).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.coded_collectives import compile_hybrid_plan, plan_cache_info
+from ..core.params import SchemeParams
+from ..core.shuffle_plan import scheme_stage_traffic
+from .cluster import ClusterSim, CostModel, JobStats, phase_work
+from .network import ROOT, tor
+from .workload import JobSpec
+
+POLICIES = ("fifo", "srpt", "fair")
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    scheme: str
+    r: int
+    est_jct: float
+    compile_s: float            # plan-compile charge (0 on cache hit)
+    cache_hit: bool
+
+
+class SchemeChooser:
+    """Greedy myopic (scheme, r) choice by minimum estimated JCT.
+
+    The estimate mirrors the simulator's own model: per-phase affine compute
+    costs (optionally inflated by ``expected_straggler`` — e.g. 1 + scale
+    for an exponential tail, a quantity operators calibrate from history),
+    sequential shuffle stages where each stage drains behind the resource's
+    current backlog, and a plan-compile charge on hybrid plan-cache misses.
+    It deliberately ignores FUTURE arrivals (online setting).
+    """
+
+    def __init__(self, K: int, cost_model: CostModel = CostModel(),
+                 rs: Sequence[int] = (1, 2, 3),
+                 schemes: Sequence[str] = ("uncoded", "coded", "hybrid"),
+                 adaptive: bool = True,
+                 fixed: Tuple[str, int] = ("coded", 2),
+                 expected_straggler: float = 1.0,
+                 compile_real_plans: bool = True) -> None:
+        self.K = K
+        self.cost_model = cost_model
+        self.rs = tuple(rs)
+        self.schemes = tuple(schemes)
+        self.adaptive = adaptive
+        self.fixed = fixed
+        self.expected_straggler = float(expected_straggler)
+        self.compile_real_plans = compile_real_plans
+
+    def candidates(self) -> List[Tuple[str, int]]:
+        out: List[Tuple[str, int]] = []
+        if "uncoded" in self.schemes:
+            out.append(("uncoded", 1))
+        for scheme in ("coded", "hybrid"):
+            if scheme in self.schemes:
+                out.extend((scheme, r) for r in self.rs if r >= 2 or
+                           scheme == "hybrid")
+        return out
+
+    def estimate(self, spec: JobSpec, scheme: str, r: int,
+                 cluster: ClusterSim) -> Optional[float]:
+        """Estimated completion seconds for one candidate; None if the
+        scheme's divisibility hypotheses reject (N, Q, r)."""
+        try:
+            p = SchemeParams(K=self.K, P=cluster.topology.P,
+                             Q=spec.Q, N=spec.N, r=r)
+            stages = scheme_stage_traffic(p, scheme, check=True)
+        except ValueError:
+            return None
+        est = self._compile_charge(p, scheme, probe=False)[0]
+        work = phase_work(p, scheme, spec.d)
+        for phase in ("map", "pack", "reduce"):
+            est += (self.expected_straggler
+                    * self.cost_model.phase_coeffs(phase).seconds(work[phase]))
+        topo = cluster.topology
+        for stage in stages:
+            times = [0.0]
+            if stage.cross_pairs > 0:
+                load = stage.cross_pairs * spec.d + cluster.network.backlog(ROOT)
+                times.append(load / topo.capacity(ROOT))
+            for rack, pairs in enumerate(stage.intra_pairs_per_rack):
+                if pairs > 0:
+                    load = pairs * spec.d + cluster.network.backlog(tor(rack))
+                    times.append(load / topo.capacity(tor(rack)))
+            est += max(times) + topo.latency(stage.stage)
+        return est
+
+    def _compile_charge(self, p: SchemeParams, scheme: str,
+                        probe: bool) -> Tuple[float, bool]:
+        """(compile seconds, cache_hit).  With ``probe``, actually compiles
+        the hybrid plan through the LRU cache and reads the hit/miss delta
+        from :func:`plan_cache_info`; otherwise only models the charge."""
+        if scheme != "hybrid" or not self.compile_real_plans:
+            return 0.0, True
+        if probe:
+            before = plan_cache_info()
+            try:
+                compile_hybrid_plan(p)
+                hit = plan_cache_info().hits > before.hits
+            except ValueError:
+                # closed-form-admissible but not executable (r | M fails):
+                # nothing cacheable — charge a fresh compile every time
+                hit = False
+        else:
+            hit = False                      # pessimistic while estimating
+        if hit:
+            return 0.0, True
+        return self.cost_model.plan_compile.seconds(p.N), False
+
+    def choose(self, spec: JobSpec, cluster: ClusterSim) -> Decision:
+        if self.adaptive:
+            best: Optional[Tuple[float, str, int]] = None
+            for scheme, r in self.candidates():
+                est = self.estimate(spec, scheme, r, cluster)
+                if est is not None and (best is None or est < best[0]):
+                    best = (est, scheme, r)
+            if best is None:
+                raise ValueError(f"no admissible (scheme, r) for {spec}")
+            est, scheme, r = best
+        else:
+            scheme, r = self.fixed
+            est = self.estimate(spec, scheme, r, cluster)
+            if est is None:
+                raise ValueError(
+                    f"fixed (scheme, r)={self.fixed} is inadmissible for "
+                    f"{spec}; build the workload catalog with "
+                    f"valid_subfile_counts so baselines cover the stream")
+        p = SchemeParams(K=self.K, P=cluster.topology.P,
+                         Q=spec.Q, N=spec.N, r=r)
+        compile_s, hit = self._compile_charge(p, scheme, probe=True)
+        return Decision(scheme, r, est, compile_s, hit)
+
+
+class MultiJobScheduler:
+    """Admits an arrival stream into a :class:`ClusterSim` under a queueing
+    policy, consulting a :class:`SchemeChooser` per admission (decisions see
+    the cluster state AT ADMISSION, so queued jobs are re-priced when
+    capacity frees up)."""
+
+    def __init__(self, chooser: SchemeChooser, policy: str = "fifo",
+                 max_concurrent: int = 4) -> None:
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}")
+        if max_concurrent < 1:
+            raise ValueError("max_concurrent must be >= 1")
+        self.chooser = chooser
+        self.policy = policy
+        self.max_concurrent = max_concurrent
+        self.decisions: Dict[int, Decision] = {}
+        self._queue: List[Tuple[int, JobSpec]] = []
+        self._running = 0
+        self._seq = 0
+        self._service_by_kind: Dict[str, float] = {}
+
+    # ---- policy ordering ---------------------------------------------------
+
+    def _pop_next(self, cluster: ClusterSim) -> Tuple[int, JobSpec]:
+        if self.policy == "fifo":
+            idx = 0
+        elif self.policy == "srpt":
+            ests = [min((e for e in (self.chooser.estimate(s, sch, r, cluster)
+                                     for sch, r in self.chooser.candidates())
+                         if e is not None), default=float("inf"))
+                    for _, s in self._queue]
+            idx = int(np.argmin(ests))
+        else:                                   # fair: least attained service
+            attained = [self._service_by_kind.get(s.name, 0.0)
+                        for _, s in self._queue]
+            idx = int(np.argmin(attained))
+        return self._queue.pop(idx)
+
+    # ---- driving the sim ---------------------------------------------------
+
+    def run(self, jobs: Sequence[JobSpec],
+            cluster: ClusterSim) -> List[JobStats]:
+        cluster.on_job_done = lambda stats: self._job_done(cluster)
+        for spec in sorted(jobs, key=lambda s: s.arrival):
+            cluster.at(spec.arrival,
+                       lambda s=spec: self._arrive(s, cluster), "arrival")
+        return cluster.run()
+
+    def _arrive(self, spec: JobSpec, cluster: ClusterSim) -> None:
+        self._queue.append((self._seq, spec))
+        self._seq += 1
+        self._drain(cluster)
+
+    def _job_done(self, cluster: ClusterSim) -> None:
+        self._running -= 1
+        self._drain(cluster)
+
+    def _drain(self, cluster: ClusterSim) -> None:
+        while self._queue and self._running < self.max_concurrent:
+            _, spec = self._pop_next(cluster)
+            d = self.chooser.choose(spec, cluster)
+            job_id = cluster.submit(spec, d.scheme, d.r,
+                                    compile_s=d.compile_s)
+            self.decisions[job_id] = d
+            self._service_by_kind[spec.name] = (
+                self._service_by_kind.get(spec.name, 0.0) + d.est_jct)
+            self._running += 1
+
+
+def run_scheduled(jobs: Sequence[JobSpec], cluster: ClusterSim,
+                  chooser: SchemeChooser, policy: str = "fifo",
+                  max_concurrent: int = 4
+                  ) -> Tuple[List[JobStats], MultiJobScheduler]:
+    """Convenience wrapper: schedule ``jobs`` on ``cluster``; returns
+    (per-job stats, the scheduler with its per-job decisions)."""
+    sched = MultiJobScheduler(chooser, policy, max_concurrent)
+    stats = sched.run(jobs, cluster)
+    return stats, sched

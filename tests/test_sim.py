@@ -1,0 +1,396 @@
+"""Cluster-simulator tests: traffic export vs closed forms, determinism
+(same seed => bit-identical trace), monotonicity properties (contention and
+stragglers never DECREASE simulated JCT), calibration fitting, plan-cache
+introspection, workload generators and scheduler behavior."""
+import numpy as np
+import pytest
+
+from repro.core.assignment import (coded_assignment, hybrid_assignment,
+                                   uncoded_assignment)
+from repro.core.coded_collectives import (compile_hybrid_plan,
+                                          configure_plan_cache,
+                                          plan_cache_clear, plan_cache_info,
+                                          plan_transfer_matrices)
+from repro.core.costs import cost_table, hybrid_cost
+from repro.core.params import SchemeParams
+from repro.core.shuffle_plan import plan_stage_traffic, scheme_stage_traffic
+from repro.sim import (BurstyWorkload, ClusterSim, CostModel,
+                       DeterministicSlowdown, DiurnalWorkload,
+                       ExponentialTail, JobSpec, PhaseCoeffs,
+                       PoissonWorkload, RackCorrelated, RackTopology,
+                       SchemeChooser, calibrate, default_catalog,
+                       measurements_from_pipeline_bench, run_scheduled,
+                       simulate_single_job, valid_subfile_counts)
+
+P9 = SchemeParams(9, 3, 18, 72, 2)
+
+
+# ---------------------------------------------------------------------------
+# Traffic export: enumerated schedule == closed forms, per stage & per rack
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme,mk", [
+    ("uncoded", uncoded_assignment), ("coded", coded_assignment),
+    ("hybrid", hybrid_assignment)])
+def test_stage_traffic_enumerated_equals_closed_form(scheme, mk):
+    enum = plan_stage_traffic(mk(P9))
+    closed = scheme_stage_traffic(P9, scheme)
+    assert [s.stage for s in enum] == [s.stage for s in closed]
+    for a, b in zip(enum, closed):
+        assert a.cross_pairs == pytest.approx(b.cross_pairs)
+        assert a.intra_pairs_per_rack == pytest.approx(b.intra_pairs_per_rack)
+    c = cost_table(P9)[scheme]
+    assert sum(s.cross_pairs for s in enum) == pytest.approx(c.cross)
+    assert sum(s.intra_pairs for s in enum) == pytest.approx(c.intra)
+
+
+def test_plan_transfer_matrices_match_closed_forms():
+    p = SchemeParams(8, 4, 16, 48, 2)
+    plan = compile_hybrid_plan(p)
+    c = hybrid_cost(p)
+    tm = plan_transfer_matrices(plan, "coded")
+    assert tm["cross_rack_matrix"].sum() == pytest.approx(c.cross)
+    assert np.diag(tm["cross_rack_matrix"]).sum() == 0
+    assert tm["intra_per_rack"].sum() == pytest.approx(c.intra)
+    # unicast wire format moves r copies of every coded packet
+    tmu = plan_transfer_matrices(plan, "unicast")
+    assert tmu["cross_rack_matrix"].sum() == pytest.approx(c.cross * p.r)
+
+
+# ---------------------------------------------------------------------------
+# Determinism: same seed => bit-identical event trace and JCTs
+# ---------------------------------------------------------------------------
+
+def _scheduled_run(seed, policy="srpt"):
+    jobs = PoissonWorkload(default_catalog(8, 4), n_jobs=25,
+                           rate=3.0).generate(seed=seed)
+    topo = RackTopology(P=4, cross_bw=1e5, intra_bw=1e6)
+    cluster = ClusterSim(topo, K=8, cost_model=CostModel(
+        map=PhaseCoeffs(1e-3, 1e-8)), stragglers=ExponentialTail(0.5),
+        seed=seed)
+    chooser = SchemeChooser(8, cost_model=cluster.cost_model)
+    stats, sched = run_scheduled(jobs, cluster, chooser, policy=policy,
+                                 max_concurrent=3)
+    decisions = [(sched.decisions[s.job_id].scheme,
+                  sched.decisions[s.job_id].r) for s in stats]
+    return [s.jct for s in stats], list(cluster.trace), decisions
+
+
+def test_same_seed_bit_identical():
+    jcts1, trace1, dec1 = _scheduled_run(seed=11)
+    jcts2, trace2, dec2 = _scheduled_run(seed=11)
+    assert jcts1 == jcts2          # exact float equality, not approx
+    assert trace1 == trace2
+    assert dec1 == dec2
+
+
+def test_different_seed_differs():
+    jcts1, _, _ = _scheduled_run(seed=11)
+    jcts2, _, _ = _scheduled_run(seed=12)
+    assert jcts1 != jcts2
+
+
+@pytest.mark.parametrize("policy", ["fifo", "srpt", "fair"])
+def test_policies_complete_all_jobs(policy):
+    jcts, trace, decisions = _scheduled_run(seed=3, policy=policy)
+    assert len(jcts) == 25
+    assert all(j > 0 for j in jcts)
+    assert sum(1 for t in trace if t[1] == "job_done") == 25
+
+
+# ---------------------------------------------------------------------------
+# Zero-contention anchor on a non-Table-I config (Table I grid is covered
+# by tests/test_table1_regression.py)
+# ---------------------------------------------------------------------------
+
+def test_straggler_barrier_adds_exactly_max_factor():
+    """Compute phases end at the SLOWEST server: a deterministic 3x
+    slowdown of one server must scale the map phase by exactly 3."""
+    cost = CostModel(map=PhaseCoeffs(0.0, 1e-6))
+    spec = JobSpec("histogram", 72, 18, 1)
+    topo = RackTopology(P=3, cross_bw=1e5, intra_bw=1e6)
+    base = simulate_single_job(spec, topo, 9, "hybrid", 2, cost_model=cost)
+    factors = (1.0,) * 8 + (3.0,)
+    slow = simulate_single_job(spec, topo, 9, "hybrid", 2, cost_model=cost,
+                               stragglers=DeterministicSlowdown(factors))
+    t_map = base.phase_times["map"]
+    assert slow.phase_times["map"] == pytest.approx(3 * t_map)
+    assert slow.jct == pytest.approx(base.jct + 2 * t_map)
+
+
+def test_rack_correlated_factors_shape():
+    rng = np.random.default_rng(0)
+    f = RackCorrelated(p_slow=0.5, factor=4.0).factors(rng, K=12, P=3)
+    assert f.shape == (12,)
+    assert set(np.unique(f)) <= {1.0, 4.0}
+    # whole racks move together
+    assert all(len(set(f[i * 4:(i + 1) * 4])) == 1 for i in range(3))
+
+
+# ---------------------------------------------------------------------------
+# Monotonicity: contention / stragglers / less bandwidth never decrease JCT
+# ---------------------------------------------------------------------------
+
+def _jct(slowdown=1.0, bw_scale=1.0, background_jobs=0):
+    K = 8
+    spec = JobSpec("histogram", 48, 16, 1)
+    topo = RackTopology(P=4, cross_bw=1e4 * bw_scale,
+                        intra_bw=1e5 * bw_scale)
+    cost = CostModel(map=PhaseCoeffs(1e-4, 1e-8),
+                     reduce=PhaseCoeffs(1e-4, 1e-8))
+    sim = ClusterSim(topo, K, cost,
+                     DeterministicSlowdown((slowdown,) + (1.0,) * (K - 1)),
+                     seed=0)
+    target = sim.submit(spec, "hybrid", 2, time=0.0)
+    for b in range(background_jobs):
+        sim.submit(JobSpec("histogram", 48, 16, 1), "hybrid", 2, time=0.0)
+    stats = {s.job_id: s for s in sim.run()}
+    return stats[target].jct
+
+
+def test_run_until_truncation_resumes_consistently():
+    """A run truncated at an arbitrary horizon and then resumed must finish
+    with the same JCTs as one uninterrupted run, with a monotone trace."""
+    def make_sim():
+        topo = RackTopology(P=3, cross_bw=1e3, intra_bw=1e4)
+        sim = ClusterSim(topo, K=9, cost_model=CostModel(
+            map=PhaseCoeffs(1e-3, 1e-8)))
+        sim.submit(JobSpec("histogram", 72, 18, 1), "hybrid", 2, time=0.0)
+        sim.submit(JobSpec("histogram", 72, 18, 1), "hybrid", 2, time=0.05)
+        return sim
+
+    full = make_sim()
+    want = [s.jct for s in full.run()]
+    half_t = want[0] * 0.4
+    resumed = make_sim()
+    resumed.run(until=half_t)
+    assert resumed.now == half_t
+    got = [s.jct for s in resumed.run()]
+    assert got == pytest.approx(want, rel=1e-9)
+    times = [t for t, _, _ in resumed.trace]
+    assert times == sorted(times)
+
+
+def test_monotone_examples():
+    base = _jct()
+    assert _jct(slowdown=2.5) >= base
+    assert _jct(bw_scale=0.5) >= base
+    assert _jct(background_jobs=2) >= base
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(slowdown=st.floats(1.0, 10.0),
+           bw_scale=st.floats(0.05, 1.0),
+           background=st.integers(0, 4))
+    def test_contention_and_stragglers_never_decrease_jct(
+            slowdown, bw_scale, background):
+        """Hardening knobs only ever hurt: any straggler slowdown, any
+        bandwidth reduction, any amount of competing load must yield
+        JCT >= the unloaded baseline, and each knob is monotone from the
+        baseline."""
+        base = _jct()
+        worse = _jct(slowdown=slowdown, bw_scale=bw_scale,
+                     background_jobs=background)
+        assert worse >= base * (1 - 1e-9)
+        assert _jct(slowdown=slowdown) >= base * (1 - 1e-9)
+        assert _jct(bw_scale=bw_scale) >= base * (1 - 1e-9)
+        assert _jct(background_jobs=background) >= base * (1 - 1e-9)
+else:                                                  # pragma: no cover
+    def test_contention_and_stragglers_never_decrease_jct():
+        pytest.importorskip(
+            "hypothesis",
+            reason="property tests need hypothesis (pip install .[test])")
+
+
+# ---------------------------------------------------------------------------
+# Calibration
+# ---------------------------------------------------------------------------
+
+def test_calibrate_recovers_affine_coeffs():
+    alpha, beta = 3e-3, 7e-9
+    rows = [{"work": {"map": w, "reduce": w / 2},
+             "seconds": {"map": alpha + beta * w,
+                         "reduce": alpha + 2 * beta * (w / 2)}}
+            for w in (1e4, 1e5, 1e6, 1e7)]
+    model = calibrate(rows)
+    assert model.map.alpha == pytest.approx(alpha, rel=1e-6)
+    assert model.map.beta == pytest.approx(beta, rel=1e-6)
+    assert model.reduce.beta == pytest.approx(2 * beta, rel=1e-6)
+    assert model.pack.beta == 0.0                      # absent phase -> zero
+
+
+def test_calibrate_from_pipeline_bench_rows():
+    report = {"results": [
+        {"N": 96, "Q": 16, "d": 8, "r": 2,
+         "legacy": {"phases_s": {"map_to_host": 0.012,
+                                 "host_pack_upload": 0.024,
+                                 "shuffle_reduce": 0.05}}},
+        {"N": 192, "Q": 16, "d": 8, "r": 2,
+         "legacy": {"phases_s": {"map_to_host": 0.024,
+                                 "host_pack_upload": 0.048,
+                                 "shuffle_reduce": 0.1}}},
+    ]}
+    rows = measurements_from_pipeline_bench(report)
+    model = calibrate(rows)
+    assert model.map.beta > 0 and model.pack.beta > 0
+    # pure rate data: secs double when work doubles => alpha ~ 0
+    assert model.map.alpha == pytest.approx(0.0, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache introspection (configurable LRU)
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_info_and_configurable_maxsize():
+    try:
+        configure_plan_cache(2)
+        p1 = SchemeParams(8, 4, 16, 48, 2)
+        p2 = SchemeParams(8, 4, 16, 96, 2)
+        p3 = SchemeParams(8, 4, 16, 144, 2)
+        assert plan_cache_info().maxsize == 2
+        compile_hybrid_plan(p1)
+        compile_hybrid_plan(p1)
+        info = plan_cache_info()
+        assert (info.hits, info.misses, info.currsize) == (1, 1, 1)
+        compile_hybrid_plan(p2)
+        compile_hybrid_plan(p3)                 # evicts p1 (maxsize 2)
+        compile_hybrid_plan(p1)
+        info = plan_cache_info()
+        assert info.misses == 4 and info.currsize == 2
+        plan_cache_clear()
+        assert plan_cache_info().currsize == 0
+    finally:
+        configure_plan_cache()                  # restore default
+
+
+def test_plan_cache_maxsize_env(monkeypatch):
+    try:
+        monkeypatch.setenv("REPRO_PLAN_CACHE_MAXSIZE", "7")
+        configure_plan_cache()
+        assert plan_cache_info().maxsize == 7
+    finally:
+        monkeypatch.delenv("REPRO_PLAN_CACHE_MAXSIZE", raising=False)
+        configure_plan_cache()
+
+
+# ---------------------------------------------------------------------------
+# Workloads
+# ---------------------------------------------------------------------------
+
+def test_valid_subfile_counts_admit_all_candidates():
+    for n in valid_subfile_counts(8, 4, rs=(1, 2, 3), coded_rs=(2,)):
+        for r in (1, 2, 3):
+            SchemeParams(8, 4, 16, n, r).validate_hybrid()
+        SchemeParams(8, 4, 16, n, 2).validate_coded()
+        SchemeParams(8, 4, 16, n, 1).validate_uncoded()
+
+
+@pytest.mark.parametrize("wl_cls,kwargs", [
+    (PoissonWorkload, {"rate": 2.0}),
+    (BurstyWorkload, {"burst_size": 3, "burst_gap": 0.5}),
+    (DiurnalWorkload, {"base_rate": 1.0, "peak_rate": 5.0, "period": 60.0}),
+])
+def test_workload_generators_deterministic_and_sorted(wl_cls, kwargs):
+    wl = wl_cls(default_catalog(8, 4), n_jobs=30, **kwargs)
+    jobs1, jobs2 = wl.generate(seed=5), wl.generate(seed=5)
+    assert jobs1 == jobs2
+    assert len(jobs1) == 30
+    arrivals = [j.arrival for j in jobs1]
+    assert arrivals == sorted(arrivals)
+    assert wl.generate(seed=6) != jobs1
+
+
+def test_bursty_arrivals_batch():
+    wl = BurstyWorkload(default_catalog(8, 4), n_jobs=9, burst_size=3,
+                        burst_gap=2.0)
+    arrivals = [j.arrival for j in wl.generate(seed=0)]
+    assert arrivals == [0.0] * 3 + [2.0] * 3 + [4.0] * 3
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: adaptive choice tracks the bandwidth regime
+# ---------------------------------------------------------------------------
+
+def _choose(cross_bw):
+    topo = RackTopology(P=4, cross_bw=cross_bw, intra_bw=1e6)
+    cluster = ClusterSim(topo, K=8)
+    chooser = SchemeChooser(8)
+    return chooser.choose(JobSpec("histogram", 336, 16, 4), cluster)
+
+
+def test_chooser_adapts_to_bandwidth_ratio():
+    slow_cross = _choose(cross_bw=1e4)
+    assert slow_cross.scheme == "hybrid"    # scarce root -> min cross traffic
+    fast_cross = _choose(cross_bw=1e6)
+    assert fast_cross.scheme in ("coded", "uncoded")  # parity -> min total
+
+
+def test_chooser_charges_compile_once_then_hits_cache():
+    plan_cache_clear()
+    topo = RackTopology(P=4, cross_bw=1e4, intra_bw=1e6)
+    cluster = ClusterSim(topo, K=8, cost_model=CostModel(
+        plan_compile=PhaseCoeffs(1e-2, 0.0)))
+    chooser = SchemeChooser(8, cost_model=cluster.cost_model)
+    spec = JobSpec("histogram", 336, 16, 4)
+    first = chooser.choose(spec, cluster)
+    assert first.scheme == "hybrid"
+    assert not first.cache_hit and first.compile_s == pytest.approx(1e-2)
+    second = chooser.choose(spec, cluster)
+    assert second.cache_hit and second.compile_s == 0.0
+
+
+def test_fixed_chooser_is_a_baseline():
+    topo = RackTopology(P=4, cross_bw=1e4, intra_bw=1e6)
+    cluster = ClusterSim(topo, K=8)
+    chooser = SchemeChooser(8, adaptive=False, fixed=("uncoded", 1))
+    d = chooser.choose(JobSpec("histogram", 336, 16, 4), cluster)
+    assert (d.scheme, d.r) == ("uncoded", 1)
+
+
+def test_fixed_chooser_rejects_inadmissible_job_clearly():
+    cluster = ClusterSim(RackTopology(P=4, cross_bw=1e4, intra_bw=1e6), K=8)
+    chooser = SchemeChooser(8, adaptive=False, fixed=("hybrid", 3))
+    # C(4,3) = 4 does not divide N*P/K = 10
+    with pytest.raises(ValueError, match="inadmissible"):
+        chooser.choose(JobSpec("histogram", 20, 16, 1), cluster)
+
+
+def test_chooser_probe_tolerates_non_executable_plan():
+    """N=16, r=3: closed-form admissible (C(4,3) | 8) but the EXECUTABLE
+    plan needs r | M (3 does not divide 2) — the probe compile must degrade
+    to a modeled compile charge, not crash the stream."""
+    cluster = ClusterSim(RackTopology(P=4, cross_bw=1e4, intra_bw=1e6), K=8)
+    chooser = SchemeChooser(8, adaptive=False, fixed=("hybrid", 3))
+    d = chooser.choose(JobSpec("histogram", 16, 16, 1), cluster)
+    assert (d.scheme, d.r, d.cache_hit) == ("hybrid", 3, False)
+
+
+# ---------------------------------------------------------------------------
+# Engine instrumentation feeds the calibration pipeline end to end
+# ---------------------------------------------------------------------------
+
+def test_measure_phase_timings_feeds_calibrate():
+    from repro.distributed.meshes import make_mesh
+    from repro.mapreduce.engine import measure_phase_timings
+    from repro.mapreduce.jobs import histogram_job
+
+    p = SchemeParams(K=1, P=1, Q=4, N=6, r=1)
+    mesh = make_mesh((1, 1), ("rack", "server"))
+    rng = np.random.default_rng(0)
+    subs = rng.integers(0, 1 << 16, size=(p.N, 64)).astype(np.int32)
+    row = measure_phase_timings(histogram_job(), subs, p, mesh, iters=1)
+    for phase in ("map", "pack", "reduce", "plan_compile"):
+        assert row["seconds"][phase] >= 0.0
+        assert row["work"][phase] > 0.0
+    assert row["work"]["map"] == p.N * p.Q * 1
+    model = calibrate([row])
+    assert model.map.beta >= 0.0 and model.plan_compile.beta >= 0.0
