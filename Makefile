@@ -3,7 +3,7 @@
 # is the full tier-1 suite in one command.
 PYTEST ?= python -m pytest
 
-.PHONY: test test-all bench bench-pipeline bench-sim
+.PHONY: test test-all bench bench-pipeline bench-sim bench-locality
 
 test:
 	$(PYTEST) -q -m "not slow"
@@ -19,3 +19,6 @@ bench-pipeline:
 
 bench-sim:
 	PYTHONPATH=src python benchmarks/sim_bench.py
+
+bench-locality:
+	PYTHONPATH=src python benchmarks/table2_locality.py

@@ -1,13 +1,35 @@
-"""Paper Table II: node/rack data locality of random vs optimization-based
-Map-task assignment under Hybrid Coded MapReduce, for the paper's ten
-(K, P, r_f, N) rows (r = 2 throughout, lambda in (0.5, 1])."""
+"""Paper Table II under the full repro.placement solver suite — locality
+percentages AND time units, multi-trial mean ± std, to BENCH_locality.json.
+
+Sections (all seeded -> deterministic):
+
+  * ``table2`` — for each of the paper's ten (K, P, r_f, N) rows, every
+    registered solver's node/rack locality (mean ± std over ``n_trials``
+    replica-placement instances) plus solver wall clock.  HARD assertions:
+    the ``flow`` solver reproduces the legacy ``table2_experiment``
+    optimized locality EXACTLY (bit-identical draw sequence), ``anneal_jax``
+    (flow-warm-started, i.e. polishing the exact optimum) matches or beats
+    flow on objective and node locality, and every non-random solver beats
+    the random baseline on mean node locality.
+  * ``table2_time_units`` — the ROADMAP item "Table II in time units": each
+    row's random and flow placements run through the cluster simulator
+    (fetch traffic + map imbalance, straggler-free); asserts optimized
+    placement STRICTLY lowers mean JCT on every row.
+"""
 from __future__ import annotations
 
-import time
-from typing import List, Tuple
+from typing import Dict, List, Tuple
 
-from repro.core.locality import table2_experiment
+import numpy as np
+
+try:
+    from ._common import emit_report, make_parser
+except ImportError:                       # run as a script, not a package
+    from _common import emit_report, make_parser
+
 from repro.core.params import SchemeParams
+from repro.placement import (jct_gap, table2_experiment, table2_trials)
+from repro.sim import CostModel, PhaseCoeffs, RackTopology
 
 # (K, P, r_f, N) -> paper's (node_ran, node_opt, rack_ran, rack_opt) in %
 PAPER_ROWS: List[Tuple[Tuple[int, int, int, int], Tuple[float, ...]]] = [
@@ -23,48 +45,125 @@ PAPER_ROWS: List[Tuple[Tuple[int, int, int, int], Tuple[float, ...]]] = [
     ((21, 3, 2, 84), (12, 63, 56, 81)),
 ]
 
+SOLVERS = ("random", "greedy", "flow", "local_search", "anneal_jax")
 
-def run(verbose: bool = True, seed: int = 0) -> List[dict]:
+# time-units cluster: the paper's server-rack regime (root 10x slower than
+# the ToR tier) with a calibrated-magnitude map cost so locality imbalance
+# moves the barrier, straggler-free (the acceptance grid)
+TIME_TOPO = dict(cross_bw=1e4, intra_bw=1e5)
+TIME_COST = CostModel(map=PhaseCoeffs(alpha=0.0, beta=1e-8))
+
+
+def _solver_kwargs(smoke: bool) -> Dict[str, Dict]:
+    return {
+        "anneal_jax": {
+            # polish the exact optimum: the flow warm start guarantees the
+            # matches-or-beats-flow OBJECTIVE invariant, and putting flow
+            # FIRST makes argmax ties return the flow perm itself — so the
+            # node-locality comparison below can never lose to an
+            # equal-objective perm with a different node/rack split
+            "init_solvers": ("flow", "greedy"),
+            "n_chains": 16 if smoke else 64,
+            "n_steps": 200 if smoke else 1000,
+        },
+        "local_search": {"max_sweeps": 5 if smoke else 20},
+    }
+
+
+def run(smoke: bool = False, seed: int = 0, n_trials: int | None = None,
+        verbose: bool = True) -> Dict:
+    if n_trials is None:
+        n_trials = 2 if smoke else 5
+    kw = _solver_kwargs(smoke)
     rows = []
-    print_hdr = True
+    time_rows = []
     for (K, P, r_f, N), paper in PAPER_ROWS:
-        t0 = time.perf_counter()
         p = SchemeParams(K=K, P=P, Q=K, N=N, r=2, r_f=r_f)
-        res = table2_experiment(p, lam=0.8, seed=seed)
+        res = table2_trials(p, lam=0.8, seed=seed, n_trials=n_trials,
+                            solvers=SOLVERS, per_solver_kwargs=kw)
+        s = res.stats
+
+        # --- hard assertions (acceptance criteria) -------------------------
+        # the legacy optimizer must be reproduced EXACTLY; one legacy trial
+        # suffices (same master-rng draw order => trial 0 sees the same
+        # replica instance), keeping the duplicate flow solve to 1 per row
+        legacy = table2_experiment(p, seed=seed, trials=1)
+        t0_flow, t0_ran = res.trials[0]["flow"], res.trials[0]["random"]
+        assert (t0_flow.node_locality, t0_flow.rack_locality) == \
+            (legacy.node_opt, legacy.rack_opt), \
+            f"flow diverged from the legacy optimizer on {(K, P, r_f, N)}"
+        assert t0_ran.node_locality == legacy.node_random
+        a, f = s["anneal_jax"], s["flow"]
+        assert a.objective_mean >= f.objective_mean - 1e-6, \
+            f"anneal lost to flow on {(K, P, r_f, N)}"
+        assert a.node_mean >= f.node_mean - 1e-9
+        for name in SOLVERS:
+            if name != "random":
+                assert s[name].node_mean > s["random"].node_mean, \
+                    f"{name} did not beat random on {(K, P, r_f, N)}"
+
         rows.append({
-            "params": (K, P, r_f, N),
-            "node_ran": 100 * res.node_random, "node_opt": 100 * res.node_opt,
-            "rack_ran": 100 * res.rack_random, "rack_opt": 100 * res.rack_opt,
-            "paper": paper,
-            "s": time.perf_counter() - t0,
+            "params": [K, P, r_f, N], "paper_pct": list(paper),
+            "n_trials": n_trials,
+            "solvers": {name: s[name].as_dict() for name in SOLVERS},
         })
+
+        # --- time units: simulate trial placements, straggler-free ---------
+        topo = RackTopology(P=P, **TIME_TOPO)
+        jr, jo = [], []
+        for trial in res.trials:
+            r_ran, r_opt = jct_gap(trial["flow"], trial["random"], topo,
+                                   cost_model=TIME_COST)
+            jr.append(r_ran)
+            jo.append(r_opt)
+        mean_ran, mean_opt = float(np.mean(jr)), float(np.mean(jo))
+        assert mean_opt < mean_ran, \
+            f"optimized placement did not lower JCT on {(K, P, r_f, N)}"
+        time_rows.append({
+            "params": [K, P, r_f, N],
+            "mean_jct_random": mean_ran, "mean_jct_flow": mean_opt,
+            "speedup": mean_ran / mean_opt,
+            "node_random": s["random"].node_mean,
+            "node_flow": s["flow"].node_mean,
+        })
+
         if verbose:
-            if print_hdr:
-                print(f"{'(K,P,rf,N)':16s} {'node ran/opt':>14s} "
-                      f"{'rack ran/opt':>14s}   paper(n-ran n-opt r-ran "
-                      "r-opt)")
-                print_hdr = False
             r = rows[-1]
             print(f"{str((K, P, r_f, N)):16s} "
-                  f"{r['node_ran']:5.1f}/{r['node_opt']:5.1f}% "
-                  f"{r['rack_ran']:6.1f}/{r['rack_opt']:5.1f}%   "
-                  + " ".join(f"{v:5.1f}" for v in paper))
+                  + " | ".join(
+                      f"{n}: {100 * s[n].node_mean:4.1f}±"
+                      f"{100 * s[n].node_std:3.1f}%"
+                      for n in ("random", "greedy", "flow", "anneal_jax"))
+                  + f" | jct {mean_ran:.4f}->{mean_opt:.4f}s "
+                  f"({mean_ran / mean_opt:.2f}x)")
+
     if verbose:
-        gains = [r["node_opt"] - r["node_ran"] for r in rows]
-        print(f"mean node-locality gain (opt - random): "
-              f"{sum(gains) / len(gains):.1f} points "
-              "(paper's qualitative claim reproduced; exact cells depend on "
-              "the paper's unpublished replica-placement seeds)")
-    return rows
+        walls = {n: float(np.mean([r["solvers"][n]["wall_s_mean"]
+                                   for r in rows])) for n in SOLVERS}
+        print("mean solver wall clock: "
+              + ", ".join(f"{n} {w * 1e3:.1f}ms" for n, w in walls.items()))
+        print("all rows: flow == legacy optimum exactly; anneal >= flow; "
+              "all solvers beat random; optimized JCT < random JCT")
+    return {
+        "n_trials": n_trials, "lam": 0.8,
+        "table2": rows,
+        "time_units_cluster": {**TIME_TOPO,
+                               "map_beta": TIME_COST.map.beta},
+        "table2_time_units": time_rows,
+        "all_assertions_passed": True,
+    }
 
 
 def main() -> None:
-    for r in run(verbose=False):
-        K, P, rf, N = r["params"]
-        print(f"table2_{K}_{P}_{rf}_{N},{r['s'] * 1e6:.0f},"
-              f"node {r['node_ran']:.0f}->{r['node_opt']:.0f} "
-              f"rack {r['rack_ran']:.0f}->{r['rack_opt']:.0f}")
+    ap = make_parser(__doc__, "BENCH_locality.json")
+    ap.add_argument("--trials", type=int, default=None,
+                    help="replica-placement instances per row "
+                         "(default 5; 2 under --smoke)")
+    args = ap.parse_args()
+    report = run(smoke=args.smoke, seed=args.seed, n_trials=args.trials)
+    emit_report(report, "locality", args.out, smoke=args.smoke,
+                seed=args.seed)
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -4,8 +4,15 @@ two-stage shuffle, validated bit-exactly against the dense oracle — swept
 over the map-replication factor r in {1, 2, 3}, the paper's
 computation/communication tradeoff axis.
 
-    PYTHONPATH=src python examples/coded_wordcount.py
+``--placement {random,greedy,anneal}`` additionally runs each r under a
+Section-IV locality-aware placement (repro.placement): an HDFS-style
+replica draw, the chosen solver's slot permutation threaded into the
+executable plan, and the achieved node/rack locality printed next to the
+communication costs.
+
+    PYTHONPATH=src python examples/coded_wordcount.py [--placement greedy]
 """
+import argparse
 import os
 
 os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=12 "
@@ -22,12 +29,23 @@ from repro.mapreduce.engine import (run_job,                  # noqa: E402
                                     run_job_distributed)
 from repro.mapreduce.jobs import histogram_job                # noqa: E402
 
+PLACEMENT_SOLVERS = {"random": "random", "greedy": "greedy",
+                     "anneal": "anneal_jax"}
+
+ap = argparse.ArgumentParser(description=__doc__)
+ap.add_argument("--placement", choices=sorted(PLACEMENT_SOLVERS),
+                default=None,
+                help="run each r under a locality-aware placement and "
+                     "print the achieved node/rack locality")
+ap.add_argument("--seed", type=int, default=7)
+args = ap.parse_args()
+
 # 3 racks x 4 servers; N=96 admits every replication factor r in {1, 2, 3}
 p = SchemeParams(K=12, P=3, Q=24, N=96, r=2)
 mesh = make_mesh((p.P, p.Kr), ("rack", "server"))
 print(f"mesh: {p.P} racks x {p.Kr} servers = {p.K} devices")
 
-key = jax.random.PRNGKey(7)
+key = jax.random.PRNGKey(args.seed)
 subfiles = np.asarray(
     jax.random.randint(key, (p.N, 1024), 0, 1 << 16, dtype=jnp.int32))
 job = histogram_job()
@@ -36,17 +54,33 @@ oracle = run_job(job, jnp.asarray(subfiles), p, scheme="hybrid",
                  count_messages=True)
 unc = uncoded_cost(p)
 
+loc_hdr = " " + f"{'node/rack local':>16s}" if args.placement else ""
 print(f"\n{'r':>3} {'cross <k,v>':>12} {'intra <k,v>':>12} "
-      f"{'vs uncoded cross':>17}")
+      f"{'vs uncoded cross':>17}{loc_hdr}")
 for r in (1, 2, 3):
-    dist = run_job_distributed(job, subfiles, p, mesh, r=r)
+    placement = None
+    loc_col = ""
+    if args.placement:
+        import dataclasses
+
+        from repro.placement import place_replicas, solve
+        p_r = dataclasses.replace(p, r=r)
+        rng = np.random.default_rng(args.seed + r)
+        replicas = place_replicas(p_r, rng)
+        placement = solve(p_r, replicas, PLACEMENT_SOLVERS[args.placement],
+                          rng=rng)
+        loc_col = (f" {100 * placement.node_locality:7.1f}/"
+                   f"{100 * placement.rack_locality:5.1f}%")
+    dist = run_job_distributed(job, subfiles, p, mesh, r=r,
+                               placement=placement)
     np.testing.assert_array_equal(np.asarray(dist.outputs),
                                   np.asarray(oracle.outputs))
     assert int(dist.outputs.sum()) == p.N * 1024      # token conservation
     ratio = (unc.cross / dist.cross_cost if dist.cross_cost
              else float("inf"))
     print(f"{r:>3} {dist.cross_cost:>12.0f} {dist.intra_cost:>12.0f} "
-          f"{ratio:>16.2f}x")
-print("\nevery r: distributed two-stage shuffle == dense oracle (bit-exact)")
+          f"{ratio:>16.2f}x{loc_col}")
+print("\nevery r: distributed two-stage shuffle == dense oracle (bit-exact)"
+      + (" under the optimized placement" if args.placement else ""))
 print(f"r=2 enumerated schedule == closed form: "
       f"cross {oracle.cross_cost:.0f}, intra {oracle.intra_cost:.0f}")

@@ -61,6 +61,11 @@ class Assignment:
         """Number of map tasks executed at each server."""
         return self.incidence().sum(axis=0)
 
+    def rack_load(self) -> np.ndarray:
+        """Number of map tasks executed in each rack ([P] int64)."""
+        per_server = self.map_load()
+        return per_server.reshape(self.params.P, self.params.Kr).sum(axis=1)
+
 
 # ---------------------------------------------------------------------------
 # Structural enumerations
@@ -85,6 +90,14 @@ def hybrid_slots(params: SchemeParams) -> List[Tuple[int, int, int]]:
             for w in range(params.M):
                 slots.append((layer, t_idx, w))
     return slots
+
+
+def hybrid_group_of_slot(params: SchemeParams) -> np.ndarray:
+    """Group index of every structural slot ([N] int64): slot s belongs to
+    (layer, rack-subset) group s // M — :func:`hybrid_slots` is group-major
+    with M slots per group.  The basic index map shared by every Section-IV
+    objective and solver (:mod:`repro.placement`)."""
+    return np.arange(params.N, dtype=np.int64) // params.M
 
 
 def slot_servers(params: SchemeParams, layer: int, t_idx: int) -> Tuple[int, ...]:

@@ -48,7 +48,7 @@ import dataclasses
 import functools
 import os
 from math import comb
-from typing import Dict
+from typing import Dict, Sequence, Tuple
 
 import numpy as np
 
@@ -96,18 +96,26 @@ class HybridShufflePlan:
     mcast_known_rack: np.ndarray
 
 
-def _compile_hybrid_plan_impl(p: SchemeParams) -> HybridShufflePlan:
+def _compile_hybrid_plan_impl(p: SchemeParams,
+                              perm: Tuple[int, ...] | None = None
+                              ) -> HybridShufflePlan:
     """Uncached plan compilation for any r in [1, P] with r | M.
 
     All tables are built by vectorized index arithmetic on the structural
     (layer, subset, w) coordinates; cost is O(N + P^2 * C(P, r)).
+
+    ``perm`` places subfile ``perm[slot]`` into each structural slot (the
+    Section-IV locality degree of freedom); every positional table is
+    perm-independent — only the subfile-id tables (``local_subfiles``,
+    ``layer_subfiles``) change, so a locality-optimized plan shuffles
+    byte-identically to the canonical one.
     """
     p.validate_hybrid()
     r = p.r
     M = p.M
     if M % r != 0:
         raise ValueError(f"executable hybrid plan needs r | M; M={M} r={r}")
-    a = hybrid_assignment(p)
+    a = hybrid_assignment(p, perm=list(perm) if perm is not None else None)
     subsets = np.asarray(rack_subsets(p.P, r), dtype=np.int64)   # [n_sub, r]
     n_sub = subsets.shape[0]
     slot = np.asarray(a.meta["slot_of_subfile"], dtype=np.int64)  # [N, 3]
@@ -249,11 +257,17 @@ def configure_plan_cache(maxsize: int | None = None):
 _PLAN_CACHE = configure_plan_cache()
 
 
-def compile_hybrid_plan(p: SchemeParams) -> HybridShufflePlan:
+def compile_hybrid_plan(p: SchemeParams,
+                        perm: Sequence[int] | None = None
+                        ) -> HybridShufflePlan:
     """LRU-cached plan compilation (see :func:`_compile_hybrid_plan_impl`);
-    repeated calls for a seen :class:`SchemeParams` return the SAME plan
-    object in O(1)."""
-    return _PLAN_CACHE(p)
+    repeated calls for a seen (:class:`SchemeParams`, perm) return the SAME
+    plan object in O(1).  ``perm`` is the Section-IV slot permutation of a
+    locality-optimized placement (``repro.placement``); None is the
+    canonical identity layout."""
+    if perm is None:
+        return _PLAN_CACHE(p)
+    return _PLAN_CACHE(p, tuple(int(x) for x in perm))
 
 
 def plan_cache_info():

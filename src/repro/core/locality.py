@@ -1,282 +1,31 @@
-"""Section IV — data-locality-aware Map-task assignment.
+"""Section IV — data-locality-aware Map-task assignment (compat facade).
 
-Valid Hybrid-Coded-MapReduce assignments are exactly the permutations of
-subfiles over the structural slots (layer, rack-subset, w); Theorem IV.1's
-four constraints characterize them.  Choosing the permutation that maximizes
-
-    sum_i C(i, pair_i),   C(i,j,k) = lam*NodeLocality + (1-lam)*RackLocality
-
-is a transportation problem: N subfiles -> (layer, rack-subset) groups of
-capacity M, with a per-(subfile, group) score.  Flow integrality makes the
-LP optimum integral, so min-cost max-flow solves the integer program of
-Theorem IV.1 EXACTLY (the paper leaves the solver unspecified).
-
-A greedy solver and the random baseline of Table II are also provided.
+The locality layer grew into the :mod:`repro.placement` subsystem —
+general-r objectives, a solver registry (random / greedy / flow /
+local_search / anneal_jax), structured replica placements, joint
+replica+assignment optimization and a simulator bridge.  This module keeps
+the original Section-IV API importable from ``repro.core.locality``:
+every name below is a re-export, and ``optimal_perm`` is the registry's
+``flow`` solver (min-cost max-flow, exact for Theorem IV.1).
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-from math import comb
-from typing import List, Sequence, Tuple
+from ..placement.experiments import (LocalityResult, table2_experiment,
+                                     table2_trials)
+from ..placement.objectives import (group_servers, locality_incidence,
+                                    locality_matrix, locality_of_perm,
+                                    place_replicas)
+from ..placement.solvers import (flow_perm, greedy_perm, groups_to_perm,
+                                 random_perm)
 
-import numpy as np
+# historical names
+optimal_perm = flow_perm
+_groups_to_perm = groups_to_perm
+_locality_incidence = locality_incidence
 
-from .assignment import rack_subsets, slot_servers
-from .params import SchemeParams
-
-
-# ---------------------------------------------------------------------------
-# Storage replica placement (HDFS-style)
-# ---------------------------------------------------------------------------
-
-def place_replicas(p: SchemeParams, rng: np.random.Generator,
-                   policy: str = "uniform") -> np.ndarray:
-    """Replica locations, shape [N, r_f]; no two replicas share a server.
-
-    ``uniform``: r_f distinct servers uniformly at random (the paper's model).
-    ``hdfs``: first replica uniform; second in a different rack; third in the
-    second's rack on a different server (Hadoop default for r_f = 3).
-
-    Both policies draw all N subfiles' placements in batched ``rng`` calls
-    (the per-subfile Python loop was the Table II setup bottleneck).
-    """
-    if policy == "uniform":
-        # row-wise uniform random permutation of the K servers, truncated to
-        # r_f: identical in distribution to ordered sampling without
-        # replacement (rng.choice(K, r_f, replace=False) per row).
-        return np.argsort(rng.random((p.N, p.K)), axis=1)[:, :p.r_f] \
-            .astype(np.int64)
-    if policy != "hdfs":
-        raise ValueError(policy)
-
-    out = np.zeros((p.N, p.r_f), dtype=np.int64)
-    first = rng.integers(p.K, size=p.N)
-    out[:, 0] = first
-    if p.r_f >= 2:
-        # uniform over the K - Kr servers outside first's rack: draw a rack
-        # offset in [1, P) and a slot in [0, Kr)
-        rack2 = (first // p.Kr + rng.integers(1, p.P, size=p.N)) % p.P
-        out[:, 1] = rack2 * p.Kr + rng.integers(p.Kr, size=p.N)
-    if p.r_f >= 3:
-        # same rack as the second replica, different slot
-        slot3 = (out[:, 1] % p.Kr + rng.integers(1, p.Kr, size=p.N)) % p.Kr
-        out[:, 2] = (out[:, 1] // p.Kr) * p.Kr + slot3
-    for c in range(3, p.r_f):
-        # replicas past the Hadoop triple: uniform over the unchosen servers
-        taken = np.zeros((p.N, p.K), dtype=bool)
-        np.put_along_axis(taken, out[:, :c], True, axis=1)
-        scores = np.where(taken, np.inf, rng.random((p.N, p.K)))
-        out[:, c] = scores.argmin(axis=1)
-    return out
-
-
-# ---------------------------------------------------------------------------
-# Locality measure  C(i, j, k)
-# ---------------------------------------------------------------------------
-
-def group_servers(p: SchemeParams) -> List[Tuple[int, ...]]:
-    """Server tuple of every (layer, rack-subset) group, group-major order
-    matching :func:`repro.core.assignment.hybrid_slots`."""
-    subsets = rack_subsets(p.P, p.r)
-    out = []
-    for layer in range(p.n_layers):
-        for t_idx in range(len(subsets)):
-            out.append(slot_servers(p, layer, t_idx))
-    return out
-
-
-def _locality_incidence(p: SchemeParams, replicas: np.ndarray
-                        ) -> Tuple[np.ndarray, np.ndarray]:
-    """(node[i, g], rack[i, g]) integer hit counts of assigning subfile i to
-    group g: how many of g's servers host a replica of i / sit in a rack that
-    hosts one.  Built as one-hot replica/rack incidence matmuls — the
-    O(N*G*r) Python triple loop collapsed to two [N, K] @ [K, G] products."""
-    groups = np.asarray(group_servers(p), dtype=np.int64)     # [G, r]
-    G = groups.shape[0]
-    # replica one-hot incidences
-    has_server = np.zeros((p.N, p.K), dtype=np.int64)         # [N, K]
-    has_server[np.arange(p.N)[:, None], replicas.astype(np.int64)] = 1
-    has_rack = np.zeros((p.N, p.P), dtype=np.int64)           # [N, P] 0/1
-    has_rack[np.arange(p.N)[:, None], replicas.astype(np.int64) // p.Kr] = 1
-    # group-side incidences: server membership / per-rack server counts
-    g_server = np.zeros((G, p.K), dtype=np.int64)
-    g_server[np.arange(G)[:, None], groups] = 1               # distinct srvs
-    g_rack = np.zeros((G, p.P), dtype=np.int64)
-    np.add.at(g_rack, (np.repeat(np.arange(G), groups.shape[1]),
-                       (groups // p.Kr).ravel()), 1)
-    return has_server @ g_server.T, has_rack @ g_rack.T
-
-
-def locality_matrix(p: SchemeParams, replicas: np.ndarray,
-                    lam: float = 0.8) -> np.ndarray:
-    """C[i, g] = lam*NodeLocality + (1-lam)*RackLocality of assigning subfile
-    i to group g's server set (Section V's measure, generalized to r >= 2)."""
-    if not (0.5 < lam <= 1.0):
-        raise ValueError("paper requires lam in (0.5, 1]")
-    node, rack = _locality_incidence(p, replicas)
-    return lam * node + (1.0 - lam) * rack
-
-
-def locality_of_perm(p: SchemeParams, replicas: np.ndarray,
-                     perm: Sequence[int]) -> Tuple[float, float]:
-    """(node_locality, rack_locality) in [0, 1] — Table II's percentages:
-    fraction of (map-replica, server) placements that are local."""
-    node, rack = _locality_incidence(p, replicas)
-    # slot s belongs to group s // M (hybrid_slots is group-major, M per group)
-    group_of_slot = np.arange(p.N) // p.M
-    perm = np.asarray(perm, dtype=np.int64)
-    denom = p.N * p.r
-    return (int(node[perm, group_of_slot].sum()) / denom,
-            int(rack[perm, group_of_slot].sum()) / denom)
-
-
-# ---------------------------------------------------------------------------
-# Solvers
-# ---------------------------------------------------------------------------
-
-def random_perm(p: SchemeParams, rng: np.random.Generator) -> np.ndarray:
-    """Table II's 'Ran' baseline: an arbitrary valid hybrid assignment."""
-    return rng.permutation(p.N)
-
-
-def greedy_perm(p: SchemeParams, C: np.ndarray) -> np.ndarray:
-    """Greedy: repeatedly place the highest-scoring (subfile, group) pair
-    into a free slot.  Fast, near-optimal; used as a scalable fallback."""
-    n_groups = C.shape[1]
-    cap = np.full(n_groups, p.M, dtype=np.int64)
-    order = np.argsort(-C, axis=None)
-    assigned = np.full(p.N, -1, dtype=np.int64)
-    placed = 0
-    for flat in order:
-        i, g = divmod(int(flat), n_groups)
-        if assigned[i] >= 0 or cap[g] == 0:
-            continue
-        assigned[i] = g
-        cap[g] -= 1
-        placed += 1
-        if placed == p.N:
-            break
-    return _groups_to_perm(p, assigned)
-
-
-def optimal_perm(p: SchemeParams, C: np.ndarray) -> np.ndarray:
-    """Exact solution of Theorem IV.1 via min-cost max-flow (SSP + Dijkstra
-    with Johnson potentials).  Integral by flow integrality."""
-    n, n_groups = C.shape
-    # node ids: 0 = source, 1..n subfiles, n+1..n+n_groups groups, last = sink
-    S, T = 0, n + n_groups + 1
-    n_nodes = T + 1
-    graph: List[List[int]] = [[] for _ in range(n_nodes)]
-    # edge arrays
-    to: List[int] = []
-    cap: List[int] = []
-    cost: List[float] = []
-
-    def add_edge(u: int, v: int, c: int, w: float) -> None:
-        graph[u].append(len(to)); to.append(v); cap.append(c); cost.append(w)
-        graph[v].append(len(to)); to.append(u); cap.append(0); cost.append(-w)
-
-    cmax = float(C.max()) if C.size else 0.0
-    for i in range(n):
-        add_edge(S, 1 + i, 1, 0.0)
-        for g in range(n_groups):
-            # shift costs so all are >= 0 for Dijkstra (maximize C == minimize
-            # cmax - C); the shift is constant per unit flow, so argmin is
-            # unchanged.
-            add_edge(1 + i, 1 + n + g, 1, cmax - float(C[i, g]))
-    for g in range(n_groups):
-        add_edge(1 + n + g, T, p.M, 0.0)
-
-    potential = np.zeros(n_nodes)
-    flow_assigned = np.full(n, -1, dtype=np.int64)
-    INF = float("inf")
-    for _ in range(n):  # one augmentation per subfile (unit flows)
-        dist = np.full(n_nodes, INF)
-        dist[S] = 0.0
-        prev_edge = np.full(n_nodes, -1, dtype=np.int64)
-        pq = [(0.0, S)]
-        while pq:
-            d, u = heapq.heappop(pq)
-            if d > dist[u] + 1e-12:
-                continue
-            for eid in graph[u]:
-                if cap[eid] <= 0:
-                    continue
-                v = to[eid]
-                nd = d + cost[eid] + potential[u] - potential[v]
-                if nd < dist[v] - 1e-12:
-                    dist[v] = nd
-                    prev_edge[v] = eid
-                    heapq.heappush(pq, (nd, v))
-        assert dist[T] < INF, "flow infeasible: check divisibility of N"
-        finite = dist < INF
-        potential[finite] += dist[finite]
-        # augment one unit along S->T
-        v = T
-        while v != S:
-            eid = int(prev_edge[v])
-            cap[eid] -= 1
-            cap[eid ^ 1] += 1
-            v = to[eid ^ 1]
-    # read off subfile -> group assignment
-    for i in range(n):
-        for eid in graph[1 + i]:
-            if to[eid] != S and cap[eid ^ 1] > 0 and eid % 2 == 0:
-                flow_assigned[i] = to[eid] - 1 - n
-                break
-    assert (flow_assigned >= 0).all()
-    return _groups_to_perm(p, flow_assigned)
-
-
-def _groups_to_perm(p: SchemeParams, group_of_subfile: np.ndarray) -> np.ndarray:
-    """Convert a subfile->group map into a slot permutation (slot_index ->
-    subfile), filling each group's M slots in subfile order."""
-    n_groups = int(group_of_subfile.max()) + 1 if len(group_of_subfile) else 0
-    subsets = rack_subsets(p.P, p.r)
-    n_groups = max(n_groups, p.n_layers * len(subsets))
-    perm = np.full(p.N, -1, dtype=np.int64)
-    next_w = np.zeros(n_groups, dtype=np.int64)
-    for i in range(p.N):
-        g = int(group_of_subfile[i])
-        w = int(next_w[g]); next_w[g] += 1
-        assert w < p.M, "group over capacity"
-        slot_index = g * p.M + w
-        perm[slot_index] = i
-    assert (perm >= 0).all()
-    return perm
-
-
-# ---------------------------------------------------------------------------
-# Table II driver
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class LocalityResult:
-    node_random: float
-    rack_random: float
-    node_opt: float
-    rack_opt: float
-    node_greedy: float
-    rack_greedy: float
-
-
-def table2_experiment(p: SchemeParams, lam: float = 0.8, seed: int = 0,
-                      trials: int = 5, policy: str = "uniform",
-                      solver: str = "optimal") -> LocalityResult:
-    """Run Table II's comparison for one row, averaged over ``trials``
-    random replica placements."""
-    rng = np.random.default_rng(seed)
-    acc = np.zeros(6)
-    for _ in range(trials):
-        replicas = place_replicas(p, rng, policy)
-        C = locality_matrix(p, replicas, lam)
-        rp = random_perm(p, rng)
-        op = optimal_perm(p, C) if solver == "optimal" else greedy_perm(p, C)
-        gp = greedy_perm(p, C)
-        nr, rr = locality_of_perm(p, replicas, rp)
-        no, ro = locality_of_perm(p, replicas, op)
-        ng, rg = locality_of_perm(p, replicas, gp)
-        acc += np.array([nr, rr, no, ro, ng, rg])
-    acc /= trials
-    return LocalityResult(*acc.tolist())
+__all__ = [
+    "LocalityResult", "table2_experiment", "table2_trials", "group_servers",
+    "locality_incidence", "locality_matrix", "locality_of_perm",
+    "place_replicas", "flow_perm", "greedy_perm", "groups_to_perm",
+    "random_perm", "optimal_perm",
+]

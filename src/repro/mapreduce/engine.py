@@ -153,7 +153,8 @@ def run_job_distributed(job: MapReduceJob, subfiles: np.ndarray,
                         params: SchemeParams, mesh: Mesh,
                         r: int | None = None, *, fused: bool = True,
                         multicast: str = "unicast",
-                        combine_impl: str = "xla") -> JobResult:
+                        combine_impl: str = "xla",
+                        placement: object | None = None) -> JobResult:
     """Multi-device execution: real all_to_all shuffle (hybrid scheme,
     general map-replication r in [1, P]).
 
@@ -171,10 +172,18 @@ def run_job_distributed(job: MapReduceJob, subfiles: np.ndarray,
     and ``combine_impl`` are forwarded to the shuffle (coded multicast
     packets and the Pallas f(.) kernels — see
     :func:`repro.core.coded_collectives.shuffle_device_body`).
+
+    ``placement`` runs the job under a Section-IV locality-optimized layout:
+    a :class:`repro.placement.PlacementResult` (or a bare slot permutation)
+    whose perm decides which subfile each device maps — the shuffle index
+    tables are permutation-invariant, so outputs are unchanged while each
+    device's map inputs become the placement's (the real-cluster analogue of
+    the simulator's fetch-traffic bridge).
     """
     p = params if r is None or r == params.r else \
         dataclasses.replace(params, r=r)
-    plan = compile_hybrid_plan(p)
+    perm = getattr(placement, "perm", placement)
+    plan = compile_hybrid_plan(p, perm=perm)
     if fused:
         local_subs = jnp.asarray(pack_local_subfiles(subfiles, plan))
         exe = _fused_executable(job, plan, mesh, multicast, combine_impl)

@@ -4,7 +4,11 @@ MapReduce on a server-rack architecture.
 A job advances through the phases of the executable pipeline
 (:mod:`repro.mapreduce.engine`):
 
-    [plan compile] -> map -> pack -> shuffle (sequential stages) -> reduce
+    [plan compile] -> [fetch] -> map -> pack -> shuffle (stages) -> reduce
+
+(``fetch`` appears only for jobs submitted with a placement bridge: the
+non-local map inputs of a :mod:`repro.placement` placement move over the
+network before map starts — see ``submit(placement=...)``.)
 
 Compute phases (map / pack / reduce) run per server with an affine cost
 ``alpha + beta * work`` (work units documented on :class:`CostModel`),
@@ -212,6 +216,10 @@ class _SimJob:
     stages: List[StageTraffic]
     compile_s: float
     submit_time: float
+    # placement bridge (repro.placement.sim_bridge.PlacementTraffic, duck-
+    # typed here to keep the sim importable without the placement package):
+    # pre-map fetch loads + per-server map-work factors
+    placement: Optional[object] = None
     phase: str = "submitted"
     stage_idx: int = 0
     open_flows: int = 0
@@ -276,14 +284,30 @@ class ClusterSim:
     def submit(self, spec: JobSpec, scheme: str, r: int,
                time: float | None = None,
                stages: List[StageTraffic] | None = None,
-               compile_s: float = 0.0, check: bool = True) -> int:
-        """Enqueue a job start; returns its sim job id."""
+               compile_s: float = 0.0, check: bool = True,
+               placement: object | None = None) -> int:
+        """Enqueue a job start; returns its sim job id.
+
+        ``placement`` is a :class:`repro.placement.sim_bridge
+        .PlacementTraffic`: its non-local map inputs run as a ``fetch``
+        network stage before the map phase (contending with concurrent
+        shuffles), and its per-server factors skew the map barrier.
+        """
         t = self.now if time is None else max(float(time), self.now)
         p = SchemeParams(K=self.K, P=self.topology.P, Q=spec.Q, N=spec.N, r=r)
         if stages is None:
             stages = scheme_stage_traffic(p, scheme, check=check)
+        if placement is not None:
+            nf = len(getattr(placement, "map_factors", ()))
+            if nf != self.K:
+                raise ValueError(
+                    f"placement.map_factors must have K={self.K} entries, "
+                    f"got {nf}")
+            if len(placement.intra_units_per_rack) != self.topology.P:
+                raise ValueError("placement.intra_units_per_rack must have "
+                                 f"P={self.topology.P} entries")
         job = _SimJob(self._next_job_id, spec, p, scheme, stages,
-                      float(compile_s), t)
+                      float(compile_s), t, placement)
         self._next_job_id += 1
         self._jobs[job.job_id] = job
         self.queue.push(t, "submit", (job.job_id,),
@@ -341,7 +365,30 @@ class ClusterSim:
                             (job.job_id, "plan_compile"),
                             lambda: self._phase_done(job, "plan_compile"))
         else:
+            self._begin_fetch(job)
+
+    def _begin_fetch(self, job: _SimJob) -> None:
+        """Pre-map input-fetch stage: the non-local map inputs of a bridged
+        placement move over the network BEFORE map can start (they contend
+        with concurrent jobs' shuffles like any flow).  Placement-less jobs
+        (and fully node-local placements) skip straight to map."""
+        pl = job.placement
+        job.open_flows = 0
+        if pl is not None:
+            if pl.cross_units > 0:
+                self.network.start_flow(ROOT, pl.cross_units,
+                                        (job.job_id, "fetch_cross"))
+                job.open_flows += 1
+            for rack, load in enumerate(pl.intra_units_per_rack):
+                if load > 0:
+                    self.network.start_flow(tor(rack), load,
+                                            (job.job_id, "fetch_intra", rack))
+                    job.open_flows += 1
+        if job.open_flows == 0:
             self._begin_compute(job, "map")
+        else:
+            job.phase = "fetch"
+            job.phase_start = self.now
 
     def _begin_compute(self, job: _SimJob, phase: str) -> None:
         job.phase = phase
@@ -349,6 +396,10 @@ class ClusterSim:
         coeffs = self.cost_model.phase_coeffs(phase)
         work = phase_work(job.params, job.scheme, job.spec.d)[phase]
         factors = self.stragglers.factors(self.rng, self.K, self.topology.P)
+        if phase == "map" and job.placement is not None:
+            # locality imbalance compounds with stragglers per server; the
+            # barrier still ends at the slowest server
+            factors = factors * np.asarray(job.placement.map_factors)
         dur = float(np.max(factors) * coeffs.seconds(work))
         self.queue.push(self.now + dur, "phase_done", (job.job_id, phase),
                         lambda: self._phase_done(job, phase))
@@ -375,13 +426,22 @@ class ClusterSim:
         job = self._jobs[job_id]
         job.open_flows -= 1
         if job.open_flows == 0:
-            latency = self.topology.latency(job.stages[job.stage_idx].stage)
+            if job.phase == "fetch":
+                latency = self.topology.latency("fetch")
+                done = lambda: self._fetch_done(job)      # noqa: E731
+            else:
+                latency = self.topology.latency(
+                    job.stages[job.stage_idx].stage)
+                done = lambda: self._stage_done(job)      # noqa: E731
             if latency > 0:
                 self.queue.push(self.now + latency, "stage_latency",
-                                (job.job_id,),
-                                lambda: self._stage_done(job))
+                                (job.job_id,), done)
             else:
-                self._stage_done(job)
+                done()
+
+    def _fetch_done(self, job: _SimJob) -> None:
+        job.phase_times["fetch"] = self.now - job.phase_start
+        self._begin_compute(job, "map")
 
     def _stage_done(self, job: _SimJob) -> None:
         job.phase_times[f"shuffle:{job.stages[job.stage_idx].stage}"] = \
@@ -395,7 +455,7 @@ class ClusterSim:
     def _phase_done(self, job: _SimJob, phase: str) -> None:
         job.phase_times[phase] = self.now - job.phase_start
         if phase == "plan_compile":
-            self._begin_compute(job, "map")
+            self._begin_fetch(job)
         elif phase == "map":
             self._begin_compute(job, "pack")
         elif phase == "pack":

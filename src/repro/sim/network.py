@@ -45,7 +45,9 @@ class RackTopology:
     simulated shuffle time equals ``CommCost.weighted_time(intra_bw,
     cross_bw)``.  ``rack_bw_scale`` skews individual ToR switches (straggling
     racks / heterogeneous hardware); ``cross_latency`` / ``intra_latency``
-    add a fixed per-stage latency floor.
+    add a fixed per-stage latency floor, and ``fetch_latency`` the floor of
+    the pre-map input-fetch stage a locality-aware placement generates
+    (see :mod:`repro.placement.sim_bridge`).
     """
     P: int
     cross_bw: float = 1.0
@@ -53,6 +55,7 @@ class RackTopology:
     rack_bw_scale: Tuple[float, ...] | None = None
     cross_latency: float = 0.0
     intra_latency: float = 0.0
+    fetch_latency: float = 0.0
 
     def __post_init__(self) -> None:
         if self.P < 1 or self.cross_bw <= 0 or self.intra_bw <= 0:
@@ -71,6 +74,8 @@ class RackTopology:
         return self.intra_bw / self.P * scale
 
     def latency(self, stage: str) -> float:
+        if stage == "fetch":
+            return self.fetch_latency
         return self.cross_latency if stage == "cross" else self.intra_latency
 
 

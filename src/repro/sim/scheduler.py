@@ -42,6 +42,10 @@ class Decision:
     est_jct: float
     compile_s: float            # plan-compile charge (0 on cache hit)
     cache_hit: bool
+    # placement bridge of this admission (None unless the chooser runs a
+    # placement solver and the job went hybrid): fetch traffic + map factors
+    # handed to ClusterSim.submit, plus its achieved localities
+    placement: Optional[object] = None
 
 
 class SchemeChooser:
@@ -61,7 +65,24 @@ class SchemeChooser:
                  adaptive: bool = True,
                  fixed: Tuple[str, int] = ("coded", 2),
                  expected_straggler: float = 1.0,
-                 compile_real_plans: bool = True) -> None:
+                 compile_real_plans: bool = True,
+                 placement_solver: Optional[str] = None,
+                 placement_r_f: int = 3,
+                 placement_policy: str = "uniform",
+                 placement_lam: float = 0.8,
+                 placement_remote_penalty: float = 0.5,
+                 placement_seed: int = 0) -> None:
+        """``placement_solver`` turns on locality-aware placement for every
+        hybrid admission: a registered :mod:`repro.placement` solver name
+        ('random', 'greedy', 'flow', 'local_search', 'anneal_jax').  Each
+        admitted hybrid job draws a random replica placement under
+        ``placement_policy`` ('uniform' — the paper's model — or 'hdfs',
+        Hadoop's rack-spread rule) with ``placement_r_f`` replicas,
+        deterministic in ``placement_seed`` and the admission sequence,
+        then solves the Section-IV assignment; the resulting fetch traffic
+        + map-phase imbalance ride into the sim via
+        :class:`Decision.placement`.  ``None`` (default) keeps the legacy
+        locality-blind behavior."""
         self.K = K
         self.cost_model = cost_model
         self.rs = tuple(rs)
@@ -70,6 +91,13 @@ class SchemeChooser:
         self.fixed = fixed
         self.expected_straggler = float(expected_straggler)
         self.compile_real_plans = compile_real_plans
+        self.placement_solver = placement_solver
+        self.placement_r_f = int(placement_r_f)
+        self.placement_policy = placement_policy
+        self.placement_lam = float(placement_lam)
+        self.placement_remote_penalty = float(placement_remote_penalty)
+        self.placement_seed = int(placement_seed)
+        self._placement_seq = 0
 
     def candidates(self) -> List[Tuple[str, int]]:
         out: List[Tuple[str, int]] = []
@@ -150,9 +178,27 @@ class SchemeChooser:
                     f"{spec}; build the workload catalog with "
                     f"valid_subfile_counts so baselines cover the stream")
         p = SchemeParams(K=self.K, P=cluster.topology.P,
-                         Q=spec.Q, N=spec.N, r=r)
+                         Q=spec.Q, N=spec.N, r=r, r_f=self.placement_r_f)
         compile_s, hit = self._compile_charge(p, scheme, probe=True)
-        return Decision(scheme, r, est, compile_s, hit)
+        return Decision(scheme, r, est, compile_s, hit,
+                        self._solve_placement(p, spec, scheme))
+
+    def _solve_placement(self, p: SchemeParams, spec: JobSpec,
+                         scheme: str) -> Optional[object]:
+        """Locality-aware placement of one hybrid admission (None when the
+        knob is off or the scheme has no hybrid structure to optimize).
+        Imported lazily: the sim stays usable without repro.placement."""
+        if self.placement_solver is None or scheme != "hybrid":
+            return None
+        from ..placement import place_replicas, solve, traffic_for_result
+        self._placement_seq += 1
+        rng = np.random.default_rng(
+            (self.placement_seed, self._placement_seq))
+        replicas = place_replicas(p, rng, self.placement_policy)
+        result = solve(p, replicas, self.placement_solver,
+                       self.placement_lam, rng=rng)
+        return traffic_for_result(result, spec.d,
+                                  self.placement_remote_penalty)
 
 
 class MultiJobScheduler:
@@ -217,7 +263,8 @@ class MultiJobScheduler:
             _, spec = self._pop_next(cluster)
             d = self.chooser.choose(spec, cluster)
             job_id = cluster.submit(spec, d.scheme, d.r,
-                                    compile_s=d.compile_s)
+                                    compile_s=d.compile_s,
+                                    placement=d.placement)
             self.decisions[job_id] = d
             self._service_by_kind[spec.name] = (
                 self._service_by_kind.get(spec.name, 0.0) + d.est_jct)

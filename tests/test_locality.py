@@ -156,6 +156,36 @@ def test_table2_reproduction(K, P, rf, N, node_ran, node_opt, rack_ran,
     assert res.node_opt > res.node_random + 0.2
 
 
+def test_table2_experiment_reports_std():
+    """n_trials averaging upgrade: LocalityResult now carries per-metric
+    std; multiple random-placement instances have nonzero spread while a
+    single trial has exactly zero."""
+    p = _params(9, 3, 2, 144)
+    multi = table2_experiment(p, trials=4, seed=0)
+    assert multi.node_random_std > 0.0
+    assert multi.node_opt_std >= 0.0
+    single = table2_experiment(p, trials=1, seed=0)
+    assert single.node_opt_std == single.node_random_std == 0.0
+
+
+def test_table2_trials_full_suite_beats_random_on_paper_row():
+    """Registry-wide Table II check on row (9,3,2,144): every non-random
+    solver's mean node locality beats the random baseline."""
+    from repro.placement import table2_trials
+    p = _params(9, 3, 2, 144)
+    res = table2_trials(p, seed=0, n_trials=2,
+                        solvers=("random", "greedy", "flow", "local_search",
+                                 "anneal_jax"),
+                        per_solver_kwargs={"anneal_jax": {"n_chains": 8,
+                                                          "n_steps": 150}})
+    base = res.stats["random"].node_mean
+    for name, s in res.stats.items():
+        if name != "random":
+            assert s.node_mean > base, name
+    assert res.stats["flow"].objective_mean >= \
+        res.stats["greedy"].objective_mean - 1e-9
+
+
 def test_rf3_improves_locality_over_rf2():
     p2 = _params(9, 3, 2, 90)
     p3 = _params(9, 3, 3, 90)

@@ -1,0 +1,438 @@
+"""repro.placement tests: solver registry + ordering invariants, structured
+replica placements, joint optimization, the plan-compiler perm threading,
+the sim bridge (Table II in time units) and the scheduler placement knob.
+Hypothesis property tests (guarded) cover random feasible SchemeParams."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.assignment import (check_hybrid_constraints,
+                                   hybrid_assignment, hybrid_group_of_slot)
+from repro.core.coded_collectives import compile_hybrid_plan
+from repro.core.params import SchemeParams
+from repro.placement import (PlacementResult, anneal_perm, flow_perm,
+                             get_solver, greedy_perm, joint_optimize,
+                             local_search_perm, locality_matrix,
+                             locality_of_perm, map_load_imbalance,
+                             map_work_factors, n_groups,
+                             nonlocal_load, perm_objective, place_replicas,
+                             placement_traffic, random_perm, register_solver,
+                             replica_load, simulate_placement, solve,
+                             solve_all, storage_balance, structured_replicas,
+                             table2_trials, traffic_for_result)
+from repro.sim import (ClusterSim, CostModel, JobSpec, PhaseCoeffs,
+                       PoissonWorkload, RackTopology, SchemeChooser,
+                       default_catalog, run_scheduled)
+
+P16 = SchemeParams(16, 4, 16, 96, 2, r_f=2)
+FAST_ANNEAL = {"n_chains": 8, "n_steps": 150}
+
+
+def _instance(p=P16, seed=0):
+    rng = np.random.default_rng(seed)
+    replicas = place_replicas(p, rng)
+    return replicas, locality_matrix(p, replicas), rng
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_resolves_and_rejects():
+    for name in ("random", "greedy", "flow", "local_search", "anneal_jax"):
+        assert callable(get_solver(name))
+    with pytest.raises(ValueError, match="unknown solver"):
+        get_solver("simplex_of_doom")
+
+
+def test_register_solver_plugs_in():
+    @register_solver("_test_identity")
+    def _ident(p, C, rng, **kw):
+        return np.arange(p.N)
+    try:
+        res = solve(P16, _instance()[0], "_test_identity")
+        assert res.solver == "_test_identity"
+        assert (res.perm == np.arange(P16.N)).all()
+    finally:
+        from repro.placement.solvers import SOLVERS
+        del SOLVERS["_test_identity"]
+
+
+# ---------------------------------------------------------------------------
+# Solver validity + ordering invariants
+# ---------------------------------------------------------------------------
+
+def test_every_solver_emits_valid_hybrid_assignment():
+    results = solve_all(P16, _instance()[0],
+                        per_solver_kwargs={"anneal_jax": FAST_ANNEAL})
+    for name, res in results.items():
+        assert sorted(res.perm.tolist()) == list(range(P16.N)), name
+        check_hybrid_constraints(hybrid_assignment(P16, res.perm.tolist()))
+        assert 0.0 <= res.node_locality <= 1.0
+        assert 0.0 <= res.rack_locality <= 1.0
+        assert res.node_locality <= res.rack_locality + 1e-12  # node => rack
+
+
+def test_solver_objective_ordering():
+    replicas, C, rng = _instance()
+    rp = random_perm(P16, rng)
+    obj = lambda perm: perm_objective(P16, C, perm)          # noqa: E731
+    gp, fp = greedy_perm(P16, C), flow_perm(P16, C)
+    lp = local_search_perm(P16, C, np.random.default_rng(1))
+    ap = anneal_perm(P16, C, np.random.default_rng(2), **FAST_ANNEAL)
+    assert obj(fp) >= obj(gp) - 1e-9 >= 0                    # flow exact
+    assert obj(fp) >= obj(rp) - 1e-9
+    assert obj(lp) >= obj(gp) - 1e-9                         # warm-started
+    assert obj(ap) >= obj(gp) - 1e-9                         # warm-started
+    # node locality: optimization beats the random baseline decisively
+    node_rand = locality_of_perm(P16, replicas, rp)[0]
+    for perm in (gp, fp, lp, ap):
+        assert locality_of_perm(P16, replicas, perm)[0] > node_rand
+
+
+def test_anneal_flow_warm_start_matches_flow_exactly():
+    """Flow is the exact optimum, so a flow-warm-started annealer can never
+    strictly improve — it must return the flow permutation itself (ties
+    resolve to the first warm start)."""
+    _, C, _ = _instance(seed=3)
+    fp = flow_perm(P16, C)
+    ap = anneal_perm(P16, C, np.random.default_rng(0), n_chains=8,
+                     n_steps=100, init_solvers=("flow", "greedy"))
+    assert (ap == fp).all()
+
+
+def test_swap_moves_preserve_hybrid_constraints():
+    """The local-search/anneal neighborhood: ANY sequence of slot swaps of a
+    valid permutation is another valid hybrid assignment."""
+    rng = np.random.default_rng(4)
+    perm = rng.permutation(P16.N)
+    for _ in range(5):
+        a, b = rng.integers(P16.N, size=2)
+        perm[a], perm[b] = perm[b], perm[a]
+        check_hybrid_constraints(hybrid_assignment(P16, perm.tolist()))
+
+
+# ---------------------------------------------------------------------------
+# Structured placements
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,r_f", [
+    ("resolvable", 3), ("aligned", 2), ("aligned", 3)])
+def test_structured_replicas_distinct_and_balanced(policy, r_f):
+    p = SchemeParams(12, 3, 12, 96, 2, r_f=r_f)
+    reps = structured_replicas(p, policy)
+    assert reps.shape == (p.N, p.r_f)
+    for row in reps:
+        assert len(set(row.tolist())) == p.r_f
+    lo, hi = storage_balance(reps, p.K)
+    assert lo + hi == 2 * p.N * p.r_f // p.K             # mean load exact
+    if policy == "resolvable" or r_f <= p.r:
+        assert lo == hi                                  # K | N: perfect
+
+
+def test_resolvable_spreads_racks():
+    p = SchemeParams(12, 3, 12, 96, 2, r_f=3)
+    reps = structured_replicas(p, "resolvable")
+    racks = reps // p.Kr
+    # first min(r_f, P) replicas occupy distinct racks (exact HDFS goal)
+    assert all(len(set(r.tolist())) == min(p.r_f, p.P) for r in racks)
+
+
+def test_aligned_reaches_full_locality_with_flow():
+    p = SchemeParams(12, 3, 12, 96, 2, r_f=2)            # r_f >= r
+    res = solve(p, structured_replicas(p, "aligned"), "flow")
+    assert res.node_locality == 1.0 and res.rack_locality == 1.0
+
+
+def test_structured_beats_random_after_optimization():
+    p = P16
+    res_struct = solve(p, structured_replicas(p, "resolvable"), "flow")
+    res_rand = solve(p, place_replicas(p, np.random.default_rng(0)), "flow")
+    assert res_struct.node_locality >= res_rand.node_locality
+
+
+def test_structured_rejects_unknown_policy_and_overfull_rf():
+    with pytest.raises(ValueError, match="policy"):
+        structured_replicas(P16, "voodoo")
+    with pytest.raises(ValueError, match="r_f"):
+        structured_replicas(SchemeParams(4, 2, 4, 8, 2, r_f=5))
+
+
+# ---------------------------------------------------------------------------
+# Joint optimization
+# ---------------------------------------------------------------------------
+
+def test_joint_monotone_and_beats_fixed_placement():
+    j = joint_optimize(P16, seed=0, rounds=3)
+    objs = [h.objective for h in j.history]
+    assert objs == sorted(objs)                          # monotone history
+    single = solve(P16, place_replicas(P16, np.random.default_rng(0)),
+                   "flow")
+    assert j.best.objective >= single.objective - 1e-9
+    # closing the replica-placement loop reaches full node locality here
+    assert j.best.node_locality == 1.0
+    check_hybrid_constraints(
+        hybrid_assignment(P16, j.best.perm.tolist()))
+    # the co-designed replicas stay storage-balanced within the cap
+    cap = -(-P16.N * P16.r_f // P16.K)
+    assert replica_load(j.best.replicas, P16.K).max() <= cap
+
+
+# ---------------------------------------------------------------------------
+# Perm threading into the executable plan
+# ---------------------------------------------------------------------------
+
+def test_plan_perm_threading_permutes_only_subfile_tables():
+    p = SchemeParams(8, 4, 16, 48, 2)
+    res = solve(p, place_replicas(p, np.random.default_rng(0)), "greedy")
+    base = compile_hybrid_plan(p)
+    opt = compile_hybrid_plan(p, perm=res.perm)
+    assert opt is compile_hybrid_plan(p, perm=res.perm)   # cached
+    assert opt is not base
+    # positional tables are perm-invariant
+    np.testing.assert_array_equal(base.cross_send_pos, opt.cross_send_pos)
+    np.testing.assert_array_equal(base.cross_recv_pos, opt.cross_recv_pos)
+    np.testing.assert_array_equal(base.local_pos, opt.local_pos)
+    # each device maps exactly the subfiles of the permuted assignment
+    a = hybrid_assignment(p, res.perm.tolist())
+    for srv in range(p.K):
+        got = sorted(opt.local_subfiles.reshape(p.K, -1)[srv].tolist())
+        assert got == sorted(a.subfiles_of_server[srv])
+
+
+# ---------------------------------------------------------------------------
+# Non-local load accounting + sim bridge
+# ---------------------------------------------------------------------------
+
+def test_map_load_imbalance_bounds():
+    """map_load_imbalance is 1.0 exactly for a fully local placement and
+    > 1.0 whenever locality misses are unevenly spread; structural map
+    LOAD (task counts per rack) is always perfectly balanced regardless."""
+    p = SchemeParams(12, 3, 12, 96, 2, r_f=2)
+    full = solve(p, structured_replicas(p, "aligned"), "flow")
+    assert map_load_imbalance(p, full.replicas, full.perm) == 1.0
+    replicas, C, rng = _instance(p, seed=6)
+    ran = random_perm(p, rng)
+    imb = map_load_imbalance(p, replicas, ran)
+    assert imb >= 1.0
+    # task counts per rack are structurally equal for ANY perm — only the
+    # locality-driven effective work (the imbalance above) can differ
+    for perm in (full.perm, ran):
+        rl = hybrid_assignment(p, list(perm)).rack_load()
+        assert len(set(rl.tolist())) == 1
+
+
+def test_nonlocal_load_totals_match_localities():
+    replicas, C, rng = _instance(seed=5)
+    perm = flow_perm(P16, C)
+    node, rack = locality_of_perm(P16, replicas, perm)
+    load = nonlocal_load(P16, replicas, perm)
+    total = P16.N * P16.r
+    assert load.node_miss.sum() == round(total * (1 - node))
+    assert load.rack_miss.sum() == round(total * (1 - rack))
+    assert (load.rack_miss <= load.node_miss).all()
+    assert load.node_miss.sum() == load.n_loc * P16.K - round(total * node)
+
+
+def test_fully_local_placement_is_a_noop_bridge():
+    p = SchemeParams(12, 3, 12, 96, 2, r_f=2)
+    res = solve(p, structured_replicas(p, "aligned"), "flow")
+    tr = traffic_for_result(res, d=4)
+    assert tr.cross_units == 0.0 and tr.total_units == 0.0
+    assert tr.map_factors == (1.0,) * p.K
+    topo = RackTopology(P=p.P, cross_bw=1e4, intra_bw=1e5)
+    stats = simulate_placement(res, topo)
+    assert "fetch" not in stats.phase_times               # no fetch stage
+
+
+def test_placement_traffic_shape_validation():
+    p = SchemeParams(8, 4, 16, 48, 2)
+    res = solve(p, place_replicas(p, np.random.default_rng(0)), "random")
+    tr = traffic_for_result(res)
+    sim = ClusterSim(RackTopology(P=2, cross_bw=1e4, intra_bw=1e5), K=8)
+    with pytest.raises(ValueError, match="intra_units_per_rack"):
+        sim.submit(JobSpec("histogram", 48, 16, 1), "hybrid", 2,
+                   placement=tr, check=False)
+    sim2 = ClusterSim(RackTopology(P=4, cross_bw=1e4, intra_bw=1e5), K=12)
+    with pytest.raises(ValueError, match="map_factors"):
+        sim2.submit(JobSpec("histogram", 48, 24, 1), "hybrid", 2,
+                    placement=tr, check=False)
+
+
+TABLE2_TIME_ROWS = [(8, 2, 3, 100), (16, 4, 2, 192), (20, 5, 2, 200)]
+
+
+@pytest.mark.parametrize("K,P,rf,N", TABLE2_TIME_ROWS)
+def test_optimized_placement_strictly_lowers_jct(K, P, rf, N):
+    """Acceptance pin: on straggler-free Table II rows, the flow placement's
+    simulated JCT is STRICTLY below the random placement's (same replicas,
+    same cluster, same seed) — Table II in time units."""
+    p = SchemeParams(K, P, Q=K, N=N, r=2, r_f=rf)
+    replicas, C, rng = _instance(p, seed=0)
+    opt = solve(p, replicas, "flow")
+    ran = solve(p, replicas, "random", seed=1)
+    topo = RackTopology(P=P, cross_bw=1e4, intra_bw=1e5)
+    cost = CostModel(map=PhaseCoeffs(0.0, 1e-8))
+    j_opt = simulate_placement(opt, topo, cost_model=cost).jct
+    j_ran = simulate_placement(ran, topo, cost_model=cost).jct
+    assert j_opt < j_ran
+    assert opt.node_locality > ran.node_locality
+
+
+def test_map_factors_shift_map_phase():
+    """Per-server locality imbalance stretches the simulated map barrier by
+    exactly max(factor) (straggler-free, zero fetch bandwidth impact)."""
+    p = SchemeParams(8, 4, 16, 48, 2, r_f=2)
+    replicas, C, _ = _instance(p, seed=2)
+    res = solve(p, replicas, "random", seed=3)
+    tr = traffic_for_result(res, d=1, remote_penalty=0.5)
+    cost = CostModel(map=PhaseCoeffs(0.0, 1e-8))
+    topo = RackTopology(P=4, cross_bw=1e12, intra_bw=1e12)  # free network
+    base = simulate_placement(
+        solve(p, structured_replicas(p, "aligned"), "flow"),
+        topo, cost_model=cost).phase_times["map"]
+    skewed = simulate_placement(res, topo, cost_model=cost,
+                                remote_penalty=0.5).phase_times["map"]
+    assert skewed == pytest.approx(base * max(tr.map_factors))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler placement knob
+# ---------------------------------------------------------------------------
+
+def _placement_stream(placement_solver, seed=9):
+    jobs = PoissonWorkload(default_catalog(8, 4), n_jobs=12,
+                           rate=4.0).generate(seed=seed)
+    topo = RackTopology(P=4, cross_bw=1e5, intra_bw=1e6)
+    cluster = ClusterSim(topo, K=8, cost_model=CostModel(
+        map=PhaseCoeffs(1e-4, 1e-8)), seed=seed)
+    chooser = SchemeChooser(8, cost_model=cluster.cost_model,
+                            placement_solver=placement_solver)
+    stats, sched = run_scheduled(jobs, cluster, chooser, policy="fifo",
+                                 max_concurrent=3)
+    return stats, sched
+
+
+def test_scheduler_placement_knob_attaches_traffic_deterministically():
+    stats1, sched1 = _placement_stream("greedy")
+    stats2, sched2 = _placement_stream("greedy")
+    assert [s.jct for s in stats1] == [s.jct for s in stats2]
+    hybrid_decisions = [d for d in sched1.decisions.values()
+                        if d.scheme == "hybrid"]
+    assert hybrid_decisions, "stream should admit some hybrid jobs"
+    for d in hybrid_decisions:
+        assert d.placement is not None
+        assert 0.0 <= d.placement.node_locality <= 1.0
+    for d in sched1.decisions.values():
+        if d.scheme != "hybrid":
+            assert d.placement is None
+
+
+def test_scheduler_placement_off_by_default_matches_legacy():
+    stats_off, sched_off = _placement_stream(None)
+    assert all(d.placement is None for d in sched_off.decisions.values())
+    assert all("fetch" not in s.phase_times for s in stats_off)
+
+
+# ---------------------------------------------------------------------------
+# Multi-trial Table II driver
+# ---------------------------------------------------------------------------
+
+def test_table2_trials_reports_stats_and_legacy_parity():
+    p = SchemeParams(9, 3, 9, 144, 2, r_f=2)
+    res = table2_trials(p, seed=0, n_trials=3,
+                        solvers=("random", "greedy", "flow"))
+    from repro.core.locality import table2_experiment
+    legacy = table2_experiment(p, seed=0, trials=3)
+    assert res.stats["flow"].node_mean == legacy.node_opt
+    assert res.stats["random"].rack_mean == legacy.rack_random
+    assert legacy.node_opt_std == res.stats["flow"].node_std >= 0.0
+    assert len(res.trials) == 3
+    assert all(isinstance(r, PlacementResult)
+               for t in res.trials for r in t.values())
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property tests (random feasible SchemeParams)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def placement_params(draw):
+        P_ = draw(st.integers(2, 4))
+        Kr = draw(st.integers(1, 3))
+        K = P_ * Kr
+        r = draw(st.integers(2, min(P_, 3)))
+        M = draw(st.integers(1, 3))
+        N = math.comb(P_, r) * M * Kr
+        r_f = draw(st.integers(1, min(3, K)))
+        return SchemeParams(K=K, P=P_, Q=K, N=N, r=r, r_f=r_f)
+
+    @settings(max_examples=15, deadline=None, derandomize=True)
+    @given(placement_params(), st.integers(0, 2 ** 16))
+    def test_solver_invariants_on_random_instances(p, seed):
+        """For random feasible SchemeParams: every solver's locality lies in
+        [0, 1] and is >= the random baseline's (flow exactly optimal; the
+        heuristics by warm-start monotonicity), and anneal >= greedy."""
+        rng = np.random.default_rng(seed)
+        replicas = place_replicas(p, rng)
+        C = locality_matrix(p, replicas)
+        rp = random_perm(p, rng)
+        obj_r = perm_objective(p, C, rp)
+        gp = greedy_perm(p, C)
+        fp = flow_perm(p, C)
+        lp = local_search_perm(p, C, rng, init=rp, max_sweeps=4,
+                               batch=256)
+        ap = anneal_perm(p, C, rng, n_chains=4, n_steps=50,
+                         init=[gp, rp])
+        for perm in (rp, gp, fp, lp, ap):
+            node, rack = locality_of_perm(p, replicas, perm)
+            assert 0.0 <= node <= 1.0 and 0.0 <= rack <= 1.0
+            assert node <= rack + 1e-12
+        assert perm_objective(p, C, fp) >= obj_r - 1e-9   # exact optimum
+        assert perm_objective(p, C, fp) >= perm_objective(p, C, gp) - 1e-9
+        assert perm_objective(p, C, lp) >= obj_r - 1e-9   # warm start: rp
+        assert perm_objective(p, C, ap) >= \
+            max(perm_objective(p, C, gp), obj_r) - 1e-6   # warm: {gp, rp}
+
+    @settings(max_examples=15, deadline=None, derandomize=True)
+    @given(placement_params(), st.integers(0, 2 ** 16),
+           st.integers(1, 16))
+    def test_swap_neighborhood_never_leaves_feasible_set(p, seed, n_swaps):
+        """Any sequence of swap moves from any valid permutation satisfies
+        Theorem IV.1's constraints — the invariant local_search/anneal rely
+        on to skip per-move feasibility checks."""
+        rng = np.random.default_rng(seed)
+        perm = rng.permutation(p.N)
+        for _ in range(n_swaps):
+            a, b = rng.integers(p.N, size=2)
+            perm[a], perm[b] = perm[b], perm[a]
+        check_hybrid_constraints(hybrid_assignment(p, perm.tolist()))
+
+    @settings(max_examples=10, deadline=None, derandomize=True)
+    @given(placement_params(), st.integers(0, 2 ** 16))
+    def test_miss_accounting_consistent(p, seed):
+        rng = np.random.default_rng(seed)
+        replicas = place_replicas(p, rng)
+        perm = rng.permutation(p.N)
+        node, rack = locality_of_perm(p, replicas, perm)
+        load = nonlocal_load(p, replicas, perm)
+        assert load.node_miss.sum() == round(p.N * p.r * (1 - node))
+        assert load.rack_miss.sum() == round(p.N * p.r * (1 - rack))
+        f = map_work_factors(p, replicas, perm)
+        assert (f >= 1.0).all()
+
+else:                                                  # pragma: no cover
+    def test_placement_property_tests_need_hypothesis():
+        pytest.importorskip(
+            "hypothesis",
+            reason="property tests need hypothesis (pip install .[test])")

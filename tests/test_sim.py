@@ -212,6 +212,59 @@ else:                                                  # pragma: no cover
 
 
 # ---------------------------------------------------------------------------
+# Placement bridge (repro.placement.sim_bridge): Table II in time units
+# ---------------------------------------------------------------------------
+
+def _bridged_jct(solver, K=16, P=4, rf=2, N=192, seed=0):
+    from repro.placement import place_replicas, simulate_placement, solve
+    p = SchemeParams(K, P, Q=K, N=N, r=2, r_f=rf)
+    replicas = place_replicas(p, np.random.default_rng(seed))
+    res = solve(p, replicas, solver, seed=seed + 1)
+    topo = RackTopology(P=P, cross_bw=1e4, intra_bw=1e5)
+    cost = CostModel(map=PhaseCoeffs(0.0, 1e-8))
+    return simulate_placement(res, topo, cost_model=cost), res
+
+
+def test_placement_bridge_optimized_strictly_lowers_jct():
+    """Acceptance pin (straggler-free Table II row (16,4,2,192)): the flow
+    placement's simulated JCT is strictly below the random placement's, and
+    the gap comes from the fetch stage + map imbalance, not the shuffle."""
+    stats_opt, res_opt = _bridged_jct("flow")
+    stats_ran, res_ran = _bridged_jct("random")
+    assert res_opt.node_locality > res_ran.node_locality
+    assert stats_opt.jct < stats_ran.jct
+    # shuffle stages are placement-invariant
+    for key in ("shuffle:cross", "shuffle:intra"):
+        assert stats_opt.phase_times[key] == \
+            pytest.approx(stats_ran.phase_times[key])
+    assert stats_opt.phase_times["fetch"] < stats_ran.phase_times["fetch"]
+    assert stats_opt.phase_times["map"] <= stats_ran.phase_times["map"]
+
+
+def test_placement_fetch_contends_with_other_jobs():
+    """Fetch flows share the network: background shuffle load on the root
+    switch must delay a placement-bridged job's fetch stage."""
+    from repro.placement import place_replicas, solve, traffic_for_result
+    p = SchemeParams(8, 4, 16, 48, 2, r_f=2)
+    res = solve(p, place_replicas(p, np.random.default_rng(0)), "random",
+                seed=1)
+    tr = traffic_for_result(res)
+    assert tr.cross_units > 0          # random placement does miss racks
+
+    def jct(background):
+        topo = RackTopology(P=4, cross_bw=1e4, intra_bw=1e5)
+        sim = ClusterSim(topo, K=8)
+        target = sim.submit(JobSpec("histogram", 48, 16, 1), "hybrid", 2,
+                            time=0.0, placement=tr)
+        for _ in range(background):
+            sim.submit(JobSpec("histogram", 48, 16, 1), "hybrid", 2,
+                       time=0.0)
+        return {s.job_id: s for s in sim.run()}[target].jct
+
+    assert jct(background=2) > jct(background=0)
+
+
+# ---------------------------------------------------------------------------
 # Calibration
 # ---------------------------------------------------------------------------
 
