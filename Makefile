@@ -3,7 +3,8 @@
 # is the full tier-1 suite in one command.
 PYTEST ?= python -m pytest
 
-.PHONY: test test-all bench bench-pipeline bench-sim bench-locality
+.PHONY: test test-all bench bench-pipeline bench-sim bench-locality \
+	bench-resilience bench-table1
 
 test:
 	$(PYTEST) -q -m "not slow"
@@ -22,3 +23,9 @@ bench-sim:
 
 bench-locality:
 	PYTHONPATH=src python benchmarks/table2_locality.py
+
+bench-resilience:
+	PYTHONPATH=src python benchmarks/resilience_bench.py
+
+bench-table1:
+	PYTHONPATH=src python benchmarks/table1_costs.py

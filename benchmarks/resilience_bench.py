@@ -1,0 +1,140 @@
+"""Resilience benchmark: the cloning-vs-coding frontier + hedged r-policy,
+to ``BENCH_resilience.json``.
+
+Sections (all seeded -> deterministic):
+
+  * ``frontier`` — mean/p99 JCT vs replication budget (map copies:
+    ``uncoded r=1`` + clone budget against ``coded``/``hybrid`` at the
+    row's r) for every speculation policy {none, clone, late, mantri} over
+    the straggler regimes {NoStragglers, ExponentialTail, RackCorrelated}
+    on the paper's Table I grid.  HARD assertions:
+      - speculation is a bit-identical NO-OP under NoStragglers (per-seed
+        JCTs of clone/late/mantri == the none policy's, exactly);
+      - ``late`` and ``clone`` strictly improve summed p99 JCT under
+        ExponentialTail, with no single cell regressing;
+      - ``mantri`` strictly improves summed p99 under RackCorrelated (its
+        design regime; aggregate only — cause attribution is heuristic);
+      - one frontier cell re-simulated twice produces a bit-identical
+        event trace (per-seed determinism with speculation enabled).
+  * ``frontier_curves`` — per regime, the best (scheme, r, policy) at each
+    budget: the literal answer to "when does cloning beat coding".
+  * ``hedged_vs_static`` — multi-job streams under RackCorrelated: the
+    straggler-aware :class:`repro.resilience.HedgedRPolicy` (probe-fit +
+    online refits, rack-hedged structured placements) against the static
+    fetch-aware chooser on the same stream.  HARD assertion: hedged wins
+    p99 (and mean) JCT.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+try:
+    from ._common import emit_report, make_parser
+except ImportError:                       # run as a script, not a package
+    from _common import emit_report, make_parser
+
+from repro.resilience import (DEFAULT_POLICIES, TABLE1_ROWS,
+                              check_frontier_invariants,
+                              cloning_vs_coding_frontier, frontier_curve,
+                              get_policy, hedged_vs_static_stream,
+                              straggler_regimes)
+from repro.sim import (ClusterSim, CostModel, ExponentialTail, JobSpec,
+                       PhaseCoeffs, RackCorrelated, RackTopology)
+
+# compute costs sized so map time is commensurate with shuffle time on the
+# Table I grid at the bench bandwidths — the regime where the
+# cloning-vs-coding tradeoff is live (map-free sims cannot straggle)
+BENCH_COST = CostModel(
+    map=PhaseCoeffs(alpha=1e-4, beta=2e-8),
+    pack=PhaseCoeffs(alpha=5e-5, beta=1e-8),
+    reduce=PhaseCoeffs(alpha=1e-4, beta=2e-8),
+    plan_compile=PhaseCoeffs(alpha=5e-3, beta=1e-6),
+)
+INTRA_BW = 1e7
+CROSS_BW = 1e6
+
+
+def _determinism_check(seed: int = 7) -> bool:
+    """One straggling frontier cell, simulated twice: traces must be
+    bit-identical with speculation enabled."""
+    def run():
+        topo = RackTopology(P=3, cross_bw=CROSS_BW, intra_bw=INTRA_BW)
+        sim = ClusterSim(topo, 9, BENCH_COST, ExponentialTail(1.0), seed,
+                         speculation=get_policy("late"))
+        sim.submit(JobSpec("histogram", 72, 18, 1), "hybrid", 2)
+        stats = sim.run()
+        return [s.jct for s in stats], list(sim.trace)
+
+    (j1, t1), (j2, t2) = run(), run()
+    return j1 == j2 and t1 == t2
+
+
+def run(smoke: bool = False, seed: int = 0, iters: int = 10,
+        verbose: bool = True) -> Dict:
+    """``iters`` = independent straggler seeds per frontier cell."""
+    rows = TABLE1_ROWS[:3] if smoke else TABLE1_ROWS
+    n_seeds = 5 if smoke else iters
+    regimes = straggler_regimes(exp_scale=1.0, rack_p=0.25, rack_factor=4.0)
+
+    cells = cloning_vs_coding_frontier(
+        rows=rows, policies=DEFAULT_POLICIES, regimes=regimes,
+        cost=BENCH_COST, intra_bw=INTRA_BW, cross_bw=CROSS_BW,
+        n_seeds=n_seeds, tasks_per_server=8)
+    invariants = check_frontier_invariants(cells)
+    curves = {name: frontier_curve(cells, name) for name in regimes}
+
+    hedged = hedged_vs_static_stream(
+        K=8, P=4, stragglers=RackCorrelated(0.25, 4.0), cost=BENCH_COST,
+        intra_bw=1e6, cross_bw=1e5, rate=4.0,
+        n_jobs=30 if smoke else 80, n_probe=15 if smoke else 30, seed=seed)
+
+    deterministic = _determinism_check()
+
+    if verbose:
+        print(f"frontier: {len(cells)} cells over {len(rows)} rows x "
+              f"{len(regimes)} regimes x {len(DEFAULT_POLICIES)} policies")
+        print(f"invariants: {invariants}")
+        for name, curve in curves.items():
+            print(f"frontier[{name}]: " + " | ".join(
+                f"budget {c['budget']:g}: {c['scheme']} r={c['r']} "
+                f"{c['policy']} p99={c['p99_jct']:.4f}" for c in curve))
+        h = hedged
+        print(f"hedged fit: {h['fit']}")
+        print(f"hedged p99 {h['hedged']['p99_jct']:.4f} vs static "
+              f"{h['static']['p99_jct']:.4f} | mean "
+              f"{h['hedged']['mean_jct']:.4f} vs "
+              f"{h['static']['mean_jct']:.4f}")
+        print(f"speculation-enabled traces deterministic: {deterministic}")
+
+    failures = [k for k, v in invariants.items() if not v]
+    if failures:
+        raise RuntimeError(f"frontier invariants failed: {failures}")
+    if not hedged["hedged_beats_static_p99"]:
+        raise RuntimeError(
+            "hedged r-policy lost to the static chooser on p99 under "
+            f"RackCorrelated: {hedged}")
+    if not deterministic:
+        raise RuntimeError("speculation-enabled trace not deterministic")
+
+    return {
+        "cluster": {"intra_bw": INTRA_BW, "cross_bw": CROSS_BW,
+                    "cost_model": "BENCH_COST (see resilience_bench.py)"},
+        "n_seeds": n_seeds,
+        "frontier": [c.to_row() for c in cells],
+        "frontier_curves": curves,
+        "invariants": invariants,
+        "hedged_vs_static": hedged,
+        "trace_deterministic": deterministic,
+    }
+
+
+def main() -> None:
+    ap = make_parser(__doc__, "BENCH_resilience.json", default_iters=10)
+    args = ap.parse_args()
+    report = run(smoke=args.smoke, seed=args.seed, iters=args.iters)
+    emit_report(report, "resilience", args.out, smoke=args.smoke,
+                seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,10 @@
 """Benchmark aggregator: one section per paper table + the systems benches.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Sections print their own summaries; the ``table1``/``table2`` sections run
+their full bench CLIs with default args, REWRITING the corresponding
+committed ``BENCH_*.json`` artifacts in the repo root (that is how the
+artifacts are regenerated — expect a dirty git tree afterwards).
+``shuffle``/``roofline`` print ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run [--section table1|table2|shuffle|
                                                       roofline|all]
@@ -30,11 +34,15 @@ def main() -> None:
     failed = []
     for name in names:
         print(f"# --- {name} ---", flush=True)
-        try:
+        argv = sys.argv
+        sys.argv = [f"benchmarks/{name}"]   # sections parse their own CLI;
+        try:                                # keep --section out of their argv
             SECTIONS[name]()
         except Exception:                                    # noqa: BLE001
             traceback.print_exc()
             failed.append(name)
+        finally:
+            sys.argv = argv
     if failed:
         sys.exit(f"benchmark sections failed: {failed}")
 

@@ -31,7 +31,7 @@ except ImportError:                       # run as a script, not a package
 
 from repro.core.coded_collectives import plan_cache_clear
 from repro.core.costs import coded_cost, hybrid_cost, uncoded_cost
-from repro.core.params import SchemeParams
+from repro.core.params import SchemeParams, TABLE1_GRID
 from repro.sim import (ClusterSim, CostModel, ExponentialTail, JobSpec,
                        NoStragglers, PhaseCoeffs, PoissonWorkload,
                        RackTopology, SchemeChooser, default_catalog,
@@ -41,17 +41,7 @@ from repro.sim import (ClusterSim, CostModel, ExponentialTail, JobSpec,
 # column violates the divisibility hypothesis C(P,r) | (NP/K); the closed
 # forms (and hence the simulator's traffic model) evaluate them with
 # check=False, exactly as the paper implicitly did.
-TABLE1_ROWS: List[Tuple[int, int, int, int, int]] = [
-    (9, 3, 18, 72, 2),
-    (16, 4, 16, 240, 2),
-    (16, 4, 16, 1680, 3),
-    (15, 3, 15, 210, 2),
-    (20, 4, 20, 380, 2),
-    (25, 5, 25, 600, 2),
-    (25, 5, 25, 6900, 3),
-    (30, 5, 30, 870, 2),
-    (30, 6, 30, 870, 2),
-]
+TABLE1_ROWS: List[Tuple[int, int, int, int, int]] = list(TABLE1_GRID)
 
 COST_FNS = {"uncoded": uncoded_cost, "coded": coded_cost,
             "hybrid": hybrid_cost}

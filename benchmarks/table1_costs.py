@@ -6,29 +6,41 @@ formulas describe a realizable shuffle).
 
 Values are in thousands of <key,value> transfers, as in the paper.
 Discrepant paper cells are flagged (see EXPERIMENTS.md §Fidelity).
+
+Emits ``BENCH_table1.json`` in the shared benchmark envelope
+(``benchmarks/_common.py``: schema_version + seeded CLI), like every other
+bench; the table is pure closed forms, so ``--smoke`` only trims the
+printed output, and the seed is recorded for envelope uniformity.
 """
 from __future__ import annotations
 
 import time
-from typing import List, Tuple
+from typing import Dict, List, Tuple
+
+try:
+    from ._common import emit_report, make_parser
+except ImportError:                       # run as a script, not a package
+    from _common import emit_report, make_parser
 
 from repro.core.costs import coded_cost, hybrid_cost, uncoded_cost
-from repro.core.params import SchemeParams
+from repro.core.params import SchemeParams, TABLE1_GRID
 
-# (K, P, Q, N, r) -> paper's printed values /1000:
+# Paper's printed values /1000 per TABLE1_GRID row:
 # (unc_cro, cod_cro, hyb_cro, unc_int, cod_int, hyb_int)
-PAPER_ROWS: List[Tuple[Tuple[int, int, int, int, int],
-                       Tuple[float, ...]]] = [
-    ((9, 3, 18, 72, 2), (0.864, 0.486, 0.216, 0.288, 0.018, 0.864)),
-    ((16, 4, 16, 240, 2), (2.88, 1.632, 0.96, 0.72, 0.048, 2.88)),
-    ((16, 4, 16, 1680, 3), (20.16, 6.976, 2.24, 5.04, 0.304, 20.16)),
-    ((15, 3, 15, 210, 2), (2.1, 1.275, 0.525, 0.84, 0.09, 2.520)),
-    ((20, 4, 20, 380, 2), (5.7, 3.3, 1.9, 1.52, 0.12, 0.608)),
-    ((25, 5, 25, 600, 2), (12, 6.75, 4.5, 2.4, 1.5, 12)),
-    ((25, 5, 25, 6900, 3), (138, 50.6, 23, 27.6, 0.1, 13.8)),
-    ((30, 5, 30, 870, 2), (16.56, 11.88, 7.83, 3.45, 0.3, 17.25)),
-    ((30, 6, 30, 870, 2), (21.75, 12, 8.7, 3.48, 0.18, 20.88)),
+PAPER_VALUES: List[Tuple[float, ...]] = [
+    (0.864, 0.486, 0.216, 0.288, 0.018, 0.864),
+    (2.88, 1.632, 0.96, 0.72, 0.048, 2.88),
+    (20.16, 6.976, 2.24, 5.04, 0.304, 20.16),
+    (2.1, 1.275, 0.525, 0.84, 0.09, 2.520),
+    (5.7, 3.3, 1.9, 1.52, 0.12, 0.608),
+    (12, 6.75, 4.5, 2.4, 1.5, 12),
+    (138, 50.6, 23, 27.6, 0.1, 13.8),
+    (16.56, 11.88, 7.83, 3.45, 0.3, 17.25),
+    (21.75, 12, 8.7, 3.48, 0.18, 20.88),
 ]
+PAPER_ROWS: List[Tuple[Tuple[int, int, int, int, int],
+                       Tuple[float, ...]]] = \
+    list(zip(TABLE1_GRID, PAPER_VALUES))
 
 
 def run(verbose: bool = True) -> List[dict]:
@@ -62,13 +74,24 @@ def run(verbose: bool = True) -> List[dict]:
     return rows
 
 
+def report(verbose: bool = True) -> Dict:
+    rows = run(verbose=verbose)
+    return {
+        "rows": [{**r, "params": list(r["params"]),
+                  "ours": list(r["ours"]), "paper": list(r["paper"])}
+                 for r in rows],
+        "rows_fully_matching": sum(r["match"] for r in rows),
+        "cells_matching": sum(r["cells_matching"] for r in rows),
+        "cells_total": 6 * len(rows),
+    }
+
+
 def main() -> None:
-    rows = run(verbose=False)
-    for r in rows:
-        K, P, Q, N, rr = r["params"]
-        print(f"table1_{K}_{P}_{Q}_{N}_{rr},{r['us']:.1f},"
-              f"match={r['cells_matching']}/6")
+    ap = make_parser(__doc__, "BENCH_table1.json")
+    args = ap.parse_args()
+    out = report(verbose=not args.smoke)
+    emit_report(out, "table1", args.out, smoke=args.smoke, seed=args.seed)
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -122,3 +122,21 @@ class SchemeParams:
     def keys_of_rack(self, rack: int) -> range:
         per = self.Q // self.P
         return range(rack * per, (rack + 1) * per)
+
+
+# The paper's Table I grid: (K, P, Q, N, r) of its nine experiment rows.
+# Single source of truth for every bench/experiment that sweeps the grid
+# (benchmarks/table1_costs.py, benchmarks/sim_bench.py,
+# repro.resilience.experiments); three rows violate C(P,r) | NP/K and are
+# evaluated with check=False, exactly as the paper implicitly did.
+TABLE1_GRID = (
+    (9, 3, 18, 72, 2),
+    (16, 4, 16, 240, 2),
+    (16, 4, 16, 1680, 3),
+    (15, 3, 15, 210, 2),
+    (20, 4, 20, 380, 2),
+    (25, 5, 25, 600, 2),
+    (25, 5, 25, 6900, 3),
+    (30, 5, 30, 870, 2),
+    (30, 6, 30, 870, 2),
+)

@@ -1,0 +1,40 @@
+"""repro.resilience — speculative re-execution + straggler-aware replication.
+
+The decision layer ON TOP of the cluster simulator: the paper's map
+replication r reduces cross-rack shuffle traffic (coding), but replication
+is also the classic straggler weapon (cloning / speculative backups).  This
+package quantifies when each use of the budget wins:
+
+  * :mod:`.speculation` — policy registry (``none`` / ``clone`` / ``late``
+    / ``mantri``) driving the task-granular map phase of
+    :class:`repro.sim.cluster.TaskMapPhase`;
+  * :mod:`.replication` — straggler-model fitting from observed
+    ``JobStats.phase_times`` and the :class:`HedgedRPolicy` that makes
+    :class:`repro.sim.SchemeChooser` straggler-aware (priced candidates +
+    rack-hedged structured placements);
+  * :mod:`.experiments` — the cloning-vs-coding frontier over the Table I
+    grid and the hedged-vs-static stream comparison feeding
+    ``benchmarks/resilience_bench.py`` -> ``BENCH_resilience.json``.
+
+See docs/resilience.md.
+"""
+from .speculation import (LateBackup, MantriRestart, NoSpeculation,
+                          ProactiveClone, SPECULATION_POLICIES,
+                          SpeculationPolicy, get_policy, register_policy)
+from .replication import (HedgedRPolicy, StragglerFit, fit_straggler_model,
+                          slowdowns_from_stats)
+from .experiments import (DEFAULT_POLICIES, FrontierCell, TABLE1_ROWS,
+                          check_frontier_invariants,
+                          cloning_vs_coding_frontier, frontier_curve,
+                          hedged_vs_static_stream, straggler_regimes)
+
+__all__ = [
+    "LateBackup", "MantriRestart", "NoSpeculation", "ProactiveClone",
+    "SPECULATION_POLICIES", "SpeculationPolicy", "get_policy",
+    "register_policy",
+    "HedgedRPolicy", "StragglerFit", "fit_straggler_model",
+    "slowdowns_from_stats",
+    "DEFAULT_POLICIES", "FrontierCell", "TABLE1_ROWS",
+    "check_frontier_invariants", "cloning_vs_coding_frontier",
+    "frontier_curve", "hedged_vs_static_stream", "straggler_regimes",
+]

@@ -6,8 +6,9 @@ concurrent jobs?  See docs/simulator.md for the event model, calibration
 recipe, scheduler policies and scenario catalog.
 """
 from .cluster import (ClusterSim, CostModel, DeterministicSlowdown,
-                      ExponentialTail, JobStats, NoStragglers, PhaseCoeffs,
-                      RackCorrelated, StragglerModel, calibrate,
+                      ExponentialTail, JobStats, MapTask, MapTaskAttempt,
+                      NoStragglers, PhaseCoeffs, RackCorrelated,
+                      StragglerModel, TaskMapPhase, calibrate,
                       measurements_from_pipeline_bench, phase_work,
                       simulate_single_job)
 from .network import ROOT, FluidNetwork, RackTopology, tor
@@ -19,9 +20,9 @@ from .workload import (BurstyWorkload, DiurnalWorkload, JOB_ZOO, JobSpec,
 
 __all__ = [
     "ClusterSim", "CostModel", "DeterministicSlowdown", "ExponentialTail",
-    "JobStats", "NoStragglers", "PhaseCoeffs", "RackCorrelated",
-    "StragglerModel", "calibrate", "measurements_from_pipeline_bench",
-    "phase_work", "simulate_single_job",
+    "JobStats", "MapTask", "MapTaskAttempt", "NoStragglers", "PhaseCoeffs",
+    "RackCorrelated", "StragglerModel", "TaskMapPhase", "calibrate",
+    "measurements_from_pipeline_bench", "phase_work", "simulate_single_job",
     "ROOT", "FluidNetwork", "RackTopology", "tor",
     "Decision", "MultiJobScheduler", "POLICIES", "SchemeChooser",
     "run_scheduled",

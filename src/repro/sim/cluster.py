@@ -28,13 +28,17 @@ bit-identical event trace.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import (Callable, Deque, Dict, List, Optional, Sequence, Set,
+                    Tuple)
 
 import numpy as np
 
+from ..core.assignment import (coded_assignment, hybrid_assignment,
+                               uncoded_assignment)
 from ..core.params import SchemeParams
 from ..core.shuffle_plan import StageTraffic, scheme_stage_traffic
-from .events import EventQueue, TraceEntry
+from .events import Event, EventQueue, TraceEntry
 from .network import ROOT, FluidNetwork, RackTopology, tor
 from .workload import JobSpec
 
@@ -155,8 +159,11 @@ def measurements_from_pipeline_bench(report: Dict) -> List[Dict[str, object]]:
 
 class StragglerModel:
     """Multiplicative per-server slowdown factors (>= 1) for one compute
-    phase of one job.  Sampled ONCE per (job, phase) from the simulator's
-    seeded rng — deterministic given the seed."""
+    phase of one job.  Sampled once per (job, phase) from the simulator's
+    seeded rng — and, when speculative re-execution is active, RESAMPLED per
+    map *wave*: every batch of backup launches draws fresh factors, so a
+    re-launched task sees new luck instead of replaying the wave-0 draw.
+    Deterministic given the seed either way."""
 
     def factors(self, rng: np.random.Generator, K: int, P: int) -> np.ndarray:
         raise NotImplementedError
@@ -204,6 +211,408 @@ class RackCorrelated(StragglerModel):
 
 
 # ---------------------------------------------------------------------------
+# Task-granular map phase with speculative re-execution
+# ---------------------------------------------------------------------------
+#
+# With ``submit(speculation=policy)`` the map phase stops being one barrier
+# event and becomes per-task execution: every server runs its assigned
+# subfile chunks sequentially on one map slot, a pluggable policy
+# (:mod:`repro.resilience.speculation` — duck-typed here so the sim stays
+# importable without that package) observes progress and launches BACKUP
+# attempts that contend for real slots (they queue behind the target
+# server's own tasks) and for fetch bandwidth (a backup without a local
+# input replica moves the input through the fluid network first).  The
+# first finisher wins: losing attempts are cancelled — queued ones are
+# dropped, fetching ones abort their flow, running ones cancel their
+# completion event and free the slot immediately.
+
+@dataclasses.dataclass
+class MapTaskAttempt:
+    """One execution attempt of one map task on one server."""
+    attempt_id: int
+    task: "MapTask"
+    server: int
+    wave: int                       # straggler wave the attempt belongs to
+    is_backup: bool
+    state: str = "queued"           # queued|fetching|running|done|cancelled
+    start: float = -1.0             # compute start time (state >= running)
+    fetch_flow: Optional[int] = None
+    event: Optional[Event] = None   # pending completion event
+
+
+@dataclasses.dataclass
+class MapTask:
+    """One map task: a chunk of the subfiles one server must map.
+
+    ``stores`` are the servers holding the task's input locally (the other
+    mappers of the same subfiles) — a backup attempt elsewhere must fetch
+    the input intra-rack (replica in its rack) or through the root switch.
+    """
+    index: int
+    server: int                     # home server (whose map output this is)
+    subfiles: Tuple[int, ...]
+    work: float                     # compute value-units (len * Q * d)
+    input_units: float              # network value-units of the raw input
+    stores: Tuple[int, ...]
+    done: bool = False
+    finish: float = -1.0
+    attempts: List[MapTaskAttempt] = dataclasses.field(default_factory=list)
+
+
+def _map_assignment(p: SchemeParams, scheme: str
+                    ) -> Tuple[List[List[int]], List[Tuple[int, ...]]]:
+    """(subfiles_of_server, servers_of_subfile) of the scheme's real map
+    assignment; divisibility-violating instances (simulated with
+    ``check=False``, as the paper's Table I does) fall back to a balanced
+    round-robin with the same replication factor."""
+    try:
+        mk = {"uncoded": uncoded_assignment, "coded": coded_assignment,
+              "hybrid": hybrid_assignment}[scheme]
+        a = mk(p)
+        return a.subfiles_of_server, [tuple(s) for s in a.servers_of_subfile]
+    except ValueError:
+        repl = 1 if scheme == "uncoded" else min(p.r, p.K)
+        per: List[List[int]] = [[] for _ in range(p.K)]
+        servers_of: List[Tuple[int, ...]] = []
+        step = max(1, p.K // repl)
+        for i in range(p.N):
+            srvs = tuple(sorted((i + j * step) % p.K for j in range(repl)))
+            servers_of.append(srvs)
+            for s in srvs:
+                per[s].append(i)
+        return per, servers_of
+
+
+def _chunk(seq: List[int], n_chunks: Optional[int]) -> List[List[int]]:
+    """Split one server's subfile list into tasks: per-subfile by default,
+    or ``n_chunks`` near-equal chunks when the policy coalesces."""
+    if n_chunks is None or n_chunks <= 0 or n_chunks >= len(seq):
+        return [[i] for i in seq]
+    return [list(c) for c in np.array_split(np.asarray(seq), n_chunks) if
+            len(c)]
+
+
+class TaskMapPhase:
+    """Engine of one job's task-granular map phase (see module comment).
+
+    Doubles as the VIEW handed to speculation-policy hooks: policies read
+    ``now / tasks / running / remaining / mean_rate() / rack_rates() /
+    server_load() / elapsed() / live_backup() / pick_backup_server()`` and
+    return ``[(task_index, server), ...]`` backup requests; the engine
+    enforces the budget, slot contention and first-finisher-wins.
+    """
+
+    def __init__(self, sim: "ClusterSim", job: "_SimJob",
+                 policy: object) -> None:
+        self.sim = sim
+        self.job = job
+        self.policy = policy
+        self.K = sim.K
+        self.P = sim.topology.P
+        self.Kr = self.K // self.P
+        p, d = job.params, job.spec.d
+        per_server, servers_of = _map_assignment(p, job.scheme)
+        unit = float(p.Q * d)            # value-units per subfile (in + out)
+        n_chunks = getattr(policy, "tasks_per_server", None)
+        self.tasks: List[MapTask] = []
+        self.queues: List[Deque[MapTaskAttempt]] = \
+            [deque() for _ in range(self.K)]
+        self.running: List[Optional[MapTaskAttempt]] = [None] * self.K
+        self._attempts: Dict[int, MapTaskAttempt] = {}
+        self._next_attempt = 0
+        for s in range(self.K):
+            for chunk in _chunk(per_server[s], n_chunks):
+                stores = set(servers_of[chunk[0]])
+                for i in chunk[1:]:
+                    stores &= set(servers_of[i])
+                stores.add(s)
+                task = MapTask(len(self.tasks), s, tuple(chunk),
+                               len(chunk) * unit, len(chunk) * unit,
+                               tuple(sorted(stores)))
+                self.tasks.append(task)
+        self.remaining = len(self.tasks)
+        self.backup_budget = int(policy.backup_budget(len(self.tasks)))
+        self.backups_launched = 0
+        self.wave = 0
+        pl = job.placement
+        self.pl_factors = (np.asarray(pl.map_factors, dtype=float)
+                           if pl is not None else np.ones(self.K))
+        self.wave_factors: List[np.ndarray] = []
+        self.completed: List[Tuple[float, float, int]] = []  # (s, work, srv)
+        self.done = False
+        self._probes: Dict[int, Event] = {}
+
+    # ---- view API for policies --------------------------------------------
+
+    @property
+    def now(self) -> float:
+        return self.sim.now
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.tasks)
+
+    @property
+    def n_done(self) -> int:
+        return len(self.tasks) - self.remaining
+
+    def rack_of(self, server: int) -> int:
+        return server // self.Kr
+
+    def server_load(self, server: int) -> int:
+        # count only LIVE queued attempts: cancelled losers stay in the
+        # deque until dispatch skips them, and must not make an idle
+        # server look busy to pick_backup_server
+        live = sum(1 for a in self.queues[server]
+                   if a.state == "queued" and not a.task.done)
+        return live + (1 if self.running[server] is not None else 0)
+
+    def elapsed(self, attempt: MapTaskAttempt) -> float:
+        return self.now - attempt.start if attempt.state == "running" else 0.0
+
+    def mean_rate(self) -> Optional[float]:
+        """Observed seconds per work unit over completed attempts (None
+        before the first completion) — the progress yardstick policies
+        compare running attempts against."""
+        if not self.completed:
+            return None
+        tot_s = sum(s for s, _, _ in self.completed)
+        tot_w = sum(w for _, w, _ in self.completed)
+        return tot_s / tot_w if tot_w > 0 else None
+
+    def rack_rates(self) -> List[Optional[float]]:
+        """Per-rack observed seconds per work unit (None where no completion
+        happened yet) — the cause-attribution signal for Mantri-style
+        policies."""
+        secs = [0.0] * self.P
+        work = [0.0] * self.P
+        for s, w, srv in self.completed:
+            secs[self.rack_of(srv)] += s
+            work[self.rack_of(srv)] += w
+        return [secs[r] / work[r] if work[r] > 0 else None
+                for r in range(self.P)]
+
+    def live_attempts(self, task: MapTask) -> List[MapTaskAttempt]:
+        return [a for a in task.attempts
+                if a.state in ("queued", "fetching", "running")]
+
+    def live_backup(self, task: MapTask) -> bool:
+        return any(a.is_backup for a in self.live_attempts(task))
+
+    def pick_backup_server(self, task: MapTask,
+                           avoid_racks: Sequence[int] = ()
+                           ) -> Optional[int]:
+        """Least-loaded server for a backup of ``task``: prefers idle slots,
+        then input-local servers (no fetch), then rack-local ones; never a
+        server already attempting the task.  Deterministic tie-break by
+        server id."""
+        live = {a.server for a in self.live_attempts(task)}
+        best: Optional[Tuple[Tuple[int, int, int], int]] = None
+        store_racks = {self.rack_of(s) for s in task.stores}
+        for s in range(self.K):
+            if s in live or self.rack_of(s) in avoid_racks:
+                continue
+            locality = (0 if s in task.stores else
+                        1 if self.rack_of(s) in store_racks else 2)
+            key = (self.server_load(s), locality, s)
+            if best is None or key < best[0]:
+                best = (key, s)
+        return None if best is None else best[1]
+
+    # ---- engine ------------------------------------------------------------
+
+    def start(self) -> None:
+        # wave 0: the same single factors() draw the barrier path makes
+        self.wave_factors.append(np.asarray(
+            self.sim.stragglers.factors(self.sim.rng, self.K, self.P),
+            dtype=float))
+        for task in self.tasks:
+            self._enqueue(task, task.server, wave=0, is_backup=False)
+        self._launch_backups(self._validate(
+            self.policy.on_phase_start(self)))
+        for s in range(self.K):
+            self._dispatch(s, steal=False)
+
+    def _enqueue(self, task: MapTask, server: int, wave: int,
+                 is_backup: bool) -> MapTaskAttempt:
+        a = MapTaskAttempt(self._next_attempt, task, server, wave, is_backup)
+        self._next_attempt += 1
+        self._attempts[a.attempt_id] = a
+        task.attempts.append(a)
+        self.queues[server].append(a)
+        return a
+
+    def _validate(self, reqs: Sequence[Tuple[int, int]]
+                  ) -> List[Tuple[int, int]]:
+        out: List[Tuple[int, int]] = []
+        claimed: Dict[int, Set[int]] = {}
+        for t_idx, server in reqs:
+            if self.backups_launched + len(out) >= self.backup_budget:
+                break
+            if not (0 <= t_idx < len(self.tasks) and 0 <= server < self.K):
+                continue
+            task = self.tasks[t_idx]
+            live = {a.server for a in self.live_attempts(task)}
+            live |= claimed.setdefault(t_idx, set())
+            if task.done or server in live:
+                continue
+            claimed[t_idx].add(server)
+            out.append((t_idx, server))
+        return out
+
+    def _launch_backups(self, reqs: List[Tuple[int, int]]) -> None:
+        if not reqs:
+            return
+        # a fresh wave: re-sample straggler luck for the new launches
+        self.wave += 1
+        self.wave_factors.append(np.asarray(
+            self.sim.stragglers.factors(self.sim.rng, self.K, self.P),
+            dtype=float))
+        for t_idx, server in reqs:
+            self._enqueue(self.tasks[t_idx], server, self.wave,
+                          is_backup=True)
+            self.backups_launched += 1
+            self.job.n_backups += 1
+            self.sim._trace("backup_launch",
+                            (self.job.job_id, t_idx, server, self.wave))
+        for server in sorted({s for _, s in reqs}):
+            self._dispatch(server, steal=False)
+
+    def _dispatch(self, server: int, steal: bool = True) -> None:
+        if self.done or self.running[server] is not None:
+            return
+        q = self.queues[server]
+        while q:
+            a = q.popleft()
+            if a.state != "queued" or a.task.done:
+                a.state = "cancelled"
+                continue
+            self.running[server] = a
+            if server in a.task.stores:
+                self._start_compute(a)
+            else:
+                a.state = "fetching"
+                store_racks = {self.rack_of(s) for s in a.task.stores}
+                res = (tor(self.rack_of(server))
+                       if self.rack_of(server) in store_racks else ROOT)
+                a.fetch_flow = self.sim.network.start_flow(
+                    res, a.task.input_units,
+                    (self.job.job_id, "spec_fetch", a.attempt_id))
+            return
+        if not steal or self.remaining <= 0:
+            return
+        reqs = self._validate(self.policy.on_server_idle(self, server))
+        if reqs:
+            self._launch_backups(reqs)
+            return
+        t = self.policy.next_check_time(self, server)
+        if t is not None and t > self.sim.now:
+            self._schedule_probe(server, t)
+
+    def _schedule_probe(self, server: int, t: float) -> None:
+        old = self._probes.get(server)
+        if old is not None and not old.cancelled:
+            if old.time <= t:
+                return                      # an earlier probe already queued
+            old.cancel()
+        self._probes[server] = self.sim.queue.push(
+            t, "spec_probe", (self.job.job_id, server),
+            lambda: self._probe(server))
+
+    def _probe(self, server: int) -> None:
+        self._probes.pop(server, None)         # fired: allow rescheduling
+        if self.done or self.running[server] is not None:
+            return
+        self._dispatch(server)
+
+    def _start_compute(self, a: MapTaskAttempt) -> None:
+        a.state = "running"
+        a.start = self.sim.now
+        coeffs = self.sim.cost_model.phase_coeffs("map")
+        f = self.wave_factors[a.wave][a.server] * self.pl_factors[a.server]
+        dur = float(f * coeffs.seconds(a.task.work))
+        a.event = self.sim.queue.push(
+            self.sim.now + dur, "task_done",
+            (self.job.job_id, a.task.index, a.server, a.attempt_id),
+            lambda: self._attempt_done(a))
+
+    def fetch_done(self, attempt_id: int) -> None:
+        a = self._attempts.get(attempt_id)
+        if a is None or a.state != "fetching" or self.done:
+            return
+        a.fetch_flow = None
+        lat = self.sim.topology.latency("fetch")
+        if lat > 0:
+            self.sim.queue.push(self.sim.now + lat, "spec_fetch_latency",
+                                (self.job.job_id, attempt_id),
+                                lambda: self._fetch_latency_done(a))
+        else:
+            self._start_compute(a)
+
+    def _fetch_latency_done(self, a: MapTaskAttempt) -> None:
+        if a.state == "fetching" and not self.done and not a.task.done:
+            self._start_compute(a)
+
+    def _cancel_attempt(self, a: MapTaskAttempt) -> None:
+        state = a.state
+        a.state = "cancelled"
+        if state == "fetching":
+            if a.fetch_flow is not None:
+                self.sim.network.cancel_flow(a.fetch_flow)
+                a.fetch_flow = None
+            if self.running[a.server] is a:
+                self.running[a.server] = None
+        elif state == "running":
+            if a.event is not None:
+                a.event.cancel()
+            if self.running[a.server] is a:
+                self.running[a.server] = None
+
+    def _attempt_done(self, a: MapTaskAttempt) -> None:
+        if a.state != "running" or a.task.done or self.done:
+            return
+        task = a.task
+        task.done = True
+        task.finish = self.sim.now
+        a.state = "done"
+        self.running[a.server] = None
+        self.completed.append((self.sim.now - a.start, task.work, a.server))
+        self.remaining -= 1
+        if a.is_backup:
+            self.job.n_backup_wins += 1
+        # first finisher wins: kill the losing attempts, free their slots
+        freed = []
+        for other in task.attempts:
+            if other is a or other.state in ("done", "cancelled"):
+                continue
+            was_busy = other.state in ("fetching", "running")
+            self._cancel_attempt(other)
+            if was_busy:
+                freed.append(other.server)
+        if self.remaining == 0:
+            self._finish()
+            return
+        self._launch_backups(self._validate(
+            self.policy.on_task_complete(self, task.index)))
+        if not self.done:
+            for server in sorted(set(freed) | {a.server}):
+                self._dispatch(server)
+
+    def _finish(self) -> None:
+        self.done = True
+        for a in self._attempts.values():
+            if a.state in ("queued", "fetching", "running"):
+                self._cancel_attempt(a)
+        for q in self.queues:
+            q.clear()
+        for ev in self._probes.values():
+            ev.cancel()
+        self._probes.clear()
+        self.job.map_waves = self.wave + 1
+        self.sim._task_map_done(self.job)
+
+
+# ---------------------------------------------------------------------------
 # The simulator
 # ---------------------------------------------------------------------------
 
@@ -220,11 +629,18 @@ class _SimJob:
     # typed here to keep the sim importable without the placement package):
     # pre-map fetch loads + per-server map-work factors
     placement: Optional[object] = None
+    # speculation policy (repro.resilience.speculation, duck-typed like the
+    # placement bridge): non-None turns the map phase task-granular
+    speculation: Optional[object] = None
     phase: str = "submitted"
     stage_idx: int = 0
     open_flows: int = 0
     phase_start: float = 0.0
     phase_times: Dict[str, float] = dataclasses.field(default_factory=dict)
+    tasks: Optional[TaskMapPhase] = None
+    n_backups: int = 0
+    n_backup_wins: int = 0
+    map_waves: int = 1
 
 
 @dataclasses.dataclass
@@ -237,6 +653,11 @@ class JobStats:
     submit: float
     finish: float
     phase_times: Dict[str, float]
+    # speculative re-execution accounting (task-granular map phase only)
+    speculation: Optional[str] = None   # policy name, None = barrier map
+    n_backups: int = 0                  # backup attempts launched
+    n_backup_wins: int = 0              # tasks won by a backup
+    map_waves: int = 1                  # straggler waves sampled for map
 
     @property
     def jct(self) -> float:
@@ -257,13 +678,17 @@ class ClusterSim:
     def __init__(self, topology: RackTopology, K: int,
                  cost_model: CostModel = ZERO_COST,
                  stragglers: StragglerModel | None = None,
-                 seed: int = 0) -> None:
+                 seed: int = 0,
+                 speculation: object | None = None) -> None:
+        """``speculation`` is the cluster-wide default policy applied to
+        every submission that does not pass its own (see ``submit``)."""
         if K % topology.P != 0:
             raise ValueError(f"P={topology.P} must divide K={K}")
         self.topology = topology
         self.K = K
         self.cost_model = cost_model
         self.stragglers = stragglers or NoStragglers()
+        self.speculation = speculation
         self.rng = np.random.default_rng(seed)
         self.network = FluidNetwork(topology)
         self.queue = EventQueue()
@@ -285,13 +710,20 @@ class ClusterSim:
                time: float | None = None,
                stages: List[StageTraffic] | None = None,
                compile_s: float = 0.0, check: bool = True,
-               placement: object | None = None) -> int:
+               placement: object | None = None,
+               speculation: object | None = None) -> int:
         """Enqueue a job start; returns its sim job id.
 
         ``placement`` is a :class:`repro.placement.sim_bridge
         .PlacementTraffic`: its non-local map inputs run as a ``fetch``
         network stage before the map phase (contending with concurrent
         shuffles), and its per-server factors skew the map barrier.
+
+        ``speculation`` is a :mod:`repro.resilience.speculation` policy:
+        non-None turns this job's map phase task-granular with speculative
+        backup launches (defaults to the cluster-wide policy passed to
+        ``ClusterSim``; pass the registry's ``none`` policy to force the
+        task-granular engine without backups).
         """
         t = self.now if time is None else max(float(time), self.now)
         p = SchemeParams(K=self.K, P=self.topology.P, Q=spec.Q, N=spec.N, r=r)
@@ -307,7 +739,9 @@ class ClusterSim:
                 raise ValueError("placement.intra_units_per_rack must have "
                                  f"P={self.topology.P} entries")
         job = _SimJob(self._next_job_id, spec, p, scheme, stages,
-                      float(compile_s), t, placement)
+                      float(compile_s), t, placement,
+                      speculation if speculation is not None
+                      else self.speculation)
         self._next_job_id += 1
         self._jobs[job.job_id] = job
         self.queue.push(t, "submit", (job.job_id,),
@@ -334,7 +768,7 @@ class ClusterSim:
                 self.now = until
                 for flow in self.network.advance(dt):
                     self._trace("flow_done", flow.tag)
-                    self._flow_done(flow.tag[0])
+                    self._flow_done(flow.tag)
                 break
             if dt_flow < dt_event:
                 done = self.network.advance(dt_flow)
@@ -344,7 +778,7 @@ class ClusterSim:
                 self.now = t_event
             for flow in done:
                 self._trace("flow_done", flow.tag)
-                self._flow_done(flow.tag[0])
+                self._flow_done(flow.tag)
             while self.queue and self.queue.peek_time() <= self.now:
                 ev = self.queue.pop()
                 self._trace(ev.kind, ev.data)
@@ -391,6 +825,9 @@ class ClusterSim:
             job.phase_start = self.now
 
     def _begin_compute(self, job: _SimJob, phase: str) -> None:
+        if phase == "map" and job.speculation is not None:
+            self._begin_task_map(job)
+            return
         job.phase = phase
         job.phase_start = self.now
         coeffs = self.cost_model.phase_coeffs(phase)
@@ -422,8 +859,24 @@ class ClusterSim:
         if job.open_flows == 0:                    # empty stage (e.g. r = K)
             self._stage_done(job)
 
-    def _flow_done(self, job_id: int) -> None:
-        job = self._jobs[job_id]
+    def _begin_task_map(self, job: _SimJob) -> None:
+        """Task-granular map phase: per-subfile task events with speculative
+        backups (see :class:`TaskMapPhase`)."""
+        job.phase = "map"
+        job.phase_start = self.now
+        job.tasks = TaskMapPhase(self, job, job.speculation)
+        job.tasks.start()
+
+    def _task_map_done(self, job: _SimJob) -> None:
+        job.tasks = None
+        self._phase_done(job, "map")
+
+    def _flow_done(self, tag: Tuple) -> None:
+        job = self._jobs[tag[0]]
+        if len(tag) > 1 and tag[1] == "spec_fetch":
+            if job.tasks is not None:
+                job.tasks.fetch_done(tag[2])
+            return
         job.open_flows -= 1
         if job.open_flows == 0:
             if job.phase == "fetch":
@@ -468,7 +921,14 @@ class ClusterSim:
             job.phase = "done"
             stats = JobStats(job.job_id, job.spec.name, job.scheme,
                              job.params.r, job.spec.arrival, job.submit_time,
-                             self.now, dict(job.phase_times))
+                             self.now, dict(job.phase_times),
+                             speculation=(getattr(job.speculation, "name",
+                                                  "custom")
+                                          if job.speculation is not None
+                                          else None),
+                             n_backups=job.n_backups,
+                             n_backup_wins=job.n_backup_wins,
+                             map_waves=job.map_waves)
             self.stats.append(stats)
             self._trace("job_done", (job.job_id, job.scheme, job.params.r))
             if self.on_job_done is not None:
@@ -479,10 +939,14 @@ def simulate_single_job(spec: JobSpec, topology: RackTopology, K: int,
                         scheme: str, r: int,
                         cost_model: CostModel = ZERO_COST,
                         stragglers: StragglerModel | None = None,
-                        seed: int = 0, check: bool = True) -> JobStats:
+                        seed: int = 0, check: bool = True,
+                        speculation: object | None = None) -> JobStats:
     """One job, empty cluster — the zero-contention special case whose JCT
-    must equal ``CommCost.weighted_time`` when compute costs are zero."""
+    must equal ``CommCost.weighted_time`` when compute costs are zero.
+    ``speculation`` switches the map phase to the task-granular speculative
+    engine (see :class:`TaskMapPhase`)."""
     sim = ClusterSim(topology, K, cost_model, stragglers, seed)
-    sim.submit(spec, scheme, r, time=spec.arrival, check=check)
+    sim.submit(spec, scheme, r, time=spec.arrival, check=check,
+               speculation=speculation)
     (stats,) = sim.run()
     return stats

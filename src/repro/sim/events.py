@@ -27,6 +27,13 @@ class Event:
     # optional callback fired when the event is processed
     fn: Optional[Callable[[], None]] = dataclasses.field(
         compare=False, default=None)
+    # cancelled events stay in the heap but are skipped (no trace, no fn) —
+    # first-finisher-wins speculation cancels the losing attempt's
+    # completion event without disturbing heap order
+    cancelled: bool = dataclasses.field(compare=False, default=False)
+
+    def cancel(self) -> None:
+        self.cancelled = True
 
 
 class EventQueue:
@@ -44,10 +51,16 @@ class EventQueue:
         return ev
 
     def pop(self) -> Event:
+        self._drop_cancelled()
         return heapq.heappop(self._heap)
 
     def peek_time(self) -> float:
+        self._drop_cancelled()
         return self._heap[0].time if self._heap else float("inf")
+
+    def _drop_cancelled(self) -> None:
+        while self._heap and self._heap[0].cancelled:
+            heapq.heappop(self._heap)
 
     def __len__(self) -> int:
         return len(self._heap)

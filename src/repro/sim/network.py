@@ -113,6 +113,12 @@ class FluidNetwork:
         return {fid: self.topology.capacity(f.resource) / counts[f.resource]
                 for fid, f in self.flows.items()}
 
+    def cancel_flow(self, flow_id: int) -> None:
+        """Abort an active flow (first-finisher-wins speculation kills the
+        losing attempt's input fetch); freed capacity is re-shared among the
+        survivors from the next advance.  Unknown/finished ids are no-ops."""
+        self.flows.pop(flow_id, None)
+
     def backlog(self, resource: Resource) -> float:
         """Total value-units queued on a resource (scheduler load signal)."""
         return sum(f.remaining for f in self.flows.values()

@@ -46,6 +46,8 @@ class Decision:
     # placement solver and the job went hybrid): fetch traffic + map factors
     # handed to ClusterSim.submit, plus its achieved localities
     placement: Optional[object] = None
+    # speculation policy handed to ClusterSim.submit (None = barrier map)
+    speculation: Optional[object] = None
 
 
 class SchemeChooser:
@@ -71,7 +73,9 @@ class SchemeChooser:
                  placement_policy: str = "uniform",
                  placement_lam: float = 0.8,
                  placement_remote_penalty: float = 0.5,
-                 placement_seed: int = 0) -> None:
+                 placement_seed: int = 0,
+                 speculation: Optional[object] = None,
+                 r_policy: Optional[object] = None) -> None:
         """``placement_solver`` turns on locality-aware placement for every
         hybrid admission: a registered :mod:`repro.placement` solver name
         ('random', 'greedy', 'flow', 'local_search', 'anneal_jax').  Each
@@ -81,8 +85,23 @@ class SchemeChooser:
         deterministic in ``placement_seed`` and the admission sequence,
         then solves the Section-IV assignment; the resulting fetch traffic
         + map-phase imbalance ride into the sim via
-        :class:`Decision.placement`.  ``None`` (default) keeps the legacy
-        locality-blind behavior."""
+        :class:`Decision.placement` — and since the estimate prices that
+        fetch traffic per candidate, a placement-heavy hybrid can LOSE an
+        admission it would have won blind.  ``None`` (default) keeps the
+        legacy locality-blind behavior.
+
+        ``speculation`` (a :mod:`repro.resilience.speculation` policy)
+        rides into every admission's ``ClusterSim.submit`` — the map phase
+        turns task-granular with speculative backups.
+
+        ``r_policy`` (e.g. :class:`repro.resilience.replication
+        .HedgedRPolicy`) makes the chooser straggler-aware: candidate
+        compute phases are inflated by ``r_policy.compute_inflation(scheme,
+        r)`` instead of the static ``expected_straggler`` guess, and hybrid
+        admissions take ``r_policy.placement_for(p)`` — a deterministic
+        rack-hedged structured placement — over the random draw.  The
+        :class:`MultiJobScheduler` feeds every completion back via
+        ``r_policy.observe`` so the fit tracks the live cluster."""
         self.K = K
         self.cost_model = cost_model
         self.rs = tuple(rs)
@@ -97,7 +116,10 @@ class SchemeChooser:
         self.placement_lam = float(placement_lam)
         self.placement_remote_penalty = float(placement_remote_penalty)
         self.placement_seed = int(placement_seed)
+        self.speculation = speculation
+        self.r_policy = r_policy
         self._placement_seq = 0
+        self._admission_replicas: Optional[np.ndarray] = None
 
     def candidates(self) -> List[Tuple[str, int]]:
         out: List[Tuple[str, int]] = []
@@ -109,10 +131,26 @@ class SchemeChooser:
                            scheme == "hybrid")
         return out
 
+    def _phase_inflation(self, scheme: str, r: int) -> float:
+        """Per-candidate expected straggler inflation of compute phases:
+        the fitted barrier factor when an ``r_policy`` is attached (so
+        map-heavy high-r candidates pay their true exposure), else the
+        static ``expected_straggler`` guess."""
+        if self.r_policy is not None:
+            return float(self.r_policy.compute_inflation(scheme, r))
+        return self.expected_straggler
+
     def estimate(self, spec: JobSpec, scheme: str, r: int,
-                 cluster: ClusterSim) -> Optional[float]:
+                 cluster: ClusterSim,
+                 placement: Optional[object] = None) -> Optional[float]:
         """Estimated completion seconds for one candidate; None if the
-        scheme's divisibility hypotheses reject (N, Q, r)."""
+        scheme's divisibility hypotheses reject (N, Q, r).
+
+        ``placement`` (a ``PlacementTraffic``) makes the estimate
+        FETCH-AWARE: the pre-map fetch drains behind the current root/ToR
+        backlogs and the map phase is skewed by the placement's worst
+        map-work factor — pricing a placement BEFORE choosing, not after.
+        """
         try:
             p = SchemeParams(K=self.K, P=cluster.topology.P,
                              Q=spec.Q, N=spec.N, r=r)
@@ -120,11 +158,26 @@ class SchemeChooser:
         except ValueError:
             return None
         est = self._compile_charge(p, scheme, probe=False)[0]
+        topo = cluster.topology
+        if placement is not None and placement.total_units > 0:
+            times = [0.0]
+            if placement.cross_units > 0:
+                load = placement.cross_units + cluster.network.backlog(ROOT)
+                times.append(load / topo.capacity(ROOT))
+            for rack, units in enumerate(placement.intra_units_per_rack):
+                if units > 0:
+                    load = units + cluster.network.backlog(tor(rack))
+                    times.append(load / topo.capacity(tor(rack)))
+            est += max(times) + topo.latency("fetch")
+        map_skew = (max(placement.map_factors)
+                    if placement is not None else 1.0)
+        infl = self._phase_inflation(scheme, r)
         work = phase_work(p, scheme, spec.d)
         for phase in ("map", "pack", "reduce"):
-            est += (self.expected_straggler
-                    * self.cost_model.phase_coeffs(phase).seconds(work[phase]))
-        topo = cluster.topology
+            secs = self.cost_model.phase_coeffs(phase).seconds(work[phase])
+            if phase == "map":
+                secs *= map_skew
+            est += infl * secs
         for stage in stages:
             times = [0.0]
             if stage.cross_pairs > 0:
@@ -160,15 +213,23 @@ class SchemeChooser:
         return self.cost_model.plan_compile.seconds(p.N), False
 
     def choose(self, spec: JobSpec, cluster: ClusterSim) -> Decision:
+        self._placement_seq += 1          # one replica draw per admission
+        self._admission_replicas = None
         if self.adaptive:
-            best: Optional[Tuple[float, str, int]] = None
+            best: Optional[Tuple[float, str, int, Optional[object]]] = None
             for scheme, r in self.candidates():
                 est = self.estimate(spec, scheme, r, cluster)
-                if est is not None and (best is None or est < best[0]):
-                    best = (est, scheme, r)
+                if est is None:
+                    continue                       # inadmissible candidate
+                tr = self._candidate_placement(spec, scheme, r, cluster)
+                if tr is not None:                 # price the fetch traffic
+                    est = self.estimate(spec, scheme, r, cluster,
+                                        placement=tr)
+                if best is None or est < best[0]:
+                    best = (est, scheme, r, tr)
             if best is None:
                 raise ValueError(f"no admissible (scheme, r) for {spec}")
-            est, scheme, r = best
+            est, scheme, r, placement = best
         else:
             scheme, r = self.fixed
             est = self.estimate(spec, scheme, r, cluster)
@@ -177,26 +238,48 @@ class SchemeChooser:
                     f"fixed (scheme, r)={self.fixed} is inadmissible for "
                     f"{spec}; build the workload catalog with "
                     f"valid_subfile_counts so baselines cover the stream")
+            placement = self._candidate_placement(spec, scheme, r, cluster)
+            if placement is not None:
+                est = self.estimate(spec, scheme, r, cluster,
+                                    placement=placement)
         p = SchemeParams(K=self.K, P=cluster.topology.P,
                          Q=spec.Q, N=spec.N, r=r, r_f=self.placement_r_f)
         compile_s, hit = self._compile_charge(p, scheme, probe=True)
-        return Decision(scheme, r, est, compile_s, hit,
-                        self._solve_placement(p, spec, scheme))
+        return Decision(scheme, r, est, compile_s, hit, placement,
+                        self.speculation)
 
-    def _solve_placement(self, p: SchemeParams, spec: JobSpec,
-                         scheme: str) -> Optional[object]:
-        """Locality-aware placement of one hybrid admission (None when the
-        knob is off or the scheme has no hybrid structure to optimize).
-        Imported lazily: the sim stays usable without repro.placement."""
-        if self.placement_solver is None or scheme != "hybrid":
+    def _candidate_placement(self, spec: JobSpec, scheme: str, r: int,
+                             cluster: ClusterSim) -> Optional[object]:
+        """Placement traffic of one (admissible) hybrid candidate: the
+        r_policy's rack-hedged structured placement when attached, else the
+        admission's random replica draw (shared across the candidate rs —
+        replicas are r-invariant) solved per r.  None when both knobs are
+        off or the instance is structurally rejected.  Imported lazily: the
+        sim stays usable without repro.placement."""
+        if scheme != "hybrid":
+            return None
+        p = SchemeParams(K=self.K, P=cluster.topology.P,
+                         Q=spec.Q, N=spec.N, r=r, r_f=self.placement_r_f)
+        if self.r_policy is not None:
+            tr = self.r_policy.placement_for(p, spec.d)
+            if tr is not None:
+                return tr
+        if self.placement_solver is None:
             return None
         from ..placement import place_replicas, solve, traffic_for_result
-        self._placement_seq += 1
-        rng = np.random.default_rng(
-            (self.placement_seed, self._placement_seq))
-        replicas = place_replicas(p, rng, self.placement_policy)
-        result = solve(p, replicas, self.placement_solver,
-                       self.placement_lam, rng=rng)
+        if self._admission_replicas is None:
+            rng = np.random.default_rng(
+                (self.placement_seed, self._placement_seq))
+            self._admission_replicas = place_replicas(
+                p, rng, self.placement_policy)
+        try:
+            result = solve(p, self._admission_replicas,
+                           self.placement_solver, self.placement_lam,
+                           rng=np.random.default_rng(
+                               (self.placement_seed, self._placement_seq,
+                                r)))
+        except ValueError:
+            return None
         return traffic_for_result(result, spec.d,
                                   self.placement_remote_penalty)
 
@@ -221,6 +304,7 @@ class MultiJobScheduler:
         self._running = 0
         self._seq = 0
         self._service_by_kind: Dict[str, float] = {}
+        self._expected_map: Dict[int, float] = {}
 
     # ---- policy ordering ---------------------------------------------------
 
@@ -243,7 +327,7 @@ class MultiJobScheduler:
 
     def run(self, jobs: Sequence[JobSpec],
             cluster: ClusterSim) -> List[JobStats]:
-        cluster.on_job_done = lambda stats: self._job_done(cluster)
+        cluster.on_job_done = lambda stats: self._job_done(stats, cluster)
         for spec in sorted(jobs, key=lambda s: s.arrival):
             cluster.at(spec.arrival,
                        lambda s=spec: self._arrive(s, cluster), "arrival")
@@ -254,8 +338,12 @@ class MultiJobScheduler:
         self._seq += 1
         self._drain(cluster)
 
-    def _job_done(self, cluster: ClusterSim) -> None:
+    def _job_done(self, stats: JobStats, cluster: ClusterSim) -> None:
         self._running -= 1
+        rp = self.chooser.r_policy
+        if rp is not None:
+            # feed the observed map slowdown back into the straggler fit
+            rp.observe(stats, self._expected_map.pop(stats.job_id, 0.0))
         self._drain(cluster)
 
     def _drain(self, cluster: ClusterSim) -> None:
@@ -264,8 +352,17 @@ class MultiJobScheduler:
             d = self.chooser.choose(spec, cluster)
             job_id = cluster.submit(spec, d.scheme, d.r,
                                     compile_s=d.compile_s,
-                                    placement=d.placement)
+                                    placement=d.placement,
+                                    speculation=d.speculation)
             self.decisions[job_id] = d
+            if self.chooser.r_policy is not None:
+                p = SchemeParams(K=self.chooser.K, P=cluster.topology.P,
+                                 Q=spec.Q, N=spec.N, r=d.r)
+                exp = self.chooser.cost_model.map.seconds(
+                    phase_work(p, d.scheme, spec.d)["map"])
+                if d.placement is not None:      # locality skew is expected,
+                    exp *= max(d.placement.map_factors)  # not straggling
+                self._expected_map[job_id] = exp
             self._service_by_kind[spec.name] = (
                 self._service_by_kind.get(spec.name, 0.0) + d.est_jct)
             self._running += 1

@@ -304,10 +304,13 @@ def test_map_factors_shift_map_phase():
 def _placement_stream(placement_solver, seed=9):
     jobs = PoissonWorkload(default_catalog(8, 4), n_jobs=12,
                            rate=4.0).generate(seed=seed)
-    topo = RackTopology(P=4, cross_bw=1e5, intra_bw=1e6)
+    topo = RackTopology(P=4, cross_bw=1e4, intra_bw=1e6)
     cluster = ClusterSim(topo, K=8, cost_model=CostModel(
         map=PhaseCoeffs(1e-4, 1e-8)), seed=seed)
-    chooser = SchemeChooser(8, cost_model=cluster.cost_model,
+    # rs=(1, 2): the fetch-AWARE estimate (PR 5) correctly prices random
+    # r=3 placements (~70% node locality) out of hybrid admissions, so the
+    # stream keeps r <= 2 where hybrid genuinely wins with its fetch
+    chooser = SchemeChooser(8, cost_model=cluster.cost_model, rs=(1, 2),
                             placement_solver=placement_solver)
     stats, sched = run_scheduled(jobs, cluster, chooser, policy="fifo",
                                  max_concurrent=3)

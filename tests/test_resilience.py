@@ -1,0 +1,334 @@
+"""repro.resilience tests: speculation policy registry, task-granular map
+engine semantics (no-op under NoStragglers, first-finisher-wins, backup
+fetch contention, per-wave straggler resampling), straggler-model fitting,
+the hedged r-policy, and the fetch-aware chooser flip."""
+import numpy as np
+import pytest
+
+from repro.resilience import (HedgedRPolicy, SPECULATION_POLICIES,
+                              StragglerFit, check_frontier_invariants,
+                              cloning_vs_coding_frontier,
+                              fit_straggler_model, get_policy,
+                              hedged_vs_static_stream, straggler_regimes)
+from repro.sim import (ClusterSim, CostModel, DeterministicSlowdown,
+                       ExponentialTail, JobSpec, NoStragglers, PhaseCoeffs,
+                       RackCorrelated, RackTopology, SchemeChooser,
+                       simulate_single_job)
+
+TOPO = RackTopology(P=4, cross_bw=1e4, intra_bw=1e5)
+COST = CostModel(map=PhaseCoeffs(0.0, 1e-6))
+SPEC = JobSpec("histogram", 48, 16, 1)
+
+
+def _single(policy=None, stragglers=None, seed=0, cost=COST, scheme="hybrid",
+            r=2, spec=SPEC, topo=TOPO, K=8, **pol_kwargs):
+    pol = get_policy(policy, **pol_kwargs) if policy is not None else None
+    return simulate_single_job(spec, topo, K, scheme, r, cost_model=cost,
+                               stragglers=stragglers, seed=seed,
+                               speculation=pol)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_all_policies():
+    assert set(SPECULATION_POLICIES) >= {"none", "clone", "late", "mantri"}
+    for name in SPECULATION_POLICIES:
+        assert get_policy(name).name == name
+
+
+def test_registry_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown speculation policy"):
+        get_policy("dolly++")
+
+
+# ---------------------------------------------------------------------------
+# Task-granular engine semantics
+# ---------------------------------------------------------------------------
+
+def test_task_map_matches_barrier_map_with_zero_alpha():
+    """With alpha=0 and balanced loads the task-granular map phase sums to
+    exactly the barrier phase (per-task seconds are additive in work)."""
+    task = _single("none")
+    barrier = _single(None)
+    assert task.jct == pytest.approx(barrier.jct, rel=1e-12)
+    assert task.phase_times["map"] == pytest.approx(
+        barrier.phase_times["map"], rel=1e-12)
+    assert task.speculation == "none" and barrier.speculation is None
+
+
+@pytest.mark.parametrize("policy", ["clone", "late", "mantri"])
+def test_speculation_is_noop_under_no_stragglers(policy):
+    """Acceptance pin: under NoStragglers every policy's JCT is
+    bit-identical to the none policy's (backups never pay off, so either
+    none launch or all are cancelled at zero cost)."""
+    base = _single("none")
+    st = _single(policy)
+    assert st.jct == base.jct
+    assert st.n_backup_wins == 0
+    assert st.phase_times["map"] == base.phase_times["map"]
+
+
+@pytest.mark.parametrize("policy", ["clone", "late", "mantri"])
+def test_speculation_beats_none_under_deterministic_straggler(policy):
+    """One 6x-slow server: every speculation policy must strictly shorten
+    the map phase via winning backups."""
+    slow = DeterministicSlowdown((6.0,) + (1.0,) * 7)
+    base = _single("none", stragglers=slow)
+    st = _single(policy, stragglers=slow)
+    assert st.n_backups > 0
+    assert st.n_backup_wins > 0
+    assert st.phase_times["map"] < base.phase_times["map"]
+    assert st.jct < base.jct
+
+
+def test_first_finisher_wins_no_duplicate_completions():
+    """Each task completes exactly once even with aggressive cloning: the
+    trace's task_done events are unique per task index."""
+    slow = DeterministicSlowdown((6.0,) + (1.0,) * 7)
+    sim = ClusterSim(TOPO, 8, COST, slow, 0,
+                     speculation=get_policy("clone", n_clones=2))
+    sim.submit(SPEC, "hybrid", 2)
+    (stats,) = sim.run()
+    done = [t[2][1] for t in sim.trace if t[1] == "task_done"]
+    assert len(done) == len(set(done)) == 96          # N * r tasks, once
+    assert stats.n_backup_wins > 0
+
+
+def test_backup_fetch_contends_on_network():
+    """A backup on a server without the input replica must move the input
+    through the fluid network: with the home server catastrophically slow,
+    replica-less clones win only AFTER their spec_fetch flow drains — the
+    completions appear in the trace."""
+    slow = DeterministicSlowdown((1000.0,) + (1.0,) * 7)
+    sim = ClusterSim(TOPO, 8, COST, slow, 0,
+                     speculation=get_policy("clone", n_clones=1))
+    sim.submit(SPEC, "hybrid", 2)
+    (stats,) = sim.run()
+    fetches = [t for t in sim.trace
+               if t[1] == "flow_done" and t[2][1] == "spec_fetch"]
+    assert fetches, "replica-less clones should fetch inputs over the net"
+    assert stats.n_backup_wins > 0
+
+
+def test_map_waves_resample_per_backup_batch():
+    """Satellite pin: backup launches draw FRESH straggler factors (a new
+    wave) — map_waves counts them, and the draws consume the sim rng, so a
+    straggling run's factor sequence differs from the no-backup run's."""
+    st = _single("late", stragglers=ExponentialTail(2.0), seed=3)
+    assert st.map_waves >= 2
+    base = _single("none", stragglers=ExponentialTail(2.0), seed=3)
+    assert base.map_waves == 1
+
+
+def test_tasks_per_server_coalescing_preserves_totals():
+    st = _single("none", tasks_per_server=3)
+    base = _single("none")
+    assert st.phase_times["map"] == pytest.approx(base.phase_times["map"])
+    assert st.jct == pytest.approx(base.jct)
+
+
+def test_speculation_on_scheduler_decisions():
+    """The chooser's speculation knob rides into every admission."""
+    from repro.sim import PoissonWorkload, default_catalog, run_scheduled
+    jobs = PoissonWorkload(default_catalog(8, 4), n_jobs=8,
+                           rate=4.0).generate(seed=2)
+    cluster = ClusterSim(TOPO, 8, COST, ExponentialTail(1.0), seed=2)
+    chooser = SchemeChooser(8, cost_model=COST,
+                            speculation=get_policy("late"))
+    stats, sched = run_scheduled(jobs, cluster, chooser)
+    assert len(stats) == 8
+    assert all(s.speculation == "late" for s in stats)
+
+
+# ---------------------------------------------------------------------------
+# Determinism with speculation enabled (satellite: per-wave resampling must
+# keep per-seed traces bit-identical)
+# ---------------------------------------------------------------------------
+
+def _spec_run(seed, policy, scale=1.5):
+    sim = ClusterSim(TOPO, 8, COST, ExponentialTail(scale), seed,
+                     speculation=get_policy(policy))
+    sim.submit(SPEC, "hybrid", 2)
+    sim.submit(JobSpec("histogram", 48, 16, 2), "hybrid", 2, time=0.001)
+    stats = sim.run()
+    return [s.jct for s in stats], list(sim.trace)
+
+
+@pytest.mark.parametrize("policy", ["none", "clone", "late", "mantri"])
+def test_speculative_traces_bit_identical_per_seed(policy):
+    j1, t1 = _spec_run(11, policy)
+    j2, t2 = _spec_run(11, policy)
+    assert j1 == j2
+    assert t1 == t2
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10 ** 6),
+           scale=st.floats(0.1, 3.0),
+           policy=st.sampled_from(["clone", "late", "mantri"]))
+    def test_speculative_traces_deterministic_property(seed, scale, policy):
+        """Any (seed, tail, policy): rerunning reproduces the event trace
+        bit-for-bit — wave resampling stays on the seeded rng."""
+        assert _spec_run(seed, policy, scale) == _spec_run(seed, policy,
+                                                           scale)
+else:                                                  # pragma: no cover
+    def test_speculative_traces_deterministic_property():
+        pytest.importorskip(
+            "hypothesis",
+            reason="property tests need hypothesis (pip install .[test])")
+
+
+# ---------------------------------------------------------------------------
+# Straggler-model fitting
+# ---------------------------------------------------------------------------
+
+def test_fit_classifies_none():
+    fit = fit_straggler_model([1.0, 1.01, 1.02] * 10, K=9, P=3)
+    assert fit.kind == "none"
+    assert fit.expected_barrier_factor(9, 3) == 1.0
+
+
+def test_fit_recovers_exponential_scale():
+    rng = np.random.default_rng(0)
+    scale, K = 0.5, 16
+    # observed slowdowns ~ max of K iid (1 + Exp(scale)) draws
+    obs = 1.0 + rng.exponential(scale, size=(500, K)).max(axis=1)
+    fit = fit_straggler_model(obs.tolist(), K=K, P=4)
+    assert fit.kind == "exp_tail"
+    assert fit.scale == pytest.approx(scale, rel=0.25)
+    assert fit.expected_barrier_factor(K, 4) > 1.5
+
+
+def test_fit_recovers_rack_correlated():
+    rng = np.random.default_rng(1)
+    p_slow, factor, P = 0.2, 4.0, 4
+    hit = rng.random(400) < 1 - (1 - p_slow) ** P
+    obs = np.where(hit, factor, 1.0)
+    fit = fit_straggler_model(obs.tolist(), K=16, P=P)
+    assert fit.kind == "rack"
+    assert fit.factor == pytest.approx(factor, rel=0.05)
+    assert fit.p_slow == pytest.approx(p_slow, abs=0.07)
+
+
+def test_fit_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fit kind"):
+        StragglerFit("bimodal")
+
+
+def test_hedged_policy_observe_refits_online():
+    rp = HedgedRPolicy(8, 4, refit_every=4, hedge_placement=False)
+    assert rp.fit.kind == "none"
+
+    class FakeStats:
+        def __init__(self, t):
+            self.phase_times = {"map": t}
+    for t in (4.0, 1.0, 4.0, 1.0, 4.0, 1.0, 4.0, 1.0):
+        rp.observe(FakeStats(t), expected_map_s=1.0)
+    assert rp.fit.kind == "rack"
+    assert rp.fit.factor == pytest.approx(4.0)
+
+
+def test_hedged_placement_is_deterministic_and_local():
+    from repro.core.params import SchemeParams
+    rp = HedgedRPolicy(8, 4, placement_solver="flow")
+    p = SchemeParams(8, 4, 16, 48, 2, r_f=3)
+    tr1, tr2 = rp.placement_for(p), rp.placement_for(p)
+    assert tr1 is tr2                       # cached
+    assert tr1.node_locality >= 0.9         # rack-hedged structured + flow
+
+
+def test_hedged_inflation_prices_rack_tail():
+    rp = HedgedRPolicy(8, 4, fit=StragglerFit("rack", p_slow=0.25,
+                                              factor=4.0),
+                       hedge_placement=False)
+    infl = rp.compute_inflation("hybrid", 3)
+    assert infl == pytest.approx(1 + (1 - 0.75 ** 4) * 3.0)
+
+
+# ---------------------------------------------------------------------------
+# Frontier + hedged stream (small, fast versions of the bench assertions)
+# ---------------------------------------------------------------------------
+
+FRONTIER_COST = CostModel(map=PhaseCoeffs(1e-4, 2e-8),
+                          pack=PhaseCoeffs(5e-5, 1e-8),
+                          reduce=PhaseCoeffs(1e-4, 2e-8))
+
+
+def test_frontier_invariants_small_grid():
+    cells = cloning_vs_coding_frontier(rows=[(9, 3, 18, 72, 2)], n_seeds=4,
+                                       cost=FRONTIER_COST)
+    inv = check_frontier_invariants(cells)
+    assert inv["noop_under_none"]
+    assert inv["late_improves_p99"]
+    assert inv["clone_improves_p99"]
+    assert inv["mantri_improves_p99_rack"]
+
+
+def test_hedged_beats_static_under_rack_correlated():
+    out = hedged_vs_static_stream(stragglers=RackCorrelated(0.25, 4.0),
+                                  cost=FRONTIER_COST, n_jobs=30, n_probe=15,
+                                  seed=0)
+    assert out["fit"]["kind"] == "rack"
+    assert out["hedged_beats_static_p99"]
+
+
+# ---------------------------------------------------------------------------
+# Fetch-aware chooser (satellite): the flip pin
+# ---------------------------------------------------------------------------
+
+def test_fetch_aware_estimate_flips_decision():
+    """Pin: histogram (N=168, d=1) on a 100x-skewed fabric.  Blind to
+    fetch, the chooser picks hybrid r=3 (least shuffle traffic); pricing
+    the solved random placement's fetch flips it to coded r=3 — and the
+    flip is CORRECT: the simulated JCT of the fetch-aware choice is lower.
+    """
+    topo = RackTopology(P=4, cross_bw=1e4, intra_bw=1e6)
+    cost = CostModel(map=PhaseCoeffs(1e-4, 1e-8))
+    spec = JobSpec("histogram", 168, 16, 1)
+
+    blind = SchemeChooser(8, cost_model=cost)
+    aware = SchemeChooser(8, cost_model=cost, placement_solver="greedy")
+    cluster = ClusterSim(topo, 8, cost)
+    d_blind = blind.choose(spec, cluster)
+    d_aware = aware.choose(spec, cluster)
+    assert (d_blind.scheme, d_blind.r) == ("hybrid", 3)
+    assert (d_aware.scheme, d_aware.r) != ("hybrid", 3)
+    assert d_aware.placement is None        # the winner needs no fetch
+
+    # ground truth: simulate both decisions (the blind hybrid pays its
+    # placement's fetch in the sim — that is exactly what PR 4 wired up)
+    tr = aware._candidate_placement(spec, "hybrid", 3, cluster)
+    sim = ClusterSim(topo, 8, cost)
+    blind_id = sim.submit(spec, "hybrid", 3, placement=tr)
+    jct_blind = {s.job_id: s for s in sim.run()}[blind_id].jct
+    sim2 = ClusterSim(topo, 8, cost)
+    aware_id = sim2.submit(spec, d_aware.scheme, d_aware.r)
+    jct_aware = {s.job_id: s for s in sim2.run()}[aware_id].jct
+    assert jct_aware < jct_blind
+
+
+def test_fetch_aware_estimate_includes_backlog():
+    """Fetch pricing sees current network load: the same candidate's
+    estimate grows when the root switch is backlogged."""
+    topo = RackTopology(P=4, cross_bw=1e4, intra_bw=1e6)
+    chooser = SchemeChooser(8, placement_solver="greedy")
+    spec = JobSpec("histogram", 168, 16, 1)
+    quiet = ClusterSim(topo, 8)
+    tr = chooser._candidate_placement(spec, "hybrid", 3, quiet)
+    assert tr is not None and tr.cross_units > 0
+    e_quiet = chooser.estimate(spec, "hybrid", 3, quiet, placement=tr)
+    busy = ClusterSim(topo, 8)
+    busy.network.start_flow("root", 5e4, (99, "bg"))
+    e_busy = chooser.estimate(spec, "hybrid", 3, busy, placement=tr)
+    assert e_busy > e_quiet

@@ -428,6 +428,73 @@ def test_chooser_probe_tolerates_non_executable_plan():
 
 
 # ---------------------------------------------------------------------------
+# MultiJobScheduler drain-order edge cases: simultaneous completions + ties
+# ---------------------------------------------------------------------------
+
+def _tied_stream(policy, n_jobs=4, max_concurrent=1, seed=0):
+    """n identical-size jobs (distinct names) arriving simultaneously:
+    every SRPT/fair ordering signal ties."""
+    jobs = [JobSpec(f"job{i}", 48, 16, 1, arrival=0.0)
+            for i in range(n_jobs)]
+    topo = RackTopology(P=4, cross_bw=1e4, intra_bw=1e5)
+    cluster = ClusterSim(topo, K=8, cost_model=CostModel(
+        map=PhaseCoeffs(1e-4, 1e-8)), seed=seed)
+    chooser = SchemeChooser(8, cost_model=cluster.cost_model)
+    stats, sched = run_scheduled(jobs, cluster, chooser, policy=policy,
+                                 max_concurrent=max_concurrent)
+    return stats, sched, cluster
+
+
+@pytest.mark.parametrize("policy", ["fifo", "srpt", "fair"])
+def test_tied_queue_drains_in_arrival_order(policy):
+    """All ordering signals tie -> every policy must fall back to arrival
+    (seq) order: np.argmin picks the FIRST minimal index."""
+    stats, sched, _ = _tied_stream(policy)
+    assert [s.name for s in stats] == ["job0", "job1", "job2", "job3"]
+    assert len(sched.decisions) == 4
+
+
+@pytest.mark.parametrize("policy", ["fifo", "srpt", "fair"])
+def test_simultaneous_job_done_admits_each_queued_job_once(policy):
+    """max_concurrent=2 with identical jobs: both running jobs finish at
+    the SAME instant, firing two _job_done drains back to back — each must
+    admit exactly one queued job (no double-admission, no lost slot)."""
+    stats, sched, cluster = _tied_stream(policy, n_jobs=6, max_concurrent=2)
+    assert len(stats) == 6
+    assert sorted(s.name for s in stats) == sorted(f"job{i}"
+                                                   for i in range(6))
+    submits = [t for t in cluster.trace if t[1] == "submit"]
+    assert len(submits) == 6                    # one submission per job
+    # the two leaders really did finish simultaneously (the edge case)
+    finishes = sorted(s.finish for s in stats)
+    assert finishes[0] == finishes[1]
+
+
+@pytest.mark.parametrize("policy", ["srpt", "fair"])
+def test_tied_drain_is_bit_identical_across_reruns(policy):
+    s1, d1, c1 = _tied_stream(policy, n_jobs=5, max_concurrent=2)
+    s2, d2, c2 = _tied_stream(policy, n_jobs=5, max_concurrent=2)
+    assert [s.jct for s in s1] == [s.jct for s in s2]
+    assert [s.name for s in s1] == [s.name for s in s2]
+    assert c1.trace == c2.trace
+
+
+def test_srpt_reprices_non_tied_queue_at_pop_time():
+    """Sanity alongside the tie tests: with genuinely different sizes SRPT
+    pops the shortest of the QUEUED jobs first, regardless of arrival
+    order (a blocker pins the slot so both contenders actually queue)."""
+    jobs = [JobSpec("blocker", 48, 16, 1, arrival=0.0),
+            JobSpec("big", 336, 16, 16, arrival=0.0),
+            JobSpec("small", 48, 16, 1, arrival=0.0)]
+    topo = RackTopology(P=4, cross_bw=1e4, intra_bw=1e5)
+    cluster = ClusterSim(topo, K=8)
+    chooser = SchemeChooser(8)
+    stats, _ = run_scheduled(jobs, cluster, chooser, policy="srpt",
+                             max_concurrent=1)
+    assert [s.name for s in stats] == ["blocker", "small", "big"]
+
+
+# ---------------------------------------------------------------------------
 # Engine instrumentation feeds the calibration pipeline end to end
 # ---------------------------------------------------------------------------
 
