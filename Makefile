@@ -4,7 +4,7 @@
 PYTEST ?= python -m pytest
 
 .PHONY: test test-all bench bench-pipeline bench-sim bench-locality \
-	bench-resilience bench-table1
+	bench-resilience bench-table1 bench-scale
 
 test:
 	$(PYTEST) -q -m "not slow"
@@ -29,3 +29,6 @@ bench-resilience:
 
 bench-table1:
 	PYTHONPATH=src python benchmarks/table1_costs.py
+
+bench-scale:
+	PYTHONPATH=src python benchmarks/scale_bench.py

@@ -1,13 +1,13 @@
 """Benchmark aggregator: one section per paper table + the systems benches.
 
-Sections print their own summaries; the ``table1``/``table2`` sections run
-their full bench CLIs with default args, REWRITING the corresponding
-committed ``BENCH_*.json`` artifacts in the repo root (that is how the
-artifacts are regenerated — expect a dirty git tree afterwards).
+Sections print their own summaries; the ``table1``/``table2``/``scale``
+sections run their full bench CLIs with default args, REWRITING the
+corresponding committed ``BENCH_*.json`` artifacts in the repo root (that
+is how the artifacts are regenerated — expect a dirty git tree afterwards).
 ``shuffle``/``roofline`` print ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run [--section table1|table2|shuffle|
-                                                      roofline|all]
+                                                      roofline|scale|all]
 """
 from __future__ import annotations
 
@@ -15,13 +15,15 @@ import argparse
 import sys
 import traceback
 
-from . import roofline_report, shuffle_bench, table1_costs, table2_locality
+from . import (roofline_report, scale_bench, shuffle_bench, table1_costs,
+               table2_locality)
 
 SECTIONS = {
     "table1": table1_costs.main,
     "table2": table2_locality.main,
     "shuffle": shuffle_bench.main,
     "roofline": roofline_report.main,
+    "scale": scale_bench.main,
 }
 
 

@@ -1,0 +1,186 @@
+"""Scheme-family scaling benchmark: how far K stretches per compiler family.
+
+The binomial hybrid construction needs ``C(P, r) | NP/K`` — at a fixed,
+realistic shard count (N a power of two) the binomial coefficient must
+itself be a power of two, which pins P to tiny values.  The resolvable
+family only needs ``q^{r-1} | NP/K`` with q = P/r, so at the SAME N and the
+SAME multicast gain the feasible cluster is an order of magnitude wider.
+This bench measures that wall, and certifies the resolvable family is not
+just feasible but correct and affordable at scale:
+
+  * ``max_k``    — max feasible K per family at equal multicast gain g and
+                   fixed N (asserts resolvable/binomial >= 10x),
+  * ``compile``  — plan-compile wall clock vs K on the resolvable ladder,
+  * ``oracle``   — NumPy shuffle re-execution parity at the largest
+                   resolvable K (asserts bit-exact),
+  * ``chooser``  — a simulated job where every binomial r is inadmissible:
+                   the adaptive chooser must select hybrid_resolvable and
+                   the scheduled run must complete.
+
+  PYTHONPATH=src python benchmarks/scale_bench.py [--smoke]  ->
+      BENCH_scale.json
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.coded_collectives import (compile_hybrid_plan,
+                                          plan_cache_clear,
+                                          plan_shuffle_reference,
+                                          simulate_plan_shuffle)
+from repro.core.params import SchemeParams
+
+try:                                    # run as module or as a script
+    from ._common import emit_report, make_parser
+except ImportError:                     # pragma: no cover
+    from _common import emit_report, make_parser
+
+GAIN = 2          # multicast gain compared at: binomial r=2, resolvable r=3
+KR = 2            # servers per rack (fixed, Table I's dense-rack setting)
+
+
+def _feasible(family: str, K: int, N: int) -> Optional[SchemeParams]:
+    """Params at (K, N) with multicast gain GAIN under ``family``, or None."""
+    if K % KR:
+        return None
+    P = K // KR
+    r = GAIN if family == "binomial" else GAIN + 1
+    if r > P or (N * P) % K:
+        return None
+    try:
+        p = SchemeParams(K=K, P=P, Q=K, N=N, r=r)
+        if family == "binomial":
+            p.validate_hybrid()
+        else:
+            p.validate_hybrid_resolvable()
+    except ValueError:
+        return None
+    return p
+
+
+def max_feasible_k(family: str, N: int, k_cap: int) -> Dict:
+    """Largest feasible K <= k_cap at gain GAIN and fixed N, plus the
+    divisor the family demands of the per-layer subfile count."""
+    best = None
+    for K in range(2 * KR, k_cap + 1, KR):
+        p = _feasible(family, K, N)
+        if p is not None:
+            best = p
+    if best is None:
+        return {"family": family, "max_k": 0}
+    div = (math.comb(best.P, best.r) if family == "binomial"
+           else best.spc_q ** (best.r - 1))
+    return {"family": family, "max_k": best.K, "P": best.P, "r": best.r,
+            "subpacketization_divisor": div}
+
+
+def resolvable_ladder(N: int, k_cap: int) -> List[SchemeParams]:
+    """Every feasible resolvable K <= k_cap at gain GAIN and fixed N."""
+    out = []
+    for K in range(2 * KR, k_cap + 1, KR):
+        p = _feasible("resolvable", K, N)
+        if p is not None:
+            out.append(p)
+    return out
+
+
+def time_compile(p: SchemeParams, family: str, iters: int) -> float:
+    """Best-of-iters cold-compile seconds (cache cleared each rep)."""
+    best = float("inf")
+    for _ in range(iters):
+        plan_cache_clear()
+        t0 = time.perf_counter()
+        compile_hybrid_plan(p, family=family)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def oracle_check(p: SchemeParams, seed: int) -> Dict:
+    """Re-execute the resolvable plan in NumPy against the dense reference
+    — the end-to-end decodability proof at the largest K."""
+    plan = compile_hybrid_plan(p, family="resolvable")
+    rng = np.random.default_rng(seed)
+    V = rng.integers(-100, 100, size=(p.N, p.Q, 1)).astype(np.float32)
+    ref = plan_shuffle_reference(V, p, family="resolvable")
+    ok = True
+    for mc in ("unicast", "coded"):
+        got = simulate_plan_shuffle(V, plan, multicast=mc)
+        ok = ok and bool((got == ref).all())
+    assert ok, f"oracle mismatch at K={p.K}"
+    return {"K": p.K, "P": p.P, "r": p.r, "N": p.N, "pass": ok}
+
+
+def chooser_section() -> Dict:
+    """N=32 at (K, P)=(12, 6): every binomial r (and uncoded/coded) is
+    inadmissible, resolvable r=3 is — the chooser must find it."""
+    from repro.sim.cluster import ClusterSim, CostModel
+    from repro.sim.network import RackTopology
+    from repro.sim.scheduler import SchemeChooser, run_scheduled
+    from repro.sim.workload import JobSpec
+
+    K, P = 12, 6
+    spec = JobSpec("histogram", N=32, Q=24, d=1)
+    topo = RackTopology(P=P, cross_bw=1e5, intra_bw=1e6)
+    cluster = ClusterSim(topo, K=K, cost_model=CostModel())
+    chooser = SchemeChooser(K, cost_model=cluster.cost_model, rs=(1, 2, 3))
+    d = chooser.choose(spec, cluster)
+    assert d.scheme == "hybrid_resolvable", d
+    stats, sched = run_scheduled([spec], cluster, chooser)
+    return {"K": K, "P": P, "N": spec.N, "chosen_scheme": d.scheme,
+            "chosen_r": d.r, "jct_s": stats[0].jct}
+
+
+def main() -> None:
+    ap = make_parser(__doc__.splitlines()[0], "BENCH_scale.json",
+                     default_iters=3)
+    args = ap.parse_args()
+    N = 2048 if args.smoke else 8192
+    k_cap = 128 if args.smoke else 512
+    iters = 1 if args.smoke else args.iters
+
+    rows = [max_feasible_k(f, N, k_cap) for f in ("binomial", "resolvable")]
+    k_bin = rows[0]["max_k"]
+    k_res = rows[1]["max_k"]
+    ratio = k_res / max(k_bin, 1)
+    print(f"N={N} gain={GAIN}: binomial max K={k_bin}, "
+          f"resolvable max K={k_res}  ({ratio:.0f}x)")
+    assert ratio >= 10.0, (
+        f"resolvable must stretch K >= 10x past binomial; got {ratio:.1f}x")
+
+    ladder = resolvable_ladder(N, k_cap)
+    compile_rows = []
+    for p in ladder:
+        secs = time_compile(p, "resolvable", iters)
+        compile_rows.append({"K": p.K, "P": p.P, "q": p.spc_q,
+                             "compile_s": secs})
+        print(f"  resolvable K={p.K:4d} (q={p.spc_q:3d}): "
+              f"compile {secs * 1e3:8.1f} ms")
+    p_bin = _feasible("binomial", k_bin, N)
+    bin_secs = time_compile(p_bin, "binomial", iters)
+    print(f"  binomial   K={k_bin:4d} (wall):  compile {bin_secs * 1e3:8.1f}"
+          f" ms")
+
+    oracle = oracle_check(ladder[-1], args.seed)
+    print(f"  oracle: K={oracle['K']} bit-exact={oracle['pass']}")
+    plan_cache_clear()
+    chooser = chooser_section()
+    print(f"  chooser: picked {chooser['chosen_scheme']} r="
+          f"{chooser['chosen_r']} (jct {chooser['jct_s']:.3f}s)")
+
+    emit_report({
+        "N": N, "gain": GAIN, "Kr": KR, "k_cap": k_cap,
+        "max_k": {r["family"]: r for r in rows},
+        "k_ratio": ratio,
+        "compile_wall_clock": compile_rows,
+        "binomial_compile_s": bin_secs,
+        "oracle": oracle,
+        "chooser": chooser,
+    }, bench="scale", out_path=args.out, smoke=args.smoke, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,14 @@ replica draw, the chosen solver's slot permutation threaded into the
 executable plan, and the achieved node/rack locality printed next to the
 communication costs.
 
+``--scheme-family resolvable`` re-racks the same 12 devices as 6 racks x 2
+servers and shuffles N=48 shards — a size the binomial construction cannot
+handle at ANY r >= 2 (C(6, r) never divides the 24 per-layer subfiles) but
+the resolvable single-parity-check design shuffles at r in {2, 3}: the K
+wall the family exists to break (docs/scaling.md).
+
     PYTHONPATH=src python examples/coded_wordcount.py [--placement greedy]
+        [--scheme-family {binomial,resolvable}]
 """
 import argparse
 import os
@@ -37,27 +44,44 @@ ap.add_argument("--placement", choices=sorted(PLACEMENT_SOLVERS),
                 default=None,
                 help="run each r under a locality-aware placement and "
                      "print the achieved node/rack locality")
+ap.add_argument("--scheme-family", choices=("binomial", "resolvable"),
+                default="binomial",
+                help="plan-compiler family; 'resolvable' demonstrates a "
+                     "shard count infeasible for every binomial r >= 2")
 ap.add_argument("--seed", type=int, default=7)
 args = ap.parse_args()
 
-# 3 racks x 4 servers; N=96 admits every replication factor r in {1, 2, 3}
-p = SchemeParams(K=12, P=3, Q=24, N=96, r=2)
+if args.scheme_family == "binomial":
+    # 3 racks x 4 servers; N=96 admits every replication r in {1, 2, 3}
+    p = SchemeParams(K=12, P=3, Q=24, N=96, r=2)
+    rs = (1, 2, 3)
+else:
+    # 6 racks x 2 servers, N=48: per-layer 24 is divisible by NO C(6, r)
+    # with r >= 2, but the SPC design is feasible at r=2 (q=3) and r=3
+    # (q=2) — same hardware, past the binomial wall
+    if args.placement:
+        ap.error("--placement solvers target the binomial group structure; "
+                 "drop it with --scheme-family resolvable")
+    p = SchemeParams(K=12, P=6, Q=24, N=48, r=2)
+    rs = (2, 3)
 mesh = make_mesh((p.P, p.Kr), ("rack", "server"))
-print(f"mesh: {p.P} racks x {p.Kr} servers = {p.K} devices")
+print(f"mesh: {p.P} racks x {p.Kr} servers = {p.K} devices "
+      f"({args.scheme_family} family)")
 
 key = jax.random.PRNGKey(args.seed)
 subfiles = np.asarray(
     jax.random.randint(key, (p.N, 1024), 0, 1 << 16, dtype=jnp.int32))
 job = histogram_job()
 
-oracle = run_job(job, jnp.asarray(subfiles), p, scheme="hybrid",
+scheme = "hybrid" if args.scheme_family == "binomial" else "hybrid_resolvable"
+oracle = run_job(job, jnp.asarray(subfiles), p, scheme=scheme,
                  count_messages=True)
-unc = uncoded_cost(p)
+unc = uncoded_cost(p, check=False)
 
 loc_hdr = " " + f"{'node/rack local':>16s}" if args.placement else ""
 print(f"\n{'r':>3} {'cross <k,v>':>12} {'intra <k,v>':>12} "
       f"{'vs uncoded cross':>17}{loc_hdr}")
-for r in (1, 2, 3):
+for r in rs:
     placement = None
     loc_col = ""
     if args.placement:
@@ -72,7 +96,8 @@ for r in (1, 2, 3):
         loc_col = (f" {100 * placement.node_locality:7.1f}/"
                    f"{100 * placement.rack_locality:5.1f}%")
     dist = run_job_distributed(job, subfiles, p, mesh, r=r,
-                               placement=placement)
+                               placement=placement,
+                               scheme_family=args.scheme_family)
     np.testing.assert_array_equal(np.asarray(dist.outputs),
                                   np.asarray(oracle.outputs))
     assert int(dist.outputs.sum()) == p.N * 1024      # token conservation
@@ -82,5 +107,5 @@ for r in (1, 2, 3):
           f"{ratio:>16.2f}x{loc_col}")
 print("\nevery r: distributed two-stage shuffle == dense oracle (bit-exact)"
       + (" under the optimized placement" if args.placement else ""))
-print(f"r=2 enumerated schedule == closed form: "
+print(f"r={p.r} enumerated schedule == closed form: "
       f"cross {oracle.cross_cost:.0f}, intra {oracle.intra_cost:.0f}")

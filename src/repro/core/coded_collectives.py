@@ -48,7 +48,7 @@ import dataclasses
 import functools
 import os
 from math import comb
-from typing import Dict, Sequence, Tuple
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -58,48 +58,27 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from .assignment import hybrid_assignment, rack_subsets
 from .params import SchemeParams
+from .plan_registry import (HybridShufflePlan, get_plan_compiler,
+                            plan_families, register_plan_compiler)
 from ..distributed.meshes import shard_map
 
 
 # ---------------------------------------------------------------------------
 # Plan compilation: static index tables for the general-r hybrid shuffle
 # ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True, eq=False)
-class HybridShufflePlan:
-    """Static index tables driving :func:`hybrid_shuffle` for any r."""
-    params: SchemeParams
-    # global subfile ids mapped at device (rack i, layer j): [P, Kr, n_loc]
-    local_subfiles: np.ndarray
-    # cross-stage: local subfile positions to send to rack z: [P, Kr, P, n_send]
-    cross_send_pos: np.ndarray
-    # canonical layer table (global subfile id per row): [P, Kr, n_layer]
-    layer_subfiles: np.ndarray
-    # positions in the layer table where rack z's block lands: [P, Kr, P, n_send]
-    cross_recv_pos: np.ndarray
-    # layer-table rows mapped locally: [P, Kr, n_layer] bool
-    local_mask: np.ndarray
-    n_send: int
-    # layer-table position of each locally mapped subfile: [P, Kr, n_loc]
-    local_pos: np.ndarray
-    # --- coded-multicast tables (the paper's f(.) on the wire) -------------
-    # Packet m of sender rack i's stream to rack z combines r components,
-    # one per receiver rack in the multicast group; these are all
-    # layer-independent (no Kr axis).  Empty ([P, P, 0, r]) when n_send = 0.
-    # local position (in the sender's vals) of component c: [P, P, n_send, r]
-    mcast_comp_pos: np.ndarray
-    # rack whose reduce-key block component c is destined to: [P, P, n_send, r]
-    mcast_comp_rack: np.ndarray
-    # receiver side-information, receiver i <- source s: local position / key
-    # rack of the r-1 KNOWN components of each packet: [P, P, n_send, r-1]
-    mcast_known_pos: np.ndarray
-    mcast_known_rack: np.ndarray
+#
+# The plan schema (HybridShufflePlan) and the family registry live in
+# repro.core.plan_registry; this module registers the paper's binomial
+# construction and hosts the family-agnostic executable paths.  The
+# resolvable-design family is registered by repro.core.resolvable
+# (imported at the bottom of this module).
 
 
+@register_plan_compiler("binomial")
 def _compile_hybrid_plan_impl(p: SchemeParams,
                               perm: Tuple[int, ...] | None = None
                               ) -> HybridShufflePlan:
-    """Uncached plan compilation for any r in [1, P] with r | M.
+    """Uncached binomial plan compilation for any r in [1, P] with r | M.
 
     All tables are built by vectorized index arithmetic on the structural
     (layer, subset, w) coordinates; cost is O(N + P^2 * C(P, r)).
@@ -212,16 +191,36 @@ def _compile_hybrid_plan_impl(p: SchemeParams,
 
 
 # ---------------------------------------------------------------------------
-# Plan cache: configurable LRU with introspection
+# Plan cache: configurable LRU with per-family introspection
 # ---------------------------------------------------------------------------
 #
 # The cache maxsize is configurable (the multi-job scheduler of `repro.sim`
 # charges plan-compile latency on cache miss, and sweeps want to bound or
 # disable caching): set the REPRO_PLAN_CACHE_MAXSIZE env var before import,
-# or call :func:`configure_plan_cache` at runtime.
+# or call :func:`configure_plan_cache` at runtime.  Entries are keyed on
+# (params, perm, family) — two families of the same (params, perm) are
+# distinct plans — and hit/miss counters are kept per family so the
+# scheduler's compile-charge accounting stays honest when it prices
+# binomial vs resolvable candidates of one job.
 
 PLAN_CACHE_MAXSIZE_ENV = "REPRO_PLAN_CACHE_MAXSIZE"
 _PLAN_CACHE_DEFAULT_MAXSIZE = 128
+
+
+class FamilyCacheInfo(NamedTuple):
+    hits: int
+    misses: int
+
+
+class PlanCacheInfo(NamedTuple):
+    """CacheInfo of the plan cache, extended with per-family counters
+    (``families`` maps family name -> :class:`FamilyCacheInfo`; families
+    never compiled are absent)."""
+    hits: int
+    misses: int
+    maxsize: int | None
+    currsize: int
+    families: Dict[str, FamilyCacheInfo]
 
 
 def _plan_cache_default_maxsize() -> int:
@@ -240,48 +239,69 @@ def _drop_device_tables() -> None:
         fn.cache_clear()
 
 
+def _compile_plan_dispatch(p: SchemeParams, perm: Tuple[int, ...] | None,
+                           family: str) -> HybridShufflePlan:
+    """The cached unit: registry dispatch on the full (params, perm, family)
+    key."""
+    return get_plan_compiler(family)(p, perm)
+
+
 def configure_plan_cache(maxsize: int | None = None):
     """(Re)build the LRU plan cache with the given maxsize (``None`` -> the
     ``REPRO_PLAN_CACHE_MAXSIZE`` env var, falling back to 128).  Drops all
     cached plans (and their on-device table uploads — see
-    :func:`plan_cache_clear`); returns the new cache wrapper."""
+    :func:`plan_cache_clear`) and zeroes the per-family counters; returns
+    the new cache wrapper."""
     global _PLAN_CACHE
     if maxsize is None:
         maxsize = _plan_cache_default_maxsize()
-    _PLAN_CACHE = functools.lru_cache(maxsize=maxsize)(
-        _compile_hybrid_plan_impl)
+    _PLAN_CACHE = functools.lru_cache(maxsize=maxsize)(_compile_plan_dispatch)
+    _FAMILY_STATS.clear()
     _drop_device_tables()
     return _PLAN_CACHE
 
 
+_FAMILY_STATS: Dict[str, list] = {}   # family -> [hits, misses]
 _PLAN_CACHE = configure_plan_cache()
 
 
 def compile_hybrid_plan(p: SchemeParams,
-                        perm: Sequence[int] | None = None
-                        ) -> HybridShufflePlan:
-    """LRU-cached plan compilation (see :func:`_compile_hybrid_plan_impl`);
-    repeated calls for a seen (:class:`SchemeParams`, perm) return the SAME
-    plan object in O(1).  ``perm`` is the Section-IV slot permutation of a
+                        perm: Sequence[int] | None = None,
+                        family: str = "binomial") -> HybridShufflePlan:
+    """LRU-cached plan compilation; repeated calls for a seen
+    (:class:`SchemeParams`, perm, family) return the SAME plan object in
+    O(1).  ``perm`` is the Section-IV slot permutation of a
     locality-optimized placement (``repro.placement``); None is the
-    canonical identity layout."""
-    if perm is None:
-        return _PLAN_CACHE(p)
-    return _PLAN_CACHE(p, tuple(int(x) for x in perm))
+    canonical identity layout.  ``family`` selects the registered plan
+    compiler (see :mod:`repro.core.plan_registry`): ``'binomial'`` is the
+    paper's Sec. III construction, ``'resolvable'`` the SPC resolvable
+    design of :mod:`repro.core.resolvable`."""
+    key_perm = None if perm is None else tuple(int(x) for x in perm)
+    before = _PLAN_CACHE.cache_info().misses
+    plan = _PLAN_CACHE(p, key_perm, family)
+    missed = _PLAN_CACHE.cache_info().misses > before
+    st = _FAMILY_STATS.setdefault(family, [0, 0])
+    st[1 if missed else 0] += 1
+    return plan
 
 
-def plan_cache_info():
-    """``functools`` CacheInfo(hits, misses, maxsize, currsize) of the plan
-    cache — the scheduler reads this to account compile cost on miss."""
-    return _PLAN_CACHE.cache_info()
+def plan_cache_info() -> PlanCacheInfo:
+    """:class:`PlanCacheInfo` of the plan cache — the scheduler reads the
+    per-family counters to account compile cost on miss."""
+    info = _PLAN_CACHE.cache_info()
+    fams = {f: FamilyCacheInfo(h, m) for f, (h, m) in
+            sorted(_FAMILY_STATS.items())}
+    return PlanCacheInfo(info.hits, info.misses, info.maxsize, info.currsize,
+                         fams)
 
 
 def plan_cache_clear() -> None:
     """Drop all cached plans AND their on-device index tables:
     :func:`device_plan_tables` keys on plan identity, so a cleared plan
     cache would otherwise pin every evicted plan (and its device arrays)
-    alive inside the tables cache."""
+    alive inside the tables cache.  Also zeroes the per-family counters."""
     _PLAN_CACHE.cache_clear()
+    _FAMILY_STATS.clear()
     _drop_device_tables()
 
 
@@ -319,10 +339,12 @@ class DevicePlanTables:
     send_pos: jax.Array          # [P, Kr, P, n_send]
     recv_pos: jax.Array          # [P, Kr, P, n_send]
     local_pos: jax.Array         # [P, Kr, n_loc]
-    mcast_comp_pos: jax.Array    # [P, P, n_send, r]
+    mcast_comp_pos: jax.Array    # [P, P, n_send, arity]
     mcast_comp_rack: jax.Array
-    mcast_known_pos: jax.Array   # [P, P, n_send, r-1]
+    mcast_known_pos: jax.Array   # [P, P, n_send, arity-1]
     mcast_known_rack: jax.Array
+    # stage-1 slot validity [P, P, n_send]; None = binomial's uniform rule
+    cross_valid: Optional[jax.Array] = None
 
 
 @functools.lru_cache(maxsize=128)
@@ -345,7 +367,9 @@ def device_plan_tables(plan: HybridShufflePlan) -> DevicePlanTables:
             jnp.asarray(plan.mcast_comp_pos),
             jnp.asarray(plan.mcast_comp_rack),
             jnp.asarray(plan.mcast_known_pos),
-            jnp.asarray(plan.mcast_known_rack))
+            jnp.asarray(plan.mcast_known_rack),
+            None if plan.cross_valid is None
+            else jnp.asarray(plan.cross_valid))
 
 
 def _combine(streams, multicast: str, combine_impl: str):
@@ -393,10 +417,11 @@ def shuffle_device_body(vals: jax.Array, plan: HybridShufflePlan,
     and the fused device-resident pipeline of :mod:`repro.mapreduce.engine`.
 
     ``multicast='coded'`` replaces raw stage-1 rows with the paper's coded
-    multicast packets f(v_1..v_r) (unit coefficients), decoded at receivers
-    from replicated-map side information; ``'coded_xor'`` is the GF(2)
-    variant (integer payloads, bit-exact).  r = 1 streams carry a single
-    component, so every mode degenerates to unicast.  ``combine_impl``
+    multicast packets f(v_1..v_arity) (unit coefficients), decoded at
+    receivers from replicated-map side information; ``'coded_xor'`` is the
+    GF(2) variant (integer payloads, bit-exact).  The packet arity is the
+    plan's ``mcast_arity`` (r for binomial, r - 1 for resolvable);
+    single-component streams degenerate to unicast.  ``combine_impl``
     selects the encode/decode implementation: ``'xla'`` (jnp adds) or
     ``'pallas'`` (the fused single-HBM-pass kernels of
     :mod:`repro.kernels.coded_combine`, interpret-mode off TPU).
@@ -410,7 +435,8 @@ def shuffle_device_body(vals: jax.Array, plan: HybridShufflePlan,
     n_layer = p.subfiles_per_layer
     d = vals.shape[-1]
     n_send = plan.n_send
-    coded = multicast != "unicast" and p.r >= 2
+    arity = plan.mcast_arity
+    coded = multicast != "unicast" and arity >= 2
 
     i = jax.lax.axis_index("rack")
     j = jax.lax.axis_index("server")
@@ -424,15 +450,15 @@ def shuffle_device_body(vals: jax.Array, plan: HybridShufflePlan,
     table = table.at[my_local].set(my_keys)          # locally mapped rows
     if n_send > 0:
         if coded:
-            # encode: gather the r components of every packet of every
+            # encode: gather the arity components of every packet of every
             # destination stream — component c of packet m to rack z is a
             # locally mapped row restricted to rack mcast_comp_rack[...,c]'s
             # key block — then combine with f(.)
-            comp_pos = tables.mcast_comp_pos[i]      # [P, n_send, r]
+            comp_pos = tables.mcast_comp_pos[i]      # [P, n_send, arity]
             cols = (tables.mcast_comp_rack[i][..., None] * q_rack
-                    + key_off)                       # [P, n_send, r, q_rack]
-            comps = vals[comp_pos[..., None], cols]  # [P, n_send, r, qr, d]
-            blocks = _combine([comps[:, :, c] for c in range(p.r)],
+                    + key_off)                       # [P, n_send, ar, q_rack]
+            comps = vals[comp_pos[..., None], cols]  # [P, n_send, ar, qr, d]
+            blocks = _combine([comps[:, :, c] for c in range(arity)],
                               multicast, combine_impl)
         else:
             my_send = tables.send_pos[i, j]          # [P, n_send]
@@ -445,21 +471,26 @@ def shuffle_device_body(vals: jax.Array, plan: HybridShufflePlan,
         recvd = jax.lax.all_to_all(blocks, "rack", split_axis=0,
                                    concat_axis=0, tiled=True)
         if coded:
-            # decode: subtract the r-1 known components (rows this device
-            # mapped itself — the replicated-map side information)
+            # decode: subtract the arity-1 known components (rows this
+            # device mapped itself — the replicated-map side information)
             recvd = recvd.reshape(p.P, n_send, q_rack, d)
             kcols = (tables.mcast_known_rack[i][..., None] * q_rack
-                     + key_off)                      # [P, n_send, r-1, qr]
+                     + key_off)                      # [P, n_send, ar-1, qr]
             known = vals[tables.mcast_known_pos[i][..., None], kcols]
             recvd = _uncombine(recvd,
-                               [known[:, :, c] for c in range(p.r - 1)],
+                               [known[:, :, c] for c in range(arity - 1)],
                                multicast, combine_impl)
         my_recv = tables.recv_pos[i, j]
         flat_dst = my_recv.reshape(-1)                   # [P*n_send]
         flat_src = recvd.reshape(p.P * n_send, q_rack, d)
-        valid = (jnp.repeat(jnp.arange(p.P), n_send) != i)
-        # the r senders' shares are disjoint slices of each subset block,
-        # so target rows are hit at most once => add == set
+        if tables.cross_valid is None:
+            # binomial: every slot from a distinct source rack is real
+            valid = (jnp.repeat(jnp.arange(p.P), n_send) != i)
+        else:
+            # families with padded streams (resolvable): per-slot mask
+            valid = tables.cross_valid[i].reshape(-1)
+        # the senders' shares are disjoint slices of each block, so target
+        # rows are hit at most once => add == set
         table = table.at[flat_dst].add(
             jnp.where(valid[:, None, None], flat_src, 0))
 
@@ -543,14 +574,19 @@ def plan_transfer_matrices(plan: HybridShufflePlan,
 
       * ``cross_rack_matrix`` [P, P]: stage-1 pairs the root switch carries
         from rack i to rack z.  ``multicast='unicast'`` counts the wire
-        format of the all_to_all realization (each destination stream is a
-        separate copy: Kr * n_send * q_rack per (i, z) pair); ``'coded'`` /
-        ``'coded_xor'`` count the paper metric — each coded packet serves r
-        destination racks and traverses the root ONCE, so 1/r is attributed
-        to each of its r streams (row sums = per-sender root load, total =
-        ``hybrid_cost(p).cross``).
+        format of a unicast realization (each destination stream a separate
+        copy); ``'coded'`` / ``'coded_xor'`` count the paper metric — each
+        coded packet serves ``mcast_arity`` destination racks and traverses
+        the root ONCE, so 1/arity is attributed to each of its streams (row
+        sums = per-sender root load, total = the family's closed-form cross
+        cost: ``hybrid_cost(p).cross`` or
+        ``hybrid_resolvable_cost(p).cross``).  Families with padded streams
+        report the ACTUAL per-pair loads (padding carries no pairs), so the
+        matrix is not uniform — resolvable same-class rack pairs exchange
+        nothing.
       * ``intra_per_rack`` [P]: stage-2 pairs through each ToR switch
-        (identical per rack by symmetry; total = ``hybrid_cost(p).intra``).
+        (identical per rack by symmetry; total = the closed-form intra
+        cost, the same expression for both families).
 
     The `repro.sim` network model consumes these loads, so simulated traffic
     is the executable schedule — not a formula (their equality with the
@@ -560,20 +596,27 @@ def plan_transfer_matrices(plan: HybridShufflePlan,
         raise ValueError(f"multicast must be one of {MULTICAST_MODES}")
     p = plan.params
     q_rack, q_srv = p.Q // p.P, p.Q // p.K
-    per_stream = float(p.Kr * plan.n_send * q_rack)
-    if multicast != "unicast" and p.r >= 2:
-        per_stream /= p.r
-    cross = np.full((p.P, p.P), per_stream)
-    np.fill_diagonal(cross, 0.0)
+    arity = plan.mcast_arity
+    gain = arity if (multicast != "unicast" and arity >= 2) else 1
+    if plan.family == "resolvable":
+        from .resolvable import shared_group_counts
+        sh = p.M_res // (p.r - 1)
+        cross = (shared_group_counts(p).astype(float)
+                 * sh * p.Kr * q_rack / gain)
+    else:
+        per_stream = float(p.Kr * plan.n_send * q_rack) / gain
+        cross = np.full((p.P, p.P), per_stream)
+        np.fill_diagonal(cross, 0.0)
     intra_rack = float(p.Kr * (p.Kr - 1) * p.subfiles_per_layer * q_srv)
     return {"cross_rack_matrix": cross,
             "intra_per_rack": np.full((p.P,), intra_rack)}
 
 
-def plan_shuffle_reference(values: np.ndarray, p: SchemeParams) -> np.ndarray:
+def plan_shuffle_reference(values: np.ndarray, p: SchemeParams,
+                           family: str = "binomial") -> np.ndarray:
     """Oracle: [K, N, q_srv, d] that a correct shuffle must deliver, in the
     row order of :func:`reduce_ready_order`."""
-    plan = compile_hybrid_plan(p)
+    plan = compile_hybrid_plan(p, family=family)
     order = reduce_ready_order(plan)
     q_srv = p.Q // p.K
     out = np.zeros((p.K, p.N, q_srv, values.shape[-1]), values.dtype)
@@ -583,3 +626,89 @@ def plan_shuffle_reference(values: np.ndarray, p: SchemeParams) -> np.ndarray:
             keys = list(p.keys_of_server(s))
             out[s] = values[order[i, j]][:, keys, :]
     return out
+
+
+def simulate_plan_shuffle(values: np.ndarray, plan: HybridShufflePlan,
+                          multicast: str = "unicast") -> np.ndarray:
+    """Re-execute the exact data movement of :func:`hybrid_shuffle` with
+    NumPy indexing: stage-1 table fill (local rows + per-source-rack
+    received blocks), then the stage-2 intra-rack key split.  Independent of
+    jax and of device count, so it validates the index tables of ANY
+    registered plan family in-process — the decodability oracle of the
+    tests and of ``benchmarks/scale_bench.py``.
+
+    ``multicast='coded'`` re-executes the coded wire format instead: each
+    stage-1 packet is the SUM of its ``mcast_arity`` components (built from
+    the sender's ``mcast_comp_*`` tables) and the receiver decodes by
+    subtracting its arity-1 locally-known components (``mcast_known_*``) —
+    NumPy end to end, so it proves decodability of the multicast tables
+    themselves.  Plans with padded streams contribute only their
+    ``cross_valid`` slots, exactly like the device body's receive mask."""
+    p = plan.params
+    q_rack, q_srv = p.Q // p.P, p.Q // p.K
+    n_layer = p.subfiles_per_layer
+    d = values.shape[-1]
+    local = pack_local_values(values, plan).reshape(
+        p.P, p.Kr, -1, p.Q, d)                      # [P, Kr, n_loc, Q, d]
+    arity = plan.mcast_arity
+    coded = multicast == "coded" and arity >= 2
+
+    # ---- Stage 1: per-device layer table over its rack's q_rack keys ------
+    table = np.zeros((p.P, p.Kr, n_layer, q_rack, d), values.dtype)
+    for i in range(p.P):
+        keys_i = np.arange(i * q_rack, (i + 1) * q_rack)
+        for j in range(p.Kr):
+            table[i, j, plan.local_pos[i, j]] = local[i, j][:, keys_i]
+            if plan.n_send:
+                for z in range(p.P):
+                    if z == i:
+                        continue
+                    valid = (slice(None) if plan.cross_valid is None
+                             else plan.cross_valid[i, z])
+                    dst = plan.cross_recv_pos[i, j, z][valid]
+                    if not coded:
+                        # what z sends to i: its share rows, i's rack keys
+                        sent = local[z, j][plan.cross_send_pos[z, j, i]][
+                            :, keys_i]
+                        table[i, j, dst] = sent[valid]
+                        continue
+                    # sender z encodes packets for destination i
+                    cpos = plan.mcast_comp_pos[z, i]     # [n_send, arity]
+                    ckey = (plan.mcast_comp_rack[z, i][..., None] * q_rack
+                            + np.arange(q_rack))         # [n_send, ar, qr]
+                    f = local[z, j][cpos[..., None],
+                                    ckey].sum(axis=1)    # [n_send, qr, d]
+                    # receiver i decodes with its side information
+                    kpos = plan.mcast_known_pos[i, z]    # [n_send, arity-1]
+                    kkey = (plan.mcast_known_rack[i, z][..., None] * q_rack
+                            + np.arange(q_rack))
+                    side = local[i, j][kpos[..., None], kkey].sum(axis=1)
+                    table[i, j, dst] = (f - side)[valid]
+
+    # ---- Stage 2: intra-rack all_to_all == per-server key split -----------
+    out = np.zeros((p.K, p.Kr * n_layer, q_srv, d), values.dtype)
+    for i in range(p.P):
+        for j in range(p.Kr):
+            s = p.server_id(i, j)
+            # device (i, j) collects key-chunk j of every layer jp's table
+            out[s] = table[i, :, :, j * q_srv:(j + 1) * q_srv, :].reshape(
+                p.Kr * n_layer, q_srv, d)
+    return out
+
+
+# Register the resolvable-design family (import side effect; kept at module
+# bottom — resolvable.py needs only plan_registry/params/assignment, so no
+# cycle, but its docstrings reference this module's executable paths).
+from . import resolvable as _resolvable_family  # noqa: E402,F401
+
+__all__ = [
+    "HybridShufflePlan", "HybridShufflePlanR2", "register_plan_compiler",
+    "get_plan_compiler", "plan_families", "compile_hybrid_plan",
+    "compile_hybrid_plan_r2", "configure_plan_cache", "plan_cache_info",
+    "plan_cache_clear", "PlanCacheInfo", "FamilyCacheInfo",
+    "PLAN_CACHE_MAXSIZE_ENV", "MULTICAST_MODES", "COMBINE_IMPLS",
+    "DevicePlanTables", "device_plan_tables", "shuffle_device_body",
+    "hybrid_shuffle", "hybrid_shuffle_r2", "reduce_ready_order",
+    "reduce_output_keys", "pack_local_values", "plan_transfer_matrices",
+    "plan_shuffle_reference", "simulate_plan_shuffle",
+]

@@ -64,6 +64,20 @@ def hybrid_cost(p: SchemeParams, check: bool = True) -> CommCost:
     return CommCost(intra, cross)
 
 
+def hybrid_resolvable_cost(p: SchemeParams, check: bool = True) -> CommCost:
+    """Resolvable-design hybrid (repro.core.resolvable): multicast gain r-1
+    instead of r, identical intra-rack stage.  Derivation: per layer the
+    q^{r-1}(q-1) non-codeword groups each carry r senders' M/(r-1)-row
+    packet streams of Q/P keys, each traversing the root once; summed over
+    Kr layers this telescopes to QN/(r-1) * (1 - r/P).  Proven against the
+    enumerated message schedule in tests/test_resolvable.py."""
+    if check:
+        p.validate_hybrid_resolvable()
+    cross = p.Q * p.N / (p.r - 1) * (1.0 - p.r / p.P)
+    intra = p.Q * p.N * (1.0 - p.P / p.K)
+    return CommCost(intra, cross)
+
+
 def cost_table(p: SchemeParams, check: bool = True) -> Dict[str, CommCost]:
     return {
         "uncoded": uncoded_cost(p, check),

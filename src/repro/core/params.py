@@ -72,6 +72,24 @@ class SchemeParams:
         """Coded MapReduce: subfiles per server r-subset, N / C(K, r)."""
         return self.N // comb(self.K, self.r)
 
+    # ---- resolvable-family derived quantities ------------------------------
+
+    @property
+    def spc_q(self) -> int:
+        """Racks per parallel class of the resolvable family, q = P / r."""
+        return self.P // self.r
+
+    @property
+    def spc_batches(self) -> int:
+        """Subfile batches per layer of the resolvable family: the q^{r-1}
+        codewords of the (r, r-1) single-parity-check code over Z_q."""
+        return self.spc_q ** (self.r - 1)
+
+    @property
+    def M_res(self) -> int:
+        """Resolvable family: subfiles per (layer, batch), (NP/K)/q^{r-1}."""
+        return self.subfiles_per_layer // self.spc_batches
+
     # ---- per-scheme divisibility checks ------------------------------------
 
     def validate_uncoded(self) -> None:
@@ -94,6 +112,27 @@ class SchemeParams:
                f"hybrid needs C(P,r)|(NP/K); C({self.P},{self.r})={c} "
                f"NP/K={self.subfiles_per_layer}")
         _check(self.Q % self.K == 0, f"hybrid needs K|Q; K={self.K} Q={self.Q}")
+
+    def validate_hybrid_resolvable(self) -> None:
+        """Resolvable-design family (see repro.core.resolvable): needs r >= 2
+        parallel classes of q = P/r >= 2 racks, q^{r-1} | NP/K subfile
+        batches, and r-1 shares per missing batch."""
+        _check(self.r >= 2,
+               f"resolvable needs r >= 2; r={self.r}")
+        _check(self.P % self.r == 0,
+               f"resolvable needs r|P; r={self.r} P={self.P}")
+        _check(self.spc_q >= 2,
+               f"resolvable needs q=P/r >= 2; P={self.P} r={self.r}")
+        _check(self.N * self.P % self.K == 0,
+               f"resolvable needs K | N*P; K={self.K} N={self.N} P={self.P}")
+        b = self.spc_batches
+        _check(self.subfiles_per_layer % b == 0,
+               f"resolvable needs q^(r-1)|(NP/K); q^(r-1)={b} "
+               f"NP/K={self.subfiles_per_layer}")
+        _check(self.M_res % (self.r - 1) == 0,
+               f"resolvable needs (r-1)|M; M={self.M_res} r={self.r}")
+        _check(self.Q % self.K == 0,
+               f"resolvable needs K|Q; K={self.K} Q={self.Q}")
 
     # ---- topology helpers ---------------------------------------------------
 

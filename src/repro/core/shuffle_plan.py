@@ -181,10 +181,82 @@ def hybrid_plan(assignment: Assignment) -> Iterator[Message]:
                                       "intra")
 
 
+def resolvable_hybrid_plan(assignment: Assignment) -> Iterator[Message]:
+    """Resolvable-design hybrid shuffle (see :mod:`repro.core.resolvable`):
+    per layer, one coded multicast stream per (non-codeword group, sender
+    class); stage 2 is the hybrid scheme's intra-rack unicast verbatim.
+
+    Each message combines r-1 components — one per fellow group member —
+    and every receiver maps all other members' missing batches (side
+    information), so :func:`execute_plan`'s strict decodability assertions
+    prove the schedule, and its counts reproduce
+    :func:`repro.core.costs.hybrid_resolvable_cost` (asserted in tests).
+    """
+    from .resolvable import needed_batch, spc_codewords
+
+    p = assignment.params
+    p.validate_hybrid_resolvable()
+    q, r = p.spc_q, p.r
+    q_per_rack = p.Q // p.P
+    cw = spc_codewords(q, r)
+    codeword_set = {tuple(c) for c in cw.tolist()}
+
+    slot_of = assignment.meta["slot_of_subfile"]
+    # (layer, batch) -> subfiles in w order
+    by_layer_batch: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+    for subfile, (layer, t_idx, w) in enumerate(slot_of):  # type: ignore[arg-type]
+        by_layer_batch.setdefault((layer, t_idx), []).append((w, subfile))
+    batch_files = {k: [sub for _, sub in sorted(v)]
+                   for k, v in by_layer_batch.items()}
+
+    # ---- Stage 1: cross-rack coded multicasts, independently per layer ----
+    from .resolvable import batch_index
+    for layer in range(p.n_layers):
+        for g in itertools.product(range(q), repeat=r):
+            if g in codeword_set:
+                continue
+            for a_cls in range(r):
+                a_rack = a_cls * q + g[a_cls]
+                sender = p.server_id(a_rack, layer)
+                others = [t for t in range(r) if t != a_cls]
+                for w in range(p.M_res // (r - 1)):
+                    for u in range(q_per_rack):
+                        comps = []
+                        for t_cls in others:
+                            b_t = needed_batch(g, t_cls, q)
+                            t_idx = int(batch_index(b_t, q))
+                            z_rack = t_cls * q + g[t_cls]
+                            pos = a_cls if a_cls < t_cls else a_cls - 1
+                            files = batch_files[(layer, t_idx)]
+                            sub = _chunk(files, pos, r - 1)[w]
+                            key = list(p.keys_of_rack(z_rack))[u]
+                            comps.append((p.server_id(z_rack, layer), key,
+                                          sub))
+                        yield Message(sender, tuple(comps), "cross")
+
+    # ---- Stage 2: intra-rack unicast (identical to the binomial family) ---
+    per_layer = p.subfiles_per_layer
+    layer_files: Dict[int, List[int]] = {la: [] for la in range(p.n_layers)}
+    for subfile, (layer, t_idx, w) in enumerate(slot_of):  # type: ignore[arg-type]
+        layer_files[layer].append(subfile)
+    for layer in range(p.n_layers):
+        assert len(layer_files[layer]) == per_layer
+        for rack in range(p.P):
+            sender = p.server_id(rack, layer)
+            for subfile in layer_files[layer]:
+                for key in p.keys_of_rack(rack):
+                    reducer = p.server_of_key(key)
+                    if reducer != sender:
+                        yield Message(sender, ((reducer, key, subfile),),
+                                      "intra")
+
+
 def make_plan(assignment: Assignment) -> Iterator[Message]:
     return {"uncoded": uncoded_plan,
             "coded": coded_plan,
-            "hybrid": hybrid_plan}[assignment.scheme](assignment)
+            "hybrid": hybrid_plan,
+            "hybrid_resolvable": resolvable_hybrid_plan}[
+        assignment.scheme](assignment)
 
 
 # ---------------------------------------------------------------------------
@@ -289,9 +361,11 @@ def scheme_stage_traffic(p: SchemeParams, scheme: str,
     """Closed-form stage traffic (Props 1-2 / Thm III.1, balanced per-rack
     split — all three designs are rack-symmetric).  O(1); use this for large
     N where enumerating the schedule is too slow."""
-    from .costs import coded_cost, hybrid_cost, uncoded_cost
+    from .costs import (coded_cost, hybrid_cost, hybrid_resolvable_cost,
+                        uncoded_cost)
     cost_fn = {"uncoded": uncoded_cost, "coded": coded_cost,
-               "hybrid": hybrid_cost}[scheme]
+               "hybrid": hybrid_cost,
+               "hybrid_resolvable": hybrid_resolvable_cost}[scheme]
     c = cost_fn(p, check=check)
     return _as_stages(c.cross, np.full(p.P, c.intra / p.P))
 

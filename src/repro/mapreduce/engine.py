@@ -41,8 +41,11 @@ from ..core.coded_collectives import (HybridShufflePlan,
                                       reduce_output_keys,
                                       reduce_ready_order,
                                       shuffle_device_body)
-from ..core.costs import coded_cost, hybrid_cost, uncoded_cost
+from ..core.costs import (coded_cost, hybrid_cost, hybrid_resolvable_cost,
+                          uncoded_cost)
 from ..core.params import SchemeParams
+from ..core.plan_registry import scheme_of_family
+from ..core.resolvable import resolvable_assignment
 from ..core.shuffle_plan import count_plan, make_plan
 from ..distributed.meshes import shard_map
 
@@ -66,7 +69,8 @@ class JobResult:
 def _assignment_for(params: SchemeParams, scheme: str):
     return {"uncoded": uncoded_assignment,
             "coded": coded_assignment,
-            "hybrid": hybrid_assignment}[scheme](params)
+            "hybrid": hybrid_assignment,
+            "hybrid_resolvable": resolvable_assignment}[scheme](params)
 
 
 def map_phase(job: MapReduceJob, subfiles: jax.Array, Q: int) -> jax.Array:
@@ -90,7 +94,8 @@ def run_job(job: MapReduceJob, subfiles: jax.Array, params: SchemeParams,
         intra, cross = float(counts.intra), float(counts.cross)
     else:
         cost_fn = {"uncoded": uncoded_cost, "coded": coded_cost,
-                   "hybrid": hybrid_cost}[scheme]
+                   "hybrid": hybrid_cost,
+                   "hybrid_resolvable": hybrid_resolvable_cost}[scheme]
         c = cost_fn(params)
         intra, cross = c.intra, c.cross
     return JobResult(outputs, intra, cross, scheme)
@@ -154,9 +159,17 @@ def run_job_distributed(job: MapReduceJob, subfiles: np.ndarray,
                         r: int | None = None, *, fused: bool = True,
                         multicast: str = "unicast",
                         combine_impl: str = "xla",
-                        placement: object | None = None) -> JobResult:
+                        placement: object | None = None,
+                        scheme_family: str = "binomial") -> JobResult:
     """Multi-device execution: real all_to_all shuffle (hybrid scheme,
     general map-replication r in [1, P]).
+
+    ``scheme_family`` selects the registered plan compiler: ``'binomial'``
+    (the paper's construction) or ``'resolvable'`` (the SPC design of
+    :mod:`repro.core.resolvable`, feasible at K far beyond the binomial
+    divisibility wall — see docs/scaling.md).  Every downstream stage is
+    family-agnostic: the fused executable caches on the plan object, and
+    costs come from the family's closed form.
 
     ``mesh`` must have axes ('rack', 'server') with sizes (P, Kr).  Each
     device maps only ITS assigned subfiles (with r-fold replication across
@@ -183,7 +196,7 @@ def run_job_distributed(job: MapReduceJob, subfiles: np.ndarray,
     p = params if r is None or r == params.r else \
         dataclasses.replace(params, r=r)
     perm = getattr(placement, "perm", placement)
-    plan = compile_hybrid_plan(p, perm=perm)
+    plan = compile_hybrid_plan(p, perm=perm, family=scheme_family)
     if fused:
         local_subs = jnp.asarray(pack_local_subfiles(subfiles, plan))
         exe = _fused_executable(job, plan, mesh, multicast, combine_impl)
@@ -196,8 +209,9 @@ def run_job_distributed(job: MapReduceJob, subfiles: np.ndarray,
         # [K, N, q_srv, d]; per-device rows ordered by reduce_ready_order
         out = jax.vmap(jax.vmap(job.reduce_fn, in_axes=1))(shuffled)
     final = assemble_outputs(out, plan)                 # [Q, d_out]
-    c = hybrid_cost(p)
-    return JobResult(final, c.intra, c.cross, "hybrid")
+    c = (hybrid_resolvable_cost(p) if scheme_family == "resolvable"
+         else hybrid_cost(p))
+    return JobResult(final, c.intra, c.cross, scheme_of_family(scheme_family))
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,7 @@ import numpy as np
 
 from ..core.assignment import hybrid_group_of_slot
 from ..core.params import SchemeParams
+from ..core.resolvable import cyclic_replica_server
 from .objectives import group_servers
 
 STRUCTURED_POLICIES = ("resolvable", "aligned")
@@ -39,11 +40,11 @@ STRUCTURED_POLICIES = ("resolvable", "aligned")
 
 def _resolvable_server(p: SchemeParams, base: np.ndarray,
                        c: int) -> np.ndarray:
-    """Server of replica shift c from per-subfile base servers: rotate the
-    rack by c and the in-rack slot by c // P (distinct for c < K)."""
-    rack = (base // p.Kr + c) % p.P
-    slot = (base % p.Kr + c // p.P) % p.Kr
-    return rack * p.Kr + slot
+    """Server of replica shift c from per-subfile base servers — the
+    parallel-class shift now shared with the resolvable plan compiler
+    (:func:`repro.core.resolvable.cyclic_replica_server`): rotate the rack
+    by c and the in-rack slot by c // P (distinct for c < K)."""
+    return cyclic_replica_server(p, base, c)
 
 
 def structured_replicas(p: SchemeParams,

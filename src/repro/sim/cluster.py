@@ -266,8 +266,10 @@ def _map_assignment(p: SchemeParams, scheme: str
     ``check=False``, as the paper's Table I does) fall back to a balanced
     round-robin with the same replication factor."""
     try:
+        from ..core.resolvable import resolvable_assignment
         mk = {"uncoded": uncoded_assignment, "coded": coded_assignment,
-              "hybrid": hybrid_assignment}[scheme]
+              "hybrid": hybrid_assignment,
+              "hybrid_resolvable": resolvable_assignment}[scheme]
         a = mk(p)
         return a.subfiles_of_server, [tuple(s) for s in a.servers_of_subfile]
     except ValueError:

@@ -27,6 +27,7 @@ import numpy as np
 
 from ..core.coded_collectives import compile_hybrid_plan, plan_cache_info
 from ..core.params import SchemeParams
+from ..core.plan_registry import family_of_scheme
 from ..core.shuffle_plan import scheme_stage_traffic
 from .cluster import ClusterSim, CostModel, JobStats, phase_work
 from .network import ROOT, tor
@@ -63,7 +64,8 @@ class SchemeChooser:
 
     def __init__(self, K: int, cost_model: CostModel = CostModel(),
                  rs: Sequence[int] = (1, 2, 3),
-                 schemes: Sequence[str] = ("uncoded", "coded", "hybrid"),
+                 schemes: Sequence[str] = ("uncoded", "coded", "hybrid",
+                                           "hybrid_resolvable"),
                  adaptive: bool = True,
                  fixed: Tuple[str, int] = ("coded", 2),
                  expected_straggler: float = 1.0,
@@ -122,10 +124,14 @@ class SchemeChooser:
         self._admission_replicas: Optional[np.ndarray] = None
 
     def candidates(self) -> List[Tuple[str, int]]:
+        """(scheme, r) grid: hybrid admits r = 1 (degenerates to uncoded
+        layers); coded and hybrid_resolvable need r >= 2.  The chooser now
+        prices binomial vs resolvable hybrids per admission — inadmissible
+        combinations are dropped by :meth:`estimate` returning None."""
         out: List[Tuple[str, int]] = []
         if "uncoded" in self.schemes:
             out.append(("uncoded", 1))
-        for scheme in ("coded", "hybrid"):
+        for scheme in ("coded", "hybrid", "hybrid_resolvable"):
             if scheme in self.schemes:
                 out.extend((scheme, r) for r in self.rs if r >= 2 or
                            scheme == "hybrid")
@@ -193,15 +199,19 @@ class SchemeChooser:
     def _compile_charge(self, p: SchemeParams, scheme: str,
                         probe: bool) -> Tuple[float, bool]:
         """(compile seconds, cache_hit).  With ``probe``, actually compiles
-        the hybrid plan through the LRU cache and reads the hit/miss delta
-        from :func:`plan_cache_info`; otherwise only models the charge."""
-        if scheme != "hybrid" or not self.compile_real_plans:
+        the scheme family's plan through the LRU cache and reads the
+        PER-FAMILY hit/miss delta from :func:`plan_cache_info` — the cache
+        keys on (params, perm, family), so probing a binomial candidate
+        never counterfeits a hit for its resolvable sibling."""
+        family = family_of_scheme(scheme)
+        if family is None or not self.compile_real_plans:
             return 0.0, True
         if probe:
-            before = plan_cache_info()
+            before = plan_cache_info().families.get(family)
             try:
-                compile_hybrid_plan(p)
-                hit = plan_cache_info().hits > before.hits
+                compile_hybrid_plan(p, family=family)
+                now = plan_cache_info().families[family]
+                hit = now.hits > (before.hits if before else 0)
             except ValueError:
                 # closed-form-admissible but not executable (r | M fails):
                 # nothing cacheable — charge a fresh compile every time
@@ -255,7 +265,9 @@ class SchemeChooser:
         admission's random replica draw (shared across the candidate rs —
         replicas are r-invariant) solved per r.  None when both knobs are
         off or the instance is structurally rejected.  Imported lazily: the
-        sim stays usable without repro.placement."""
+        sim stays usable without repro.placement.  Resolvable hybrids stay
+        placement-blind for now: the Section-IV solver suite reasons over
+        the binomial family's rack r-subsets."""
         if scheme != "hybrid":
             return None
         p = SchemeParams(K=self.K, P=cluster.topology.P,

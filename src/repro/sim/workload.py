@@ -40,29 +40,58 @@ class JobSpec:
         return float(self.N) * self.Q * self.d
 
 
+SCHEME_FAMILY_NAMES = ("binomial", "resolvable")
+
+
 def valid_subfile_counts(K: int, P: int, rs: Sequence[int],
                          base: int = 1, count: int = 4,
-                         coded_rs: Sequence[int] = ()) -> List[int]:
-    """The smallest ``count`` multiples of the minimal N that satisfies the
-    hybrid divisibility hypotheses (K | NP, C(P,r) | NP/K and r | M) for
-    EVERY r in ``rs`` — plus Coded MapReduce's C(K,r) | N for every r in
-    ``coded_rs`` — so all replication/scheme candidates stay admissible
-    across a heterogeneous-size workload."""
+                         coded_rs: Sequence[int] = (),
+                         families: Sequence[str] = ("binomial",)
+                         ) -> List[int]:
+    """Admissible subfile counts per scheme family, deduped and sorted.
+
+    For each family in ``families``, finds the minimal N satisfying the
+    family's divisibility hypotheses for EVERY r in ``rs`` — binomial: K|NP,
+    C(P,r) | NP/K and r | M; resolvable: q^{r-1} | NP/K and (r-1) | M with
+    q = P/r (rs entries structurally outside the family, e.g. r = 1 or
+    r ∤ P, do not constrain it — the chooser drops those candidates the
+    same way) — plus K | N (uncoded) and Coded MapReduce's C(K,r) | N for
+    every r in ``coded_rs``.  Emits the smallest ``count`` multiples of each
+    family's minimum and returns the sorted union, so workload generators
+    produce jobs feasible for every requested family."""
     if any(r > P for r in rs):
         raise ValueError(f"hybrid requires r <= P; got rs={tuple(rs)} P={P}")
+    unknown = set(families) - set(SCHEME_FAMILY_NAMES)
+    if unknown:
+        raise ValueError(f"unknown scheme families {sorted(unknown)}; "
+                         f"known: {SCHEME_FAMILY_NAMES}")
 
-    def ok(n: int) -> bool:
+    def ok_common(n: int) -> bool:
         if (n * P) % K or n % K:
             return False
-        for r in rs:
-            c = math.comb(P, r)
-            per_layer = n * P // K
-            if per_layer % c or (per_layer // c) % r:
-                return False
         return all(n % math.comb(K, r) == 0 for r in coded_rs)
 
-    n0 = next(n for n in range(1, 10 ** 7) if ok(n))
-    return [n0 * base * m for m in range(1, count + 1)]
+    def ok_family(n: int, family: str) -> bool:
+        per_layer = n * P // K
+        for r in rs:
+            if family == "binomial":
+                c = math.comb(P, r)
+                if per_layer % c or (per_layer // c) % r:
+                    return False
+            else:                                  # resolvable
+                if r < 2 or P % r or P // r < 2:
+                    continue    # structurally outside the family's range
+                b = (P // r) ** (r - 1)
+                if per_layer % b or (per_layer // b) % (r - 1):
+                    return False
+        return True
+
+    out = set()
+    for family in dict.fromkeys(families):         # preserve, dedupe
+        n0 = next(n for n in range(1, 10 ** 7)
+                  if ok_common(n) and ok_family(n, family))
+        out.update(n0 * base * m for m in range(1, count + 1))
+    return sorted(out)
 
 
 class Workload:
@@ -154,13 +183,15 @@ class DiurnalWorkload(Workload):
 
 def default_catalog(K: int, P: int, rs: Sequence[int] = (1, 2, 3),
                     q_mult: int = 2,
-                    coded_rs: Sequence[int] = (2,)
+                    coded_rs: Sequence[int] = (2,),
+                    families: Sequence[str] = ("binomial",)
                     ) -> List[Tuple[str, int, int, int]]:
     """Heterogeneous (name, N, Q, d) catalog: every zoo kind at a distinct
     valid size, Q = q_mult * K keys.  Sizes admit every hybrid r in ``rs``
-    AND Coded MapReduce at ``coded_rs`` (so fixed-scheme baselines are
-    well-defined on the whole stream)."""
+    for every scheme family in ``families`` AND Coded MapReduce at
+    ``coded_rs`` (so fixed-scheme baselines are well-defined on the whole
+    stream)."""
     sizes = valid_subfile_counts(K, P, rs, count=len(JOB_ZOO),
-                                 coded_rs=coded_rs)
+                                 coded_rs=coded_rs, families=families)
     return [(name, n, q_mult * K, d)
             for (name, d), n in zip(JOB_ZOO, sizes)]

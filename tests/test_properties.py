@@ -93,6 +93,65 @@ def test_hybrid_beats_uncoded_cross_rack(p):
 
 
 @st.composite
+def family_plan_params(draw):
+    """(family, params) valid for that plan-compiler family — binomial via
+    the C(P,r)-subset sizing above, resolvable via q = P/r parallel
+    classes with q^{r-1} batches and (r-1) shares per missing block."""
+    family = draw(st.sampled_from(["binomial", "resolvable"]))
+    if family == "binomial":
+        return family, draw(hybrid_params())
+    r = draw(st.integers(2, 3))
+    q = draw(st.integers(2, 4 if r == 2 else 3))
+    P_ = q * r
+    Kr = draw(st.integers(1, 2))
+    K = P_ * Kr
+    M = (r - 1) * draw(st.integers(1, 2))
+    N = q ** (r - 1) * M * Kr * K // P_
+    return family, SchemeParams(K=K, P=P_, Q=K * draw(st.integers(1, 2)),
+                                N=N, r=r)
+
+
+@settings(max_examples=25, deadline=None)
+@given(family_plan_params(), st.sampled_from(["unicast", "coded"]))
+def test_any_registered_compiler_passes_shuffle_oracle(fp, multicast):
+    """EVERY registered plan-compiler family (the tentpole registry) emits
+    plans whose NumPy re-execution — multicast packets decoded against
+    side information — reproduces the dense all-to-all reference
+    bit-exactly, in both wire formats."""
+    from repro.core.coded_collectives import (compile_hybrid_plan,
+                                              plan_shuffle_reference,
+                                              simulate_plan_shuffle)
+    family, p = fp
+    plan = compile_hybrid_plan(p, family=family)
+    rng = np.random.default_rng(abs(hash((family, p.K, p.N, p.r))) % 2 ** 31)
+    V = rng.integers(-50, 50, size=(p.N, p.Q, 2)).astype(np.float32)
+    ref = plan_shuffle_reference(V, p, family=family)
+    got = simulate_plan_shuffle(V, plan, multicast=multicast)
+    np.testing.assert_array_equal(got, ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(family_plan_params())
+def test_resolvable_cost_formula_equals_schedule(fp):
+    """Closed-form resolvable costs == enumerated message schedule, and
+    the strict execute_plan decodability proof holds for random params."""
+    family, p = fp
+    if family != "resolvable":
+        return
+    from repro.core.costs import hybrid_resolvable_cost
+    from repro.core.resolvable import resolvable_assignment
+    from repro.core.shuffle_plan import execute_plan
+    a = resolvable_assignment(p)
+    counts = count_plan(make_plan(a), p)
+    c = hybrid_resolvable_cost(p)
+    assert counts.cross == int(round(c.cross))
+    assert counts.intra == int(round(c.intra))
+    rng = np.random.default_rng(p.N % 2 ** 16)
+    V = rng.integers(0, 100, size=(p.N, p.Q))
+    execute_plan(a, V, strict=True)
+
+
+@st.composite
 def coded_params(draw):
     K = draw(st.integers(3, 6))
     r = draw(st.integers(2, K - 1))

@@ -1,0 +1,459 @@
+"""Scheme-family registry + resolvable-design shuffle family.
+
+Pins the tentpole refactor from every side: the refactored binomial
+compiler stays BIT-IDENTICAL to the pre-refactor plans (sha256 goldens in
+tests/golden_plans.json), every registered family's plans pass the NumPy
+re-execution oracle in both wire formats, the resolvable message schedule
+is strictly decodable and reproduces the closed-form costs, the plan cache
+keys on (params, perm, family) with honest per-family counters, and the
+SchemeChooser / engine / workload layers thread the family end to end.
+"""
+import hashlib
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.coded_collectives import (
+    compile_hybrid_plan, plan_cache_clear, plan_cache_info,
+    plan_shuffle_reference, plan_transfer_matrices, simulate_plan_shuffle)
+from repro.core.costs import hybrid_cost, hybrid_resolvable_cost
+from repro.core.params import SchemeParams
+from repro.core.plan_registry import (family_of_scheme, get_plan_compiler,
+                                      plan_families, register_plan_compiler,
+                                      scheme_of_family)
+from repro.core.resolvable import (resolvable_assignment, shared_group_counts,
+                                   spc_codewords)
+from repro.core.shuffle_plan import (check_reduce_ready, count_plan,
+                                     execute_plan, make_plan,
+                                     plan_stage_traffic,
+                                     scheme_stage_traffic)
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden_plans.json"
+
+# Feasible resolvable configs spanning q in {2, 3, 4}, r in {2, 3, 4},
+# Kr in {1, 2} — including power-of-two N where the binomial family is
+# infeasible for every r >= 2 (the scaling win the family exists for).
+RESOLVABLE_PARAMS = [
+    SchemeParams(K=12, P=6, Q=24, N=48, r=3),     # q=2, Kr=2
+    SchemeParams(K=12, P=6, Q=24, N=48, r=2),     # q=3
+    SchemeParams(K=8, P=8, Q=16, N=64, r=2),      # q=4, Kr=1, pow-2 N
+    SchemeParams(K=18, P=9, Q=36, N=108, r=3),    # q=3
+    SchemeParams(K=16, P=8, Q=32, N=96, r=4),     # q=2, arity 3
+]
+
+# (family, params) pairs for the any-registered-compiler oracle sweep
+FAMILY_CASES = (
+    [("binomial", SchemeParams(K=8, P=4, Q=16, N=48, r=r))
+     for r in (1, 2, 3, 4)]
+    + [("resolvable", p) for p in RESOLVABLE_PARAMS]
+)
+
+
+def _plan_digest(plan) -> str:
+    """sha256 over every table's (name, shape, dtype, bytes) + n_send —
+    the bit-identity fingerprint pinned before the refactor."""
+    fields = json.loads(GOLDEN_PATH.read_text())["fields"]
+    h = hashlib.sha256()
+    for f in fields:
+        a = np.asarray(getattr(plan, f))
+        h.update(f.encode())
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+    h.update(str(plan.n_send).encode())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Tentpole pin 1: refactored binomial backend is bit-identical
+# ---------------------------------------------------------------------------
+
+def test_binomial_plans_bit_identical_to_pre_refactor_goldens():
+    golden = json.loads(GOLDEN_PATH.read_text())
+    assert len(golden["cases"]) >= 10
+    for case in golden["cases"]:
+        K, P, Q, N, r = case["params"]
+        p = SchemeParams(K=K, P=P, Q=Q, N=N, r=r)
+        plan = compile_hybrid_plan(p, perm=case["perm"], family="binomial")
+        assert _plan_digest(plan) == case["sha256"], (
+            f"binomial plan for {case['params']} (perm="
+            f"{case['perm'] is not None}) drifted from the pre-refactor "
+            f"golden")
+        # registry defaults must reproduce the old schema exactly
+        assert plan.family == "binomial"
+        assert plan.cross_valid is None
+        assert plan.mcast_arity == r
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_families_and_scheme_names():
+    assert plan_families() == ("binomial", "resolvable")
+    assert scheme_of_family("binomial") == "hybrid"
+    assert scheme_of_family("resolvable") == "hybrid_resolvable"
+    assert family_of_scheme("hybrid") == "binomial"
+    assert family_of_scheme("hybrid_resolvable") == "resolvable"
+    assert family_of_scheme("uncoded") is None
+    assert get_plan_compiler("binomial") is not get_plan_compiler(
+        "resolvable")
+
+
+def test_registry_rejects_unknown_and_duplicate():
+    with pytest.raises(ValueError, match="unknown scheme family"):
+        compile_hybrid_plan(RESOLVABLE_PARAMS[0], family="steiner")
+    with pytest.raises(ValueError, match="already registered"):
+        register_plan_compiler("binomial")(lambda p, perm=None: None)
+
+
+def test_resolvable_divisibility_rejections():
+    # r=1: no parallel classes
+    with pytest.raises(ValueError, match="r >= 2"):
+        SchemeParams(K=8, P=4, Q=16, N=48, r=1).validate_hybrid_resolvable()
+    # r does not divide P
+    with pytest.raises(ValueError, match=r"r\|P"):
+        SchemeParams(K=12, P=6, Q=24, N=48, r=4).validate_hybrid_resolvable()
+    # q = P/r = 1 (degenerate single-value classes)
+    with pytest.raises(ValueError, match="q=P/r >= 2"):
+        SchemeParams(K=8, P=4, Q=16, N=48, r=4).validate_hybrid_resolvable()
+    # q^{r-1} does not divide NP/K
+    with pytest.raises(ValueError, match=r"q\^\(r-1\)"):
+        SchemeParams(K=12, P=6, Q=24, N=30, r=3).validate_hybrid_resolvable()
+    # (r-1) does not divide M
+    with pytest.raises(ValueError, match=r"\(r-1\)\|M"):
+        SchemeParams(K=16, P=8, Q=32, N=64, r=4).validate_hybrid_resolvable()
+
+
+# ---------------------------------------------------------------------------
+# Tentpole pin 2: any registered family passes the re-execution oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family,p", FAMILY_CASES,
+                         ids=lambda v: str(getattr(v, "r", v)))
+def test_any_family_plan_passes_numpy_oracle(family, p):
+    """Plans of EVERY registered compiler re-execute bit-exactly against
+    the dense oracle, in both the unicast and the coded wire format — the
+    non-hypothesis twin of the property test in test_properties.py."""
+    plan = compile_hybrid_plan(p, family=family)
+    rng = np.random.default_rng(p.r)
+    V = rng.integers(-100, 100, size=(p.N, p.Q, 3)).astype(np.float32)
+    ref = plan_shuffle_reference(V, p, family=family)
+    for mc in ("unicast", "coded"):
+        got = simulate_plan_shuffle(V, plan, multicast=mc)
+        np.testing.assert_array_equal(got, ref, err_msg=f"{family} {mc}")
+
+
+@pytest.mark.parametrize("p", RESOLVABLE_PARAMS,
+                         ids=lambda p: f"P{p.P}r{p.r}")
+def test_resolvable_plan_structure(p):
+    """Structural invariants: local rows + VALID received slots partition
+    each layer table; padded slots are exactly the same-class (or r=2
+    same-value) pairs; packets carry r-1 components."""
+    plan = compile_hybrid_plan(p, family="resolvable")
+    q = p.spc_q
+    assert plan.family == "resolvable"
+    assert plan.mcast_arity == p.r - 1
+    assert plan.cross_valid is not None
+    n_layer = p.subfiles_per_layer
+    assert plan.local_subfiles.shape[-1] == p.N * p.r // p.K
+    counts = shared_group_counts(p)
+    sh = p.M_res // (p.r - 1)
+    for i in range(p.P):
+        for j in range(p.Kr):
+            recv = [plan.cross_recv_pos[i, j, z][plan.cross_valid[i, z]]
+                    for z in range(p.P) if z != i]
+            recv = np.concatenate(recv)
+            local = plan.local_pos[i, j]
+            seen = np.concatenate([local, recv])
+            assert len(np.unique(seen)) == len(seen)     # no row hit twice
+            assert sorted(seen) == list(range(n_layer))  # full coverage
+        for z in range(p.P):
+            got = int(plan.cross_valid[i, z].sum())
+            assert got == counts[z, i] * sh   # receiver i <- source z
+            if z // q == i // q:              # same class: padding only
+                assert got == 0
+
+
+@pytest.mark.parametrize("p", RESOLVABLE_PARAMS,
+                         ids=lambda p: f"P{p.P}r{p.r}")
+def test_resolvable_schedule_decodable_and_counts_match(p):
+    """Message-level proof: execute_plan's strict side-information
+    assertions pass and the enumerated counts equal the closed form."""
+    a = resolvable_assignment(p)
+    counts = count_plan(make_plan(a), p)
+    c = hybrid_resolvable_cost(p)
+    assert counts.cross == pytest.approx(c.cross)
+    assert counts.intra == pytest.approx(c.intra)
+    rng = np.random.default_rng(0)
+    V = rng.integers(-1000, 1000, size=(p.N, p.Q))
+    know = execute_plan(a, V, strict=True)
+    check_reduce_ready(a, know, V)
+    # stage-traffic export agrees with the closed-form path
+    enum = plan_stage_traffic(a)
+    closed = scheme_stage_traffic(p, "hybrid_resolvable")
+    assert [s.stage for s in enum] == [s.stage for s in closed]
+    for se, sc in zip(enum, closed):
+        assert se.cross_pairs == pytest.approx(sc.cross_pairs)
+        assert se.intra_pairs == pytest.approx(sc.intra_pairs)
+
+
+def test_resolvable_transfer_matrices_total_to_closed_form():
+    p = RESOLVABLE_PARAMS[0]
+    plan = compile_hybrid_plan(p, family="resolvable")
+    c = hybrid_resolvable_cost(p)
+    tm = plan_transfer_matrices(plan, multicast="coded")
+    assert tm["cross_rack_matrix"].sum() == pytest.approx(c.cross)
+    assert tm["intra_per_rack"].sum() == pytest.approx(c.intra)
+    # unicast wire format carries arity copies of each coded packet
+    tmu = plan_transfer_matrices(plan, multicast="unicast")
+    assert tmu["cross_rack_matrix"].sum() == pytest.approx(
+        c.cross * plan.mcast_arity)
+    # same-class rack pairs exchange nothing
+    q = p.spc_q
+    cls = np.arange(p.P) // q
+    same = cls[:, None] == cls[None, :]
+    assert (tm["cross_rack_matrix"][same] == 0).all()
+
+
+def test_resolvable_gain_is_arity_and_beats_uncoded():
+    """Multicast gain r-1: cross cost is the uncoded cross scaled by
+    (1 - r/P)/((r-1)(1 - 1/P))."""
+    from repro.core.costs import uncoded_cost
+    for p in RESOLVABLE_PARAMS:
+        res = hybrid_resolvable_cost(p)
+        unc = uncoded_cost(p, check=False)
+        assert res.cross == pytest.approx(
+            p.Q * p.N / (p.r - 1) * (1 - p.r / p.P))
+        assert res.cross < unc.cross
+        # binomial at the same r (when its closed form is defined) is the
+        # stronger code: gain r vs r-1
+        assert res.cross > hybrid_cost(p, check=False).cross
+
+
+def test_resolvable_assignment_invariants():
+    p = RESOLVABLE_PARAMS[0]
+    a = resolvable_assignment(p)
+    assert a.scheme == "hybrid_resolvable"
+    q = p.spc_q
+    inc = a.incidence()
+    # every subfile mapped r times, one rack per class, same layer
+    for subfile, servers in enumerate(a.servers_of_subfile):
+        assert len(servers) == p.r
+        racks = [s // p.Kr for s in servers]
+        layers = {s % p.Kr for s in servers}
+        assert len(layers) == 1
+        assert sorted(rk // q for rk in racks) == list(range(p.r))
+    # per-server load: r N / K (same computation load as binomial)
+    assert (inc.sum(axis=0) == p.N * p.r // p.K).all()
+
+
+def test_spc_codewords_are_the_parity_check_code():
+    cw = spc_codewords(3, 3)
+    assert cw.shape == (9, 3)
+    assert ((cw[:, :-1].sum(axis=1) % 3) == cw[:, -1]).all()
+    assert len({tuple(c) for c in cw.tolist()}) == 9
+
+
+# ---------------------------------------------------------------------------
+# Plan cache: (params, perm, family) key + per-family counters
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_keys_on_family_and_reports_per_family():
+    # N=60: per-layer 30 admits binomial (C(6,2)=15, M=2 even) AND
+    # resolvable (q=3 | 30) at r=2
+    p = SchemeParams(K=12, P=6, Q=24, N=60, r=2)
+    plan_cache_clear()
+    b1 = compile_hybrid_plan(p, family="binomial")
+    r1 = compile_hybrid_plan(p, family="resolvable")
+    assert b1 is not r1                       # families never alias
+    assert b1.family == "binomial" and r1.family == "resolvable"
+    assert compile_hybrid_plan(p, family="binomial") is b1
+    assert compile_hybrid_plan(p, family="resolvable") is r1
+    info = plan_cache_info()
+    assert info.hits == 2 and info.misses == 2
+    assert info.families["binomial"] == (1, 1)
+    assert info.families["resolvable"] == (1, 1)
+    # perm is part of the key for every family
+    perm = list(np.random.default_rng(0).permutation(p.N))
+    r2 = compile_hybrid_plan(p, perm=perm, family="resolvable")
+    assert r2 is not r1
+    assert compile_hybrid_plan(p, perm=perm, family="resolvable") is r2
+    assert plan_cache_info().families["resolvable"] == (2, 2)
+    plan_cache_clear()
+    assert plan_cache_info().families == {}
+
+
+def test_plan_cache_back_compat_attrs_still_work():
+    p = SchemeParams(K=8, P=4, Q=16, N=48, r=2)
+    compile_hybrid_plan.cache_clear()
+    compile_hybrid_plan(p)
+    compile_hybrid_plan(p)
+    info = compile_hybrid_plan.cache_info()
+    assert info.hits >= 1 and info.misses >= 1
+
+
+# ---------------------------------------------------------------------------
+# Threading: chooser, engine, workload
+# ---------------------------------------------------------------------------
+
+def test_chooser_selects_resolvable_where_it_wins():
+    """At a power-of-two-ish N where EVERY binomial r (and uncoded/coded)
+    is inadmissible, the chooser must land on hybrid_resolvable — and a
+    scheduled sim run completes the job under it."""
+    from repro.sim.cluster import ClusterSim, CostModel
+    from repro.sim.network import RackTopology
+    from repro.sim.scheduler import SchemeChooser, run_scheduled
+    from repro.sim.workload import JobSpec
+
+    K, P = 12, 6
+    spec = JobSpec("histogram", N=32, Q=24, d=1)
+    topo = RackTopology(P=P, cross_bw=1e5, intra_bw=1e6)
+    cluster = ClusterSim(topo, K=K, cost_model=CostModel())
+    chooser = SchemeChooser(K, cost_model=cluster.cost_model, rs=(1, 2, 3))
+    d = chooser.choose(spec, cluster)
+    assert d.scheme == "hybrid_resolvable" and d.r == 3
+    assert d.compile_s >= 0.0
+    stats, sched = run_scheduled([spec], cluster, chooser)
+    assert len(stats) == 1 and stats[0].jct > 0
+    assert sched.decisions[stats[0].job_id].scheme == "hybrid_resolvable"
+
+
+def test_chooser_prices_resolvable_against_binomial():
+    """When both families are admissible at the same r, the chooser keeps
+    whichever estimates faster — and the resolvable estimate exists (is
+    not rejected) alongside the binomial one."""
+    from repro.sim.cluster import ClusterSim, CostModel
+    from repro.sim.network import RackTopology
+    from repro.sim.scheduler import SchemeChooser
+    from repro.sim.workload import JobSpec
+
+    K, P = 12, 6
+    spec = JobSpec("histogram", N=720, Q=24, d=1)   # feasible both families
+    topo = RackTopology(P=P, cross_bw=1e5, intra_bw=1e6)
+    cluster = ClusterSim(topo, K=K, cost_model=CostModel())
+    chooser = SchemeChooser(K, cost_model=cluster.cost_model, rs=(2, 3))
+    est_bin = chooser.estimate(spec, "hybrid", 2, cluster)
+    est_res = chooser.estimate(spec, "hybrid_resolvable", 2, cluster)
+    assert est_bin is not None and est_res is not None
+    d = chooser.choose(spec, cluster)
+    best = min(e for e in (
+        chooser.estimate(spec, s, r, cluster)
+        for s, r in chooser.candidates()) if e is not None)
+    assert d.est_jct == pytest.approx(best)
+
+
+def test_chooser_compile_charge_per_family_is_honest():
+    """Probing a binomial plan must NOT register as a cache hit for the
+    resolvable sibling of the same params."""
+    from repro.sim.cluster import ClusterSim, CostModel
+    from repro.sim.network import RackTopology
+    from repro.sim.scheduler import SchemeChooser
+
+    K, P = 12, 6
+    p = SchemeParams(K=K, P=P, Q=24, N=720, r=2)
+    plan_cache_clear()
+    topo = RackTopology(P=P, cross_bw=1e5, intra_bw=1e6)
+    cluster = ClusterSim(topo, K=K, cost_model=CostModel())
+    chooser = SchemeChooser(K, cost_model=cluster.cost_model)
+    secs_b, hit_b = chooser._compile_charge(p, "hybrid", probe=True)
+    assert not hit_b and secs_b >= 0
+    # binomial now cached — the resolvable probe must still be a miss
+    secs_r, hit_r = chooser._compile_charge(p, "hybrid_resolvable",
+                                            probe=True)
+    assert not hit_r and secs_r >= 0
+    # and both are hits the second time around
+    assert chooser._compile_charge(p, "hybrid", probe=True)[1]
+    assert chooser._compile_charge(p, "hybrid_resolvable", probe=True)[1]
+
+
+def test_run_job_distributed_scheme_family(tmp_path):
+    """Engine threading: the resolvable family produces outputs identical
+    to run_job on a feasible config, with the family's cost accounting."""
+    import jax.numpy as jnp
+    from repro.distributed.meshes import make_mesh
+    from repro.mapreduce.engine import run_job, run_job_distributed
+    from repro.mapreduce.jobs import histogram_job
+
+    p = SchemeParams(K=1, P=1, Q=4, N=6, r=1)
+    mesh = make_mesh((1, 1), ("rack", "server"))
+    job = histogram_job()
+    rng = np.random.default_rng(0)
+    subs = rng.integers(0, 1 << 16, size=(p.N, 64)).astype(np.int32)
+    # K=1 has no resolvable design (q < 2): the family must reject loudly
+    with pytest.raises(ValueError):
+        run_job_distributed(job, subs, p, mesh, scheme_family="resolvable")
+    # binomial default unchanged
+    got = run_job_distributed(job, subs, p, mesh)
+    ref = run_job(job, jnp.asarray(subs), p, "hybrid")
+    np.testing.assert_array_equal(np.asarray(got.outputs),
+                                  np.asarray(ref.outputs))
+    assert got.scheme == "hybrid"
+
+
+def test_run_job_resolvable_cost_accounting():
+    import jax.numpy as jnp
+    from repro.mapreduce.engine import run_job
+    from repro.mapreduce.jobs import histogram_job
+
+    p = RESOLVABLE_PARAMS[0]
+    rng = np.random.default_rng(0)
+    subs = rng.integers(0, 1 << 16, size=(p.N, 16)).astype(np.int32)
+    res = run_job(histogram_job(), jnp.asarray(subs), p, "hybrid_resolvable")
+    c = hybrid_resolvable_cost(p)
+    assert res.cross_cost == pytest.approx(c.cross)
+    assert res.intra_cost == pytest.approx(c.intra)
+
+
+def test_valid_subfile_counts_per_family():
+    from repro.sim.workload import default_catalog, valid_subfile_counts
+
+    K, P = 12, 6
+    binom = valid_subfile_counts(K, P, rs=(1, 2, 3))
+    both = valid_subfile_counts(K, P, rs=(1, 2, 3),
+                                families=("binomial", "resolvable"))
+    resol = valid_subfile_counts(K, P, rs=(2, 3), families=("resolvable",))
+    # sorted, deduped, and the union covers the binomial-only list
+    for lst in (binom, both, resol):
+        assert lst == sorted(set(lst))
+    assert set(binom) <= set(both)
+    # every emitted N is admissible for its family at every structural r
+    for n in resol:
+        for r in (2, 3):
+            SchemeParams(K=K, P=P, Q=2 * K, N=n,
+                         r=r).validate_hybrid_resolvable()
+    for n in binom:
+        for r in (1, 2, 3):
+            SchemeParams(K=K, P=P, Q=2 * K, N=n, r=r).validate_hybrid()
+    # resolvable minimum is far below the binomial one at this (K, P)
+    assert min(resol) < min(binom)
+    with pytest.raises(ValueError, match="unknown scheme families"):
+        valid_subfile_counts(K, P, rs=(2,), families=("steiner",))
+    cat = default_catalog(K, P, rs=(1, 2, 3),
+                          families=("binomial", "resolvable"))
+    assert len(cat) == 4
+    for _, n, q, _ in cat:
+        # union catalog: every size admits at least one family at r=2
+        p = SchemeParams(K=K, P=P, Q=q, N=n, r=2)
+        try:
+            p.validate_hybrid()
+        except ValueError:
+            p.validate_hybrid_resolvable()
+
+
+def test_structured_replicas_unchanged_by_refactor():
+    """placement.structured now delegates its parallel-class shift to
+    repro.core.resolvable — placements must be pinned bit-identical."""
+    from repro.placement.structured import (replica_load,
+                                            structured_replicas)
+
+    p = SchemeParams(K=8, P=4, Q=16, N=48, r=2, r_f=3)
+    reps = structured_replicas(p, policy="resolvable")
+    # layer c is the base layout shifted by c: rack +c, slot +c//P
+    base = np.arange(p.N) % p.K
+    np.testing.assert_array_equal(reps[:, 0], base)
+    np.testing.assert_array_equal(
+        reps[:, 1], ((base // p.Kr + 1) % p.P) * p.Kr + base % p.Kr)
+    assert (replica_load(reps, p.K) == p.N * p.r_f // p.K).all()

@@ -14,71 +14,15 @@ import pytest
 from repro.core.assignment import hybrid_assignment
 from repro.core.coded_collectives import (
     HybridShufflePlan, HybridShufflePlanR2, compile_hybrid_plan,
-    compile_hybrid_plan_r2, pack_local_values, plan_shuffle_reference,
-    reduce_output_keys, reduce_ready_order)
+    compile_hybrid_plan_r2, plan_shuffle_reference, reduce_output_keys,
+    reduce_ready_order, simulate_plan_shuffle)
 from repro.core.costs import hybrid_cost
 from repro.core.params import SchemeParams
 from repro.core.shuffle_plan import count_plan, make_plan
 
-
-def simulate_shuffle_numpy(values: np.ndarray, plan: HybridShufflePlan,
-                           multicast: str = "unicast") -> np.ndarray:
-    """Re-execute the exact data movement of ``hybrid_shuffle`` with NumPy
-    indexing: stage-1 table fill (local rows + per-source-rack received
-    blocks), then the stage-2 intra-rack key split.  Independent of jax and
-    of device count, so it validates the index tables in-process.
-
-    ``multicast='coded'`` re-executes the coded wire format instead: each
-    stage-1 packet is the SUM of its r components (built from the sender's
-    ``mcast_comp_*`` tables) and the receiver decodes by subtracting its
-    r-1 locally-known components (``mcast_known_*``) — NumPy end to end, so
-    it proves decodability of the multicast tables themselves."""
-    p = plan.params
-    q_rack, q_srv = p.Q // p.P, p.Q // p.K
-    n_layer = p.subfiles_per_layer
-    d = values.shape[-1]
-    local = pack_local_values(values, plan).reshape(
-        p.P, p.Kr, -1, p.Q, d)                      # [P, Kr, n_loc, Q, d]
-    coded = multicast == "coded" and p.r >= 2
-
-    # ---- Stage 1: per-device layer table over its rack's q_rack keys ------
-    table = np.zeros((p.P, p.Kr, n_layer, q_rack, d), values.dtype)
-    for i in range(p.P):
-        keys_i = np.arange(i * q_rack, (i + 1) * q_rack)
-        for j in range(p.Kr):
-            table[i, j, plan.local_pos[i, j]] = local[i, j][:, keys_i]
-            if plan.n_send:
-                for z in range(p.P):
-                    if z == i:
-                        continue
-                    if not coded:
-                        # what z sends to i: its share rows, i's rack keys
-                        sent = local[z, j][plan.cross_send_pos[z, j, i]][
-                            :, keys_i]
-                        table[i, j, plan.cross_recv_pos[i, j, z]] = sent
-                        continue
-                    # sender z encodes packets for destination i
-                    cpos = plan.mcast_comp_pos[z, i]       # [n_send, r]
-                    ckey = (plan.mcast_comp_rack[z, i][..., None] * q_rack
-                            + np.arange(q_rack))           # [n_send, r, qr]
-                    f = local[z, j][cpos[..., None],
-                                    ckey].sum(axis=1)      # [n_send, qr, d]
-                    # receiver i decodes with its side information
-                    kpos = plan.mcast_known_pos[i, z]      # [n_send, r-1]
-                    kkey = (plan.mcast_known_rack[i, z][..., None] * q_rack
-                            + np.arange(q_rack))
-                    side = local[i, j][kpos[..., None], kkey].sum(axis=1)
-                    table[i, j, plan.cross_recv_pos[i, j, z]] = f - side
-
-    # ---- Stage 2: intra-rack all_to_all == per-server key split -----------
-    out = np.zeros((p.K, p.Kr * n_layer, q_srv, d), values.dtype)
-    for i in range(p.P):
-        for j in range(p.Kr):
-            s = p.server_id(i, j)
-            # device (i, j) collects key-chunk j of every layer jp's table
-            out[s] = table[i, :, :, j * q_srv:(j + 1) * q_srv, :].reshape(
-                p.Kr * n_layer, q_srv, d)
-    return out
+# The NumPy re-execution oracle now lives beside the plan compilers (it is
+# family-agnostic and shared with benchmarks/scale_bench.py).
+simulate_shuffle_numpy = simulate_plan_shuffle
 
 
 # P=4 racks x Kr=2; N=48 satisfies C(4,r) | NP/K and r | M for every
