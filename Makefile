@@ -4,7 +4,7 @@
 PYTEST ?= python -m pytest
 
 .PHONY: test test-all bench bench-pipeline bench-sim bench-locality \
-	bench-resilience bench-table1 bench-scale
+	bench-resilience bench-faults bench-table1 bench-scale
 
 test:
 	$(PYTEST) -q -m "not slow"
@@ -26,6 +26,9 @@ bench-locality:
 
 bench-resilience:
 	PYTHONPATH=src python benchmarks/resilience_bench.py
+
+bench-faults:
+	PYTHONPATH=src python benchmarks/faults_bench.py
 
 bench-table1:
 	PYTHONPATH=src python benchmarks/table1_costs.py

@@ -7,7 +7,7 @@ is how the artifacts are regenerated — expect a dirty git tree afterwards).
 ``shuffle``/``roofline`` print ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run [--section table1|table2|shuffle|
-                                                      roofline|scale|all]
+                                              roofline|scale|faults|all]
 """
 from __future__ import annotations
 
@@ -15,8 +15,8 @@ import argparse
 import sys
 import traceback
 
-from . import (roofline_report, scale_bench, shuffle_bench, table1_costs,
-               table2_locality)
+from . import (faults_bench, roofline_report, scale_bench, shuffle_bench,
+               table1_costs, table2_locality)
 
 SECTIONS = {
     "table1": table1_costs.main,
@@ -24,6 +24,7 @@ SECTIONS = {
     "shuffle": shuffle_bench.main,
     "roofline": roofline_report.main,
     "scale": scale_bench.main,
+    "faults": faults_bench.main,
 }
 
 

@@ -407,7 +407,8 @@ def _uncombine(f, known, multicast: str, combine_impl: str):
 def shuffle_device_body(vals: jax.Array, plan: HybridShufflePlan,
                         tables: DevicePlanTables,
                         multicast: str = "unicast",
-                        combine_impl: str = "xla") -> jax.Array:
+                        combine_impl: str = "xla",
+                        patch: Optional[jax.Array] = None) -> jax.Array:
     """Per-device body of the two-stage hybrid shuffle, general r.
 
     Runs inside a shard_map over ('rack', 'server').  ``vals`` is THIS
@@ -425,6 +426,11 @@ def shuffle_device_body(vals: jax.Array, plan: HybridShufflePlan,
     selects the encode/decode implementation: ``'xla'`` (jnp adds) or
     ``'pallas'`` (the fused single-HBM-pass kernels of
     :mod:`repro.kernels.coded_combine`, interpret-mode off TPU).
+
+    ``patch`` is this device's [n_layer, q_rack, d] additive stage-1 table
+    correction — the degraded-recovery path of :mod:`repro.core.degraded`
+    injects re-mapped orphan rows through it (those rows receive nothing
+    and their local fill is zero, so add == set).  ``None`` costs nothing.
     """
     if multicast not in MULTICAST_MODES:
         raise ValueError(f"multicast must be one of {MULTICAST_MODES}")
@@ -486,6 +492,10 @@ def shuffle_device_body(vals: jax.Array, plan: HybridShufflePlan,
         if tables.cross_valid is None:
             # binomial: every slot from a distinct source rack is real
             valid = (jnp.repeat(jnp.arange(p.P), n_send) != i)
+        elif tables.cross_valid.ndim == 4:
+            # degraded plans: per-LAYER validity (repair streams differ by
+            # which servers of the layer died)
+            valid = tables.cross_valid[i, j].reshape(-1)
         else:
             # families with padded streams (resolvable): per-slot mask
             valid = tables.cross_valid[i].reshape(-1)
@@ -493,6 +503,8 @@ def shuffle_device_body(vals: jax.Array, plan: HybridShufflePlan,
         # rows are hit at most once => add == set
         table = table.at[flat_dst].add(
             jnp.where(valid[:, None, None], flat_src, 0))
+    if patch is not None:
+        table = table + patch
 
     # ---- Stage 2: intra-rack all_to_all over 'server' ----------------------
     per_srv = table.reshape(n_layer, p.Kr, q_srv, d).transpose(1, 0, 2, 3)
@@ -629,7 +641,9 @@ def plan_shuffle_reference(values: np.ndarray, p: SchemeParams,
 
 
 def simulate_plan_shuffle(values: np.ndarray, plan: HybridShufflePlan,
-                          multicast: str = "unicast") -> np.ndarray:
+                          multicast: str = "unicast", *,
+                          failed: Sequence[int] = (),
+                          patch: Optional[np.ndarray] = None) -> np.ndarray:
     """Re-execute the exact data movement of :func:`hybrid_shuffle` with
     NumPy indexing: stage-1 table fill (local rows + per-source-rack
     received blocks), then the stage-2 intra-rack key split.  Independent of
@@ -643,13 +657,25 @@ def simulate_plan_shuffle(values: np.ndarray, plan: HybridShufflePlan,
     subtracting its arity-1 locally-known components (``mcast_known_*``) —
     NumPy end to end, so it proves decodability of the multicast tables
     themselves.  Plans with padded streams contribute only their
-    ``cross_valid`` slots, exactly like the device body's receive mask."""
+    ``cross_valid`` slots, exactly like the device body's receive mask.
+
+    ``failed`` (flat server ids) zeroes those devices' in-memory map outputs
+    before the shuffle — the crash model of :mod:`repro.core.degraded` —
+    and ``patch`` adds a [K, n_layer, q_rack, d] per-device stage-1
+    correction (re-mapped orphan rows) after the table fill, mirroring the
+    ``patch`` argument of :func:`shuffle_device_body`.  Together they make
+    this oracle re-execute a DEGRADED plan exactly as the 8-device driver
+    would, still independent of jax."""
     p = plan.params
     q_rack, q_srv = p.Q // p.P, p.Q // p.K
     n_layer = p.subfiles_per_layer
     d = values.shape[-1]
     local = pack_local_values(values, plan).reshape(
         p.P, p.Kr, -1, p.Q, d)                      # [P, Kr, n_loc, Q, d]
+    if failed:
+        local = local.copy()
+        for s in failed:
+            local[int(s) // p.Kr, int(s) % p.Kr] = 0
     arity = plan.mcast_arity
     coded = multicast == "coded" and arity >= 2
 
@@ -663,8 +689,10 @@ def simulate_plan_shuffle(values: np.ndarray, plan: HybridShufflePlan,
                 for z in range(p.P):
                     if z == i:
                         continue
-                    valid = (slice(None) if plan.cross_valid is None
-                             else plan.cross_valid[i, z])
+                    cv = plan.cross_valid
+                    valid = (slice(None) if cv is None
+                             else cv[i, j, z] if cv.ndim == 4
+                             else cv[i, z])
                     dst = plan.cross_recv_pos[i, j, z][valid]
                     if not coded:
                         # what z sends to i: its share rows, i's rack keys
@@ -684,6 +712,9 @@ def simulate_plan_shuffle(values: np.ndarray, plan: HybridShufflePlan,
                             + np.arange(q_rack))
                     side = local[i, j][kpos[..., None], kkey].sum(axis=1)
                     table[i, j, dst] = (f - side)[valid]
+    if patch is not None:
+        table = table + np.asarray(patch).reshape(
+            p.P, p.Kr, n_layer, q_rack, d)
 
     # ---- Stage 2: intra-rack all_to_all == per-server key split -----------
     out = np.zeros((p.K, p.Kr * n_layer, q_srv, d), values.dtype)

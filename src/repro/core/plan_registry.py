@@ -151,3 +151,12 @@ def family_of_scheme(scheme: str) -> Optional[str]:
     if scheme.startswith("hybrid_"):
         return scheme[len("hybrid_"):]
     return None
+
+
+def compile_degraded_plan(*args, **kwargs):
+    """Registry-level entry point for degraded-mode plan recompilation —
+    re-routes any registered family's plan around crashed servers.  Lazy
+    re-export of :func:`repro.core.degraded.compile_degraded_plan` (that
+    module imports the plan compilers, which import this one)."""
+    from .degraded import compile_degraded_plan as impl
+    return impl(*args, **kwargs)

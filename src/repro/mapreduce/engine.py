@@ -64,6 +64,25 @@ class JobResult:
     intra_cost: float                         # paper metric (kv pairs)
     cross_cost: float
     scheme: str
+    # filled by the recovery ladder when the job ran under injected faults
+    # (repro.mapreduce.recovery.RecoveryReport); None on failure-free runs
+    recovery: object | None = None
+
+
+def _validate_mesh(mesh: Mesh, p: SchemeParams) -> None:
+    """Fail fast (and legibly) on a mesh that does not realize the scheme's
+    (P racks) x (Kr servers) grid — a mismatch otherwise surfaces deep
+    inside shard_map as an opaque XLA shape error."""
+    names = tuple(mesh.axis_names)
+    if "rack" not in names or "server" not in names:
+        raise ValueError(
+            f"mesh must have axes ('rack', 'server'); got {names!r}")
+    shape = dict(mesh.shape)
+    if shape["rack"] != p.P or shape["server"] != p.Kr:
+        raise ValueError(
+            f"mesh shape (rack={shape['rack']}, server={shape['server']}) "
+            f"does not match SchemeParams: need rack=P={p.P}, "
+            f"server=Kr={p.Kr} (K={p.K} servers in {p.P} racks)")
 
 
 def _assignment_for(params: SchemeParams, scheme: str):
@@ -160,7 +179,8 @@ def run_job_distributed(job: MapReduceJob, subfiles: np.ndarray,
                         multicast: str = "unicast",
                         combine_impl: str = "xla",
                         placement: object | None = None,
-                        scheme_family: str = "binomial") -> JobResult:
+                        scheme_family: str = "binomial",
+                        faults: object | None = None) -> JobResult:
     """Multi-device execution: real all_to_all shuffle (hybrid scheme,
     general map-replication r in [1, P]).
 
@@ -192,9 +212,23 @@ def run_job_distributed(job: MapReduceJob, subfiles: np.ndarray,
     tables are permutation-invariant, so outputs are unchanged while each
     device's map inputs become the placement's (the real-cluster analogue of
     the simulator's fetch-traffic bridge).
+
+    ``faults`` (a :class:`repro.resilience.faults.FaultSpec`) runs the job
+    under injected server crashes through the recovery ladder of
+    :mod:`repro.mapreduce.recovery` — decode-around, partial re-map, then
+    bounded-retry restart — and fills ``JobResult.recovery``; outputs stay
+    bit-identical to the failure-free run.
     """
     p = params if r is None or r == params.r else \
         dataclasses.replace(params, r=r)
+    _validate_mesh(mesh, p)
+    if faults is not None:
+        from .recovery import run_with_recovery
+        return run_with_recovery(job, subfiles, p, mesh, faults,
+                                 multicast=multicast,
+                                 combine_impl=combine_impl,
+                                 placement=placement,
+                                 scheme_family=scheme_family)
     perm = getattr(placement, "perm", placement)
     plan = compile_hybrid_plan(p, perm=perm, family=scheme_family)
     if fused:

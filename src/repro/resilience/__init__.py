@@ -14,9 +14,15 @@ package quantifies when each use of the budget wins:
     rack-hedged structured placements);
   * :mod:`.experiments` — the cloning-vs-coding frontier over the Table I
     grid and the hedged-vs-static stream comparison feeding
-    ``benchmarks/resilience_bench.py`` -> ``BENCH_resilience.json``.
+    ``benchmarks/resilience_bench.py`` -> ``BENCH_resilience.json``;
+  * :mod:`.faults` — seeded crash schedules (:class:`FaultInjector` /
+    :class:`FaultSpec`) driving both the executable engine's recovery
+    ladder (``run_job_distributed(faults=...)``) and the simulator's crash
+    events — CRASHES, not just slowness (see docs/faults.md);
+  * :mod:`.backoff` — the shared jittered-exponential restart budget used
+    by the trainer's checkpoint/resume driver and the engine ladder.
 
-See docs/resilience.md.
+See docs/resilience.md and docs/faults.md.
 """
 from .speculation import (LateBackup, MantriRestart, NoSpeculation,
                           ProactiveClone, SPECULATION_POLICIES,
@@ -27,8 +33,12 @@ from .experiments import (DEFAULT_POLICIES, FrontierCell, TABLE1_ROWS,
                           check_frontier_invariants,
                           cloning_vs_coding_frontier, frontier_curve,
                           hedged_vs_static_stream, straggler_regimes)
+from .backoff import BackoffPolicy, RestartBudget, RestartBudgetExceeded
+from .faults import CRASH_PHASES, CrashEvent, FaultInjector, FaultSpec
 
 __all__ = [
+    "BackoffPolicy", "RestartBudget", "RestartBudgetExceeded",
+    "CRASH_PHASES", "CrashEvent", "FaultInjector", "FaultSpec",
     "LateBackup", "MantriRestart", "NoSpeculation", "ProactiveClone",
     "SPECULATION_POLICIES", "SpeculationPolicy", "get_policy",
     "register_policy",

@@ -1,9 +1,11 @@
 """repro.sim — rack-level cluster simulator + multi-job scheduler.
 
 Answers the question the closed forms cannot: what is job completion TIME
-under link contention, stragglers, skewed bandwidth, or a stream of
-concurrent jobs?  See docs/simulator.md for the event model, calibration
-recipe, scheduler policies and scenario catalog.
+under link contention, stragglers, skewed bandwidth, crashes, or a stream
+of concurrent jobs?  See docs/simulator.md for the event model, calibration
+recipe, scheduler policies and scenario catalog, and docs/faults.md for
+seeded crash injection (:meth:`ClusterSim.inject_crash` /
+:class:`repro.resilience.FaultInjector`) and recovery pricing.
 """
 from .cluster import (ClusterSim, CostModel, DeterministicSlowdown,
                       ExponentialTail, JobStats, MapTask, MapTaskAttempt,

@@ -36,6 +36,7 @@ import numpy as np
 
 from ..core.assignment import (coded_assignment, hybrid_assignment,
                                uncoded_assignment)
+from ..core.degraded import degraded_stage_traffic
 from ..core.params import SchemeParams
 from ..core.shuffle_plan import StageTraffic, scheme_stage_traffic
 from .events import Event, EventQueue, TraceEntry
@@ -600,6 +601,45 @@ class TaskMapPhase:
             for server in sorted(set(freed) | {a.server}):
                 self._dispatch(server)
 
+    def crash(self, servers: Sequence[int]) -> None:
+        """Apply a server crash to the live task-granular map phase: live
+        attempts on the crashed servers are cancelled (fetch flows aborted,
+        completion events voided, slots freed), completed tasks whose
+        winning attempt ran there are re-queued (their in-memory outputs
+        died with the server), and the crashed servers disappear from every
+        task's input ``stores`` — a replacement attempt must re-fetch the
+        input from surviving replicas (or the root when none survive in
+        rack).  Re-queued tasks go back to their home server at the current
+        wave; the task engine then re-executes them like any other work, so
+        the map phase still ends with ALL outputs present (no degraded
+        shuffle needed for crashes absorbed here)."""
+        if self.done:
+            return
+        dead = {int(s) for s in servers}
+        for a in list(self._attempts.values()):
+            if a.server in dead and a.state in ("queued", "fetching",
+                                                "running"):
+                self._cancel_attempt(a)
+        for task in self.tasks:
+            if dead.intersection(task.stores):
+                task.stores = tuple(s for s in task.stores if s not in dead)
+            if task.done:
+                win = next((a for a in task.attempts if a.state == "done"),
+                           None)
+                if win is not None and win.server in dead:
+                    task.done = False
+                    task.finish = -1.0
+                    win.state = "cancelled"
+                    self.remaining += 1
+                    self.sim._trace("task_lost",
+                                    (self.job.job_id, task.index, win.server))
+        for task in self.tasks:
+            if not task.done and not self.live_attempts(task):
+                self._enqueue(task, task.server, wave=self.wave,
+                              is_backup=False)
+        for s in range(self.K):
+            self._dispatch(s, steal=False)
+
     def _finish(self) -> None:
         self.done = True
         for a in self._attempts.values():
@@ -643,6 +683,14 @@ class _SimJob:
     n_backups: int = 0
     n_backup_wins: int = 0
     map_waves: int = 1
+    # crash/recovery state (see ClusterSim.inject_crash): servers whose
+    # in-memory map outputs are currently lost, the failure set the active
+    # recovery stages were compiled for, and the accounting counters
+    failed: Tuple[int, ...] = ()
+    recovered_for: Tuple[int, ...] = ()
+    remap_subfiles: int = 0
+    n_crashes: int = 0
+    n_recoveries: int = 0
 
 
 @dataclasses.dataclass
@@ -660,6 +708,10 @@ class JobStats:
     n_backups: int = 0                  # backup attempts launched
     n_backup_wins: int = 0              # tasks won by a backup
     map_waves: int = 1                  # straggler waves sampled for map
+    # crash-recovery accounting (ClusterSim.inject_crash)
+    crashes: int = 0                    # crash events that hit live state
+    remapped_subfiles: int = 0          # subfiles re-mapped (all r owners lost)
+    recoveries: int = 0                 # degraded-recovery passes run
 
     @property
     def jct(self) -> float:
@@ -749,6 +801,45 @@ class ClusterSim:
         self.queue.push(t, "submit", (job.job_id,),
                         lambda j=job: self._start_job(j))
         return job.job_id
+
+    def inject_crash(self, time: float, servers: Sequence[int]) -> None:
+        """Schedule a crash of ``servers`` (flat ids) at sim time ``time``.
+
+        Crash model (matches :mod:`repro.core.degraded` and the engine
+        ladder): the servers lose their IN-MEMORY state — map outputs,
+        running task attempts, in-flight shuffle bytes — and replacement
+        workers rejoin at the same coordinates with empty memory.  Effects
+        depend on the phase each live job is in when the crash fires:
+
+          * before map starts (submitted / plan_compile / fetch): nothing
+            in memory yet — no effect on that job;
+          * task-granular map: live attempts on the crashed servers are
+            cancelled (slots freed, fetch flows aborted), finished tasks
+            whose winning attempt ran there are re-queued, and the crashed
+            servers are stripped from input ``stores`` (a replacement must
+            re-fetch);
+          * barrier map / pack: the loss is recorded; the degraded recovery
+            runs right after the pack barrier (the barrier abstraction has
+            no per-server progress to cancel);
+          * shuffle: every in-flight flow of the job is cancelled (no
+            orphan flows remain — asserted in tests), pending stage events
+            voided, and recovery begins immediately;
+          * reduce: the phase is voided and recovery re-runs the (degraded)
+            shuffle before reducing again.
+
+        Recovery is priced through the same fluid network: a degraded
+        unicast re-shuffle (exact loads from the degraded plan where
+        compilable), preceded by a re-map phase when subfiles lost all r
+        owners — r >= 2 schemes decode around f <= r-1 failures with ZERO
+        re-mapped subfiles, r = 1 re-runs the dead servers' map partitions.
+        Seeded schedules (:class:`repro.resilience.faults.FaultInjector`
+        ``.inject_into(sim)``) keep traces bit-identical across reruns.
+        """
+        servers_t = tuple(sorted({int(s) for s in servers}))
+        for s in servers_t:
+            if not 0 <= s < self.K:
+                raise ValueError(f"server id {s} out of range [0, {self.K})")
+        self.at(time, lambda: self._crash(servers_t), "crash", (servers_t,))
 
     def run(self, until: float = float("inf")) -> List[JobStats]:
         """Advance until no work is left (or ``until``); returns all
@@ -873,6 +964,73 @@ class ClusterSim:
         job.tasks = None
         self._phase_done(job, "map")
 
+    def _crash(self, servers: Tuple[int, ...]) -> None:
+        for job_id in sorted(self._jobs):
+            job = self._jobs[job_id]
+            if job.phase != "done":
+                self._crash_job(job, servers)
+
+    def _crash_job(self, job: _SimJob, servers: Tuple[int, ...]) -> None:
+        ph = job.phase
+        if ph in ("submitted", "plan_compile", "fetch"):
+            return                   # no map output in memory yet
+        job.n_crashes += 1
+        if ph == "map" and job.tasks is not None:
+            # task-granular map re-executes the lost work itself; its
+            # outputs end up fully recovered, so no degraded shuffle
+            job.tasks.crash(servers)
+            return
+        job.failed = tuple(sorted(set(job.failed) | set(servers)))
+        if ph in ("map", "pack", "remap"):
+            return      # loss recorded; recovery (re)starts after the barrier
+        is_shuffle = ph.startswith("shuffle:")
+        if is_shuffle:
+            n = self.network.cancel_flows(lambda tag: tag[0] == job.job_id)
+            job.open_flows = 0
+            self._trace("flows_cancelled", (job.job_id, n))
+        # void the job's pending completions (stage latency / phase barrier)
+        self.queue.cancel_where(
+            lambda ev: ev.kind in ("stage_latency", "phase_done")
+            and bool(ev.data) and ev.data[0] == job.job_id)
+        if is_shuffle or ph == "reduce":
+            self._begin_recovery(job)
+
+    def _begin_recovery(self, job: _SimJob) -> None:
+        """Replace the job's remaining shuffle schedule with the degraded
+        one (exact loads from the degraded plan where the instance is
+        compilable) and run the re-map phase first if subfiles lost all
+        their owners."""
+        job.n_recoveries += 1
+        stages, n_remap = degraded_stage_traffic(job.params, job.scheme,
+                                                 job.failed)
+        job.stages = list(stages)
+        job.stage_idx = 0
+        job.recovered_for = job.failed
+        job.remap_subfiles += n_remap
+        self._trace("recovery", (job.job_id, job.failed, n_remap))
+        if n_remap > 0:
+            self._begin_remap(job, n_remap)
+        elif job.stages:
+            self._begin_shuffle_stage(job)
+        else:
+            self._begin_compute(job, "reduce")
+
+    def _begin_remap(self, job: _SimJob, n_remap: int) -> None:
+        """Re-map the orphaned subfiles, spread across the survivors;
+        barrier at the slowest surviving server (fresh straggler draw)."""
+        job.phase = "remap"
+        job.phase_start = self.now
+        coeffs = self.cost_model.phase_coeffs("map")
+        work = float(n_remap) * job.spec.Q * job.spec.d
+        factors = self.stragglers.factors(self.rng, self.K, self.topology.P)
+        dead = set(job.failed)
+        alive = [s for s in range(self.K) if s not in dead]
+        n_alive = max(len(alive), 1)
+        f = max((float(factors[s]) for s in alive), default=1.0)
+        dur = f * coeffs.seconds(work / n_alive)
+        self.queue.push(self.now + dur, "phase_done", (job.job_id, "remap"),
+                        lambda: self._phase_done(job, "remap"))
+
     def _flow_done(self, tag: Tuple) -> None:
         job = self._jobs[tag[0]]
         if len(tag) > 1 and tag[1] == "spec_fetch":
@@ -899,8 +1057,10 @@ class ClusterSim:
         self._begin_compute(job, "map")
 
     def _stage_done(self, job: _SimJob) -> None:
-        job.phase_times[f"shuffle:{job.stages[job.stage_idx].stage}"] = \
-            self.now - job.phase_start
+        key = f"shuffle:{job.stages[job.stage_idx].stage}"
+        # accumulate (not assign): recovery re-runs stages after a crash
+        job.phase_times[key] = (job.phase_times.get(key, 0.0)
+                                + self.now - job.phase_start)
         job.stage_idx += 1
         if job.stage_idx < len(job.stages):
             self._begin_shuffle_stage(job)
@@ -908,14 +1068,26 @@ class ClusterSim:
             self._begin_compute(job, "reduce")
 
     def _phase_done(self, job: _SimJob, phase: str) -> None:
-        job.phase_times[phase] = self.now - job.phase_start
+        job.phase_times[phase] = (job.phase_times.get(phase, 0.0)
+                                  + self.now - job.phase_start)
         if phase == "plan_compile":
             self._begin_fetch(job)
         elif phase == "map":
             self._begin_compute(job, "pack")
         elif phase == "pack":
             job.stage_idx = 0
-            if job.stages:
+            if job.failed != job.recovered_for:
+                # a crash landed during the map/pack barriers: shuffle (and
+                # possibly re-map) under the degraded schedule instead
+                self._begin_recovery(job)
+            elif job.stages:
+                self._begin_shuffle_stage(job)
+            else:
+                self._begin_compute(job, "reduce")
+        elif phase == "remap":
+            if job.failed != job.recovered_for:
+                self._begin_recovery(job)      # cascading crash during remap
+            elif job.stages:
                 self._begin_shuffle_stage(job)
             else:
                 self._begin_compute(job, "reduce")
@@ -930,7 +1102,10 @@ class ClusterSim:
                                           else None),
                              n_backups=job.n_backups,
                              n_backup_wins=job.n_backup_wins,
-                             map_waves=job.map_waves)
+                             map_waves=job.map_waves,
+                             crashes=job.n_crashes,
+                             remapped_subfiles=job.remap_subfiles,
+                             recoveries=job.n_recoveries)
             self.stats.append(stats)
             self._trace("job_done", (job.job_id, job.scheme, job.params.r))
             if self.on_job_done is not None:

@@ -62,6 +62,18 @@ class EventQueue:
         while self._heap and self._heap[0].cancelled:
             heapq.heappop(self._heap)
 
+    def cancel_where(self, pred: Callable[["Event"], bool]) -> int:
+        """Cancel every pending event matching ``pred``; returns the count.
+        Crash handling uses this to void a job's scheduled completions
+        (stage latencies, phase barriers) wholesale — cancelled events stay
+        in the heap and are skipped, so determinism is untouched."""
+        n = 0
+        for ev in self._heap:
+            if not ev.cancelled and pred(ev):
+                ev.cancel()
+                n += 1
+        return n
+
     def __len__(self) -> int:
         return len(self._heap)
 

@@ -119,6 +119,18 @@ class FluidNetwork:
         survivors from the next advance.  Unknown/finished ids are no-ops."""
         self.flows.pop(flow_id, None)
 
+    def cancel_flows(self, match) -> int:
+        """Abort every active flow whose ``tag`` matches the predicate, in
+        deterministic (flow_id) order; returns the number cancelled.  A
+        server crash mid-shuffle voids the job's whole in-flight stage —
+        ``cancel_flows(lambda tag: tag[0] == job_id)`` guarantees no orphan
+        flows keep draining a dead job's bytes (asserted in tests)."""
+        doomed = [fid for fid in sorted(self.flows)
+                  if match(self.flows[fid].tag)]
+        for fid in doomed:
+            del self.flows[fid]
+        return len(doomed)
+
     def backlog(self, resource: Resource) -> float:
         """Total value-units queued on a resource (scheduler load signal)."""
         return sum(f.remaining for f in self.flows.values()

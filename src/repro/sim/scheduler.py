@@ -77,7 +77,8 @@ class SchemeChooser:
                  placement_remote_penalty: float = 0.5,
                  placement_seed: int = 0,
                  speculation: Optional[object] = None,
-                 r_policy: Optional[object] = None) -> None:
+                 r_policy: Optional[object] = None,
+                 crash_prob: float = 0.0) -> None:
         """``placement_solver`` turns on locality-aware placement for every
         hybrid admission: a registered :mod:`repro.placement` solver name
         ('random', 'greedy', 'flow', 'local_search', 'anneal_jax').  Each
@@ -103,7 +104,18 @@ class SchemeChooser:
         admissions take ``r_policy.placement_for(p)`` — a deterministic
         rack-hedged structured placement — over the random draw.  The
         :class:`MultiJobScheduler` feeds every completion back via
-        ``r_policy.observe`` so the fit tracks the live cluster."""
+        ``r_policy.observe`` so the fit tracks the live cluster.
+
+        ``crash_prob`` is the availability term: the operator's estimate of
+        the probability that one server crashes during the job.  Each
+        candidate is charged ``crash_prob`` times its expected recovery
+        cost — the degraded re-shuffle draining behind the current
+        backlogs, plus the re-map of orphaned subfiles where the candidate
+        cannot decode around a single failure (r = 1 / uncoded re-run the
+        dead server's whole map partition; r >= 2 re-map NOTHING for
+        f <= r-1) — so replication r is priced as a failure-tolerance knob,
+        not only a communication one.  0.0 (default) keeps the chooser
+        availability-blind."""
         self.K = K
         self.cost_model = cost_model
         self.rs = tuple(rs)
@@ -120,6 +132,7 @@ class SchemeChooser:
         self.placement_seed = int(placement_seed)
         self.speculation = speculation
         self.r_policy = r_policy
+        self.crash_prob = float(crash_prob)
         self._placement_seq = 0
         self._admission_replicas: Optional[np.ndarray] = None
 
@@ -194,7 +207,38 @@ class SchemeChooser:
                     load = pairs * spec.d + cluster.network.backlog(tor(rack))
                     times.append(load / topo.capacity(tor(rack)))
             est += max(times) + topo.latency(stage.stage)
+        if self.crash_prob > 0.0:
+            est += self.crash_prob * self._recovery_charge(p, scheme, spec,
+                                                           cluster)
         return est
+
+    def _recovery_charge(self, p: SchemeParams, scheme: str, spec: JobSpec,
+                         cluster: ClusterSim) -> float:
+        """Expected seconds to recover from ONE server crash mid-shuffle
+        (the availability term): the candidate's degraded re-shuffle
+        draining behind the current backlogs, plus — where a single failure
+        orphans subfiles (r = 1 / uncoded) — a conservative serial re-map
+        of the dead server's partition.  r >= 2 candidates re-map nothing,
+        so a rising ``crash_prob`` shifts choices toward replication."""
+        from ..core.degraded import degraded_stage_traffic
+        topo = cluster.topology
+        stages, n_remap = degraded_stage_traffic(p, scheme, (0,))
+        t = 0.0
+        if n_remap:
+            t += self._phase_inflation(scheme, p.r) * \
+                self.cost_model.map.seconds(float(n_remap) * spec.Q * spec.d)
+        for stage in stages:
+            times = [0.0]
+            if stage.cross_pairs > 0:
+                load = (stage.cross_pairs * spec.d
+                        + cluster.network.backlog(ROOT))
+                times.append(load / topo.capacity(ROOT))
+            for rack, pairs in enumerate(stage.intra_pairs_per_rack):
+                if pairs > 0:
+                    load = pairs * spec.d + cluster.network.backlog(tor(rack))
+                    times.append(load / topo.capacity(tor(rack)))
+            t += max(times) + topo.latency(stage.stage)
+        return t
 
     def _compile_charge(self, p: SchemeParams, scheme: str,
                         probe: bool) -> Tuple[float, bool]:

@@ -45,19 +45,30 @@ class PreemptionSimulator:
 
 
 def run_with_restarts(train_loop: Callable[[int], Iterable[Tuple[int, Dict]]],
-                      ckpt_dir: str, max_restarts: int = 3):
+                      ckpt_dir: str, max_restarts: int = 3,
+                      budget: Optional[object] = None):
     """Drive ``train_loop(start_step)`` restarting from the latest
-    checkpoint on preemption.  Yields (step, metrics) of completed steps."""
-    restarts = 0
+    checkpoint on preemption.  Yields (step, metrics) of completed steps.
+
+    Restart accounting lives in the shared
+    :class:`repro.resilience.backoff.RestartBudget` (the same accountant
+    the engine recovery ladder uses), which replaces this function's old
+    inline counter loop: when the budget is spent the original
+    ``InterruptedError`` is re-raised, exactly as before.  Pass ``budget``
+    to share one budget (or a jittered backoff-with-sleep policy) across
+    drivers; the default budget records backoff delays without sleeping —
+    the historical timing behavior.
+    """
+    from ..resilience.backoff import RestartBudget
+    if budget is None:
+        budget = RestartBudget(max_restarts=max_restarts)
     while True:
         start = (latest_step(ckpt_dir) or -1) + 1
         try:
             yield from train_loop(start)
             return
-        except InterruptedError:
-            restarts += 1
-            if restarts > max_restarts:
-                raise
+        except InterruptedError as e:
+            budget.next_restart(e)    # re-raises e when the budget is spent
 
 
 @dataclasses.dataclass(frozen=True)

@@ -148,6 +148,65 @@ def test_distributed_mapreduce_jobs():
     print("distributed groupby job (legacy path): OK")
 
 
+def test_faulted_recovery_ladder():
+    """Crash recovery on the 8-device mesh: for both plan families and
+    every r, a mid-shuffle crash recovers to BIT-IDENTICAL outputs via the
+    correct ladder rung — decode-around (f <= r-1 per group, nothing
+    re-mapped), partial re-map (r=1 orphans), or bounded restart."""
+    from repro.resilience import FaultInjector, FaultSpec
+
+    mesh = make_mesh((4, 2), ("rack", "server"))
+    rng = np.random.default_rng(7)
+    job = histogram_job()
+
+    for family in ("binomial", "resolvable"):
+        for r in (1, 2, 3):
+            if family == "resolvable" and r != 2:
+                continue
+            p = SchemeParams(K=8, P=4, Q=16, N=48, r=r)
+            subs = np.asarray(rng.integers(0, 1 << 16, size=(p.N, 256)),
+                              dtype=np.int32)
+            ref = run_job_distributed(job, subs, p, mesh,
+                                      scheme_family=family)
+            for failed in [(3,), (0, 5)]:
+                faults = FaultSpec(FaultInjector.crash(failed))
+                got = run_job_distributed(job, subs, p, mesh, faults=faults,
+                                          scheme_family=family)
+                np.testing.assert_array_equal(np.asarray(got.outputs),
+                                              np.asarray(ref.outputs))
+                rep = got.recovery
+                if r == 1:
+                    assert rep.rung == "partial_remap" and rep.n_remapped > 0
+                else:
+                    assert rep.rung == "decode_around"
+                    assert rep.n_remapped == 0
+            print(f"faulted recovery {family} r={r}: OK (bit-identical)")
+
+    # unrecoverable first attempt (every server dead) escalates to the
+    # restart rung and succeeds on the clean re-run
+    p = SchemeParams(K=8, P=4, Q=16, N=48, r=2)
+    subs = np.asarray(rng.integers(0, 1 << 16, size=(p.N, 256)),
+                      dtype=np.int32)
+    ref = run_job_distributed(job, subs, p, mesh)
+    faults = FaultSpec(FaultInjector.crash(tuple(range(8))), max_restarts=2)
+    got = run_job_distributed(job, subs, p, mesh, faults=faults)
+    np.testing.assert_array_equal(np.asarray(got.outputs),
+                                  np.asarray(ref.outputs))
+    assert got.recovery.rung == "restart" and got.recovery.restarts == 1
+    assert len(got.recovery.backoff_delays) == 1
+    print("faulted recovery restart rung: OK (bit-identical)")
+
+    # mesh validation fails fast with a legible error
+    try:
+        bad = make_mesh((2, 4), ("rack", "server"))
+        run_job_distributed(job, subs, p, bad)
+    except ValueError as e:
+        assert "rack=P=4" in str(e)
+        print("mesh validation: OK (clear error)")
+    else:
+        raise AssertionError("mismatched mesh must raise ValueError")
+
+
 def test_coded_reduce_scatter():
     P_ = 4
     mesh = make_mesh((4, 2), ("rack", "server"))
@@ -224,6 +283,7 @@ if __name__ == "__main__":
     test_coded_multicast_shuffle()
     test_fused_pipeline_parity()
     test_distributed_mapreduce_jobs()
+    test_faulted_recovery_ladder()
     test_coded_reduce_scatter()
     test_hierarchical_allreduce()
     print("ALL MULTIDEVICE TESTS PASSED")

@@ -1,0 +1,421 @@
+"""repro failure-tolerance tests: degraded plan compilation (decode-around
+and partial re-map) bit-exact vs the NumPy shuffle oracle for BOTH plan
+families, the bounded degraded-plan cache, the shared restart/backoff
+budget, seeded fault injection, mesh validation, and the simulator's crash
+-> recovery pipeline (flow cancellation, re-map phase, chooser availability
+term, trace determinism)."""
+import numpy as np
+import pytest
+
+from repro.core.coded_collectives import (compile_hybrid_plan,
+                                          pack_local_values,
+                                          plan_shuffle_reference,
+                                          simulate_plan_shuffle)
+from repro.core.degraded import (build_patch, compile_degraded_plan,
+                                 configure_degraded_cache,
+                                 degraded_cache_clear, degraded_cache_info,
+                                 degraded_stage_traffic)
+from repro.core.params import SchemeParams
+from repro.resilience import (BackoffPolicy, CrashEvent, FaultInjector,
+                              FaultSpec, RestartBudget,
+                              RestartBudgetExceeded)
+from repro.sim import (ClusterSim, CostModel, JobSpec, PhaseCoeffs,
+                       RackTopology, SchemeChooser)
+from repro.sim.events import EventQueue
+from repro.sim.network import FluidNetwork
+
+PARAMS = {r: SchemeParams(K=8, P=4, Q=16, N=48, r=r) for r in (1, 2, 3)}
+FAMILY_GRID = [("binomial", 1), ("binomial", 2), ("binomial", 3),
+               ("resolvable", 2)]
+
+
+def _values(p, seed=0, d=3):
+    rng = np.random.default_rng(seed)
+    return rng.integers(-100, 100, size=(p.N, p.Q, d)).astype(np.float32)
+
+
+def _degraded_output(p, family, failed, V):
+    """Run the degraded pipeline host-side: compile around the failures,
+    re-map orphans into a patch, shuffle with failed servers zeroed."""
+    dplan = compile_degraded_plan(p, failed, family=family)
+    patch = build_patch(dplan, V[dplan.orphan_subfiles])
+    out = simulate_plan_shuffle(V, dplan.plan, failed=dplan.failed,
+                                patch=patch)
+    return dplan, out
+
+
+# ---------------------------------------------------------------------------
+# Degraded plans vs the oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family,r", FAMILY_GRID)
+@pytest.mark.parametrize("failed", [(0,), (3,), (7,), (0, 5), (1, 6),
+                                    (0, 2), (0, 2, 5)])
+def test_degraded_shuffle_bit_exact(family, r, failed):
+    """Every failure set (decode-around AND partial re-map) recovers the
+    exact failure-free shuffle output — the r-fold replication read as an
+    erasure code, with re-mapped orphans patched in."""
+    p = PARAMS[r]
+    V = _values(p, seed=r)
+    dplan, out = _degraded_output(p, family, failed, V)
+    ref = plan_shuffle_reference(V, p, family=family)
+    np.testing.assert_array_equal(out, ref)
+    assert dplan.decode_around == (dplan.orphan_subfiles.size == 0)
+
+
+@pytest.mark.parametrize("family,r", FAMILY_GRID)
+def test_failed_servers_never_send(family, r):
+    """Structural no-information-flow: a failed server appears in NO valid
+    slot of the degraded cross tables — recovery provably never reads a
+    dead server's memory."""
+    p = PARAMS[r]
+    for failed in [(0,), (3,), (0, 5), (0, 2)]:
+        dplan = compile_degraded_plan(p, failed, family=family)
+        cv = dplan.plan.cross_valid
+        assert cv is not None and cv.ndim == 4
+        for s in failed:
+            z, j = s // p.Kr, s % p.Kr
+            assert not cv[:, j, z, :].any()
+
+
+def test_orphan_counts_follow_replication():
+    """f <= r-1 per layer-group => zero orphans; r=1 orphans every lost
+    subfile; a same-layer rack pair defeats r=2 but not r=3."""
+    # single failure: r=1 loses its whole partition, r>=2 decode around
+    assert compile_degraded_plan(PARAMS[1], (3,)).orphan_subfiles.size == 6
+    for r in (2, 3):
+        assert compile_degraded_plan(PARAMS[r], (3,)).decode_around
+    # servers 0 and 2 share layer j=0 in racks 0 and 1: two owners of the
+    # same replica group die together
+    assert compile_degraded_plan(PARAMS[1], (0, 2)).orphan_subfiles.size == 12
+    d2 = compile_degraded_plan(PARAMS[2], (0, 2))
+    assert d2.orphan_subfiles.size == 4 and not d2.decode_around
+    assert compile_degraded_plan(PARAMS[3], (0, 2)).decode_around
+    assert compile_degraded_plan(
+        PARAMS[2], (0, 2), family="resolvable").decode_around
+    # same rack, different layers: different replica groups, r=2 survives
+    assert compile_degraded_plan(PARAMS[2], (0, 1)).decode_around
+
+
+def test_degraded_plan_rejects_bad_failures():
+    with pytest.raises(ValueError):
+        compile_degraded_plan(PARAMS[2], (8,))
+    with pytest.raises(ValueError):
+        compile_degraded_plan(PARAMS[2], (-1,))
+    with pytest.raises(ValueError):          # every server dead
+        compile_degraded_plan(PARAMS[2], tuple(range(8)))
+
+
+def test_empty_failure_set_matches_base_routing():
+    p = PARAMS[2]
+    V = _values(p, seed=9)
+    _, out = _degraded_output(p, "binomial", (), V)
+    np.testing.assert_array_equal(out, plan_shuffle_reference(V, p))
+
+
+def test_degraded_transfer_loads_unicast():
+    """The degraded stage-1 is unicast: repairing a failure moves strictly
+    more cross pairs than the repair-free degraded routing."""
+    p = PARAMS[2]
+    clean = compile_degraded_plan(p, ()).transfer_loads()
+    dplan = compile_degraded_plan(p, (3,))
+    loads = dplan.transfer_loads()
+    assert loads["cross_rack_matrix"].sum() > clean["cross_rack_matrix"].sum()
+    assert dplan.n_repaired_rows > 0
+    np.testing.assert_array_equal(loads["intra_per_rack"],
+                                  clean["intra_per_rack"])
+
+
+# ---------------------------------------------------------------------------
+# Bounded degraded-plan cache
+# ---------------------------------------------------------------------------
+
+def test_degraded_cache_bounded_with_eviction_stats():
+    p = PARAMS[2]
+    configure_degraded_cache(maxsize=4)
+    try:
+        for s in range(8):
+            compile_degraded_plan(p, (s,))
+        info = degraded_cache_info()
+        assert info.maxsize == 4 and info.currsize == 4
+        assert info.misses == 8 and info.evictions == 4
+        # the most recent entries are retained -> hits
+        compile_degraded_plan(p, (7,))
+        assert degraded_cache_info().hits == 1
+        # the oldest were evicted -> recompile is a miss
+        compile_degraded_plan(p, (0,))
+        assert degraded_cache_info().misses == 9
+    finally:
+        configure_degraded_cache()           # restore default size
+    degraded_cache_clear()
+    info = degraded_cache_info()
+    assert info.currsize == 0 and info.hits == 0 and info.misses == 0
+
+
+def test_degraded_cache_memoizes_identity():
+    degraded_cache_clear()
+    p = PARAMS[2]
+    a = compile_degraded_plan(p, (5, 1, 1))
+    b = compile_degraded_plan(p, [1, 5])     # order/dup-insensitive key
+    assert a is b
+
+
+# ---------------------------------------------------------------------------
+# Shared restart budget / backoff
+# ---------------------------------------------------------------------------
+
+def test_backoff_policy_exponential_with_jitter():
+    pol = BackoffPolicy(base_delay=1.0, factor=2.0, max_delay=8.0,
+                        jitter=0.0)
+    rng = np.random.default_rng(0)
+    assert [pol.delay(k, rng) for k in range(5)] == [1.0, 2.0, 4.0, 8.0, 8.0]
+    jit = BackoffPolicy(base_delay=1.0, factor=2.0, max_delay=64.0,
+                        jitter=0.25)
+    d = [jit.delay(1, np.random.default_rng(7)) for _ in range(3)]
+    assert d[0] == d[1] == d[2]              # seeded => reproducible
+    assert 1.5 <= d[0] <= 2.5
+
+
+def test_restart_budget_exhausts():
+    budget = RestartBudget(max_restarts=2, seed=0)
+    budget.next_restart()
+    budget.next_restart()
+    assert not budget.exhausted and len(budget.delays) == 2
+    with pytest.raises(RestartBudgetExceeded):
+        budget.next_restart()
+    assert budget.exhausted
+    # with an error attached, the original error is re-raised
+    budget2 = RestartBudget(max_restarts=0)
+    with pytest.raises(InterruptedError):
+        budget2.next_restart(InterruptedError("crash"))
+
+
+def test_restart_budget_sleeps_through_hook():
+    slept = []
+    budget = RestartBudget(max_restarts=3, seed=1, sleep=slept.append)
+    budget.next_restart()
+    budget.next_restart()
+    assert slept == list(budget.delays)
+    assert all(s > 0 for s in slept)
+
+
+def test_trainer_restart_uses_shared_budget(tmp_path):
+    """train.fault.run_with_restarts delegates to the shared RestartBudget:
+    same recovery semantics for the trainer and the engine ladder."""
+    from repro.train.fault import run_with_restarts
+    calls = []
+
+    def flaky(resume_step):
+        calls.append(resume_step)
+        if len(calls) < 3:
+            raise InterruptedError("preempted")
+        yield (resume_step, {"loss": 0.0})
+
+    budget = RestartBudget(max_restarts=5, seed=0)
+    steps = list(run_with_restarts(flaky, str(tmp_path), budget=budget))
+    assert steps == [(0, {"loss": 0.0})]
+    assert budget.restarts == 2 and len(calls) == 3
+
+    def always(resume_step):
+        raise InterruptedError("always")
+        yield  # pragma: no cover
+
+    with pytest.raises(InterruptedError):
+        list(run_with_restarts(always, str(tmp_path), max_restarts=1))
+
+
+# ---------------------------------------------------------------------------
+# Fault injection spec
+# ---------------------------------------------------------------------------
+
+def test_crash_event_validates_and_normalizes():
+    e = CrashEvent(servers=(5, 1, 1), phase="map", time=2.0)
+    assert e.servers == (1, 5)
+    with pytest.raises(ValueError):
+        CrashEvent(servers=(0,), phase="reduce")
+
+
+def test_fault_injector_deterministic_and_filtered():
+    a = FaultInjector.random(seed=3, K=8, n_events=4, max_servers=2)
+    b = FaultInjector.random(seed=3, K=8, n_events=4, max_servers=2)
+    assert a.events == b.events
+    assert a.events != FaultInjector.random(seed=4, K=8, n_events=4,
+                                            max_servers=2).events
+    inj = FaultInjector((CrashEvent((0,), attempt=0),
+                         CrashEvent((1,), attempt=1)))
+    assert [e.servers for e in inj.events_for_attempt(0)] == [(0,)]
+    assert [e.servers for e in inj.events_for_attempt(1)] == [(1,)]
+    assert inj.all_servers() == (0, 1)
+
+
+def test_rack_crash_covers_all_layers():
+    p = PARAMS[2]
+    inj = FaultInjector.rack_crash(p, rack=1)
+    assert inj.events[0].servers == (2, 3)
+
+
+def test_fault_spec_defaults():
+    spec = FaultSpec(FaultInjector.crash((3,)))
+    assert spec.allow_partial_remap and spec.max_restarts == 2
+    assert isinstance(spec.backoff, BackoffPolicy)
+
+
+# ---------------------------------------------------------------------------
+# Mesh validation (engine entry)
+# ---------------------------------------------------------------------------
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(self.shape)
+
+
+def test_mesh_validation_messages():
+    from repro.mapreduce.engine import _validate_mesh
+    p = PARAMS[2]
+    _validate_mesh(_FakeMesh({"rack": 4, "server": 2}), p)
+    with pytest.raises(ValueError, match="rack"):
+        _validate_mesh(_FakeMesh({"x": 4, "y": 2}), p)
+    with pytest.raises(ValueError, match="rack=P=4"):
+        _validate_mesh(_FakeMesh({"rack": 2, "server": 4}), p)
+
+
+# ---------------------------------------------------------------------------
+# Simulator: crash events, recovery, pricing
+# ---------------------------------------------------------------------------
+
+TOPO = RackTopology(P=4, cross_bw=1e4, intra_bw=1e5)
+SPEC = JobSpec("histogram", 48, 16, 1)
+
+
+def _crashed_run(scheme, r, crash_t=0.01, servers=(3,), topo=TOPO,
+                 cost=CostModel()):
+    sim = ClusterSim(topo, K=8, cost_model=cost)
+    sim.submit(SPEC, scheme, r, time=0.0)
+    FaultInjector.crash(servers, phase="shuffle",
+                        time=crash_t).inject_into(sim)
+    stats = sim.run()
+    return sim, stats[0]
+
+
+def test_crash_mid_shuffle_cancels_all_job_flows():
+    """The regression the issue names: a crash voids the whole in-flight
+    stage — no orphan flows keep draining in the FluidNetwork."""
+    sim, st = _crashed_run("hybrid", 2)
+    cancelled = [d for t, k, d in sim.trace if k == "flows_cancelled"]
+    assert cancelled and cancelled[0][1] >= 1
+    assert len(sim.network.flows) == 0        # nothing orphaned at the end
+    assert st.crashes == 1 and st.recoveries == 1
+    # recovery re-ran the shuffle: job still finishes, later than baseline
+    base = ClusterSim(TOPO, K=8)
+    base.submit(SPEC, "hybrid", 2, time=0.0)
+    assert st.finish > base.run()[0].finish
+
+
+def test_crash_recovery_r1_remaps_r2_decodes_around():
+    _, st1 = _crashed_run("uncoded", 1)
+    assert st1.remapped_subfiles == 6 and "remap" in st1.phase_times
+    _, st2 = _crashed_run("hybrid", 2)
+    assert st2.remapped_subfiles == 0 and "remap" not in st2.phase_times
+    _, st3 = _crashed_run("hybrid", 3)
+    assert st3.remapped_subfiles == 0
+
+
+def test_crash_before_map_is_noop():
+    sim = ClusterSim(TOPO, K=8)
+    sim.submit(SPEC, "hybrid", 2, time=10.0)
+    FaultInjector.crash((0,), phase="map", time=0.0).inject_into(sim)
+    st = sim.run()[0]
+    assert st.crashes == 0 and st.recoveries == 0
+
+
+def test_seeded_crash_trace_bit_identical():
+    def trace(seed):
+        sim = ClusterSim(TOPO, K=8, cost_model=CostModel(
+            map=PhaseCoeffs(0.0, 1e-6)))
+        sim.submit(SPEC, "hybrid", 2, time=0.0)
+        sim.submit(JobSpec("histogram", 96, 16, 2), "hybrid", 2, time=0.005)
+        FaultInjector.random(seed=seed, K=8, n_events=2, max_servers=2,
+                             max_time=0.03).inject_into(sim)
+        sim.run()
+        return tuple(sim.trace)
+
+    assert trace(11) == trace(11)
+    assert trace(11) != trace(12)
+
+
+def test_degraded_stage_traffic_consistency():
+    p = PARAMS[2]
+    base, _ = degraded_stage_traffic(p, "hybrid", ())
+    stages, n_remap = degraded_stage_traffic(p, "hybrid", (3,))
+    assert n_remap == 0
+    assert stages[0].cross_pairs > base[0].cross_pairs
+    stages1, n_remap1 = degraded_stage_traffic(PARAMS[1], "hybrid", (3,))
+    assert n_remap1 == 6
+    _, n_unc = degraded_stage_traffic(p, "uncoded", (3,))
+    assert n_unc == 6                         # r=1 semantics for uncoded
+
+
+def test_chooser_availability_term_shifts_to_replication():
+    """At crash_prob=0 an expensive-map config picks r=1; pricing crashes
+    in flips the choice to a replicated scheme (r as failure tolerance)."""
+    topo = RackTopology(P=4, cross_bw=1e8, intra_bw=1e9)
+    cost = CostModel(map=PhaseCoeffs(beta=1e-5))
+    spec = JobSpec("histogram", 336, 16, 4)
+
+    def pick(cp):
+        cluster = ClusterSim(topo, K=8, cost_model=cost)
+        return SchemeChooser(K=8, cost_model=cost,
+                             crash_prob=cp).choose(spec, cluster)
+
+    blind = pick(0.0)
+    assert blind.r == 1
+    aware = pick(2.0)
+    assert aware.r >= 2
+    # estimates are monotone in crash_prob, r=1 penalised harder
+    cluster = ClusterSim(topo, K=8, cost_model=cost)
+    e = [SchemeChooser(K=8, cost_model=cost, crash_prob=cp).estimate(
+        spec, "uncoded", 1, cluster) for cp in (0.0, 1.0)]
+    h = [SchemeChooser(K=8, cost_model=cost, crash_prob=cp).estimate(
+        spec, "hybrid", 2, cluster) for cp in (0.0, 1.0)]
+    assert e[1] > e[0] and h[1] > h[0]
+    assert (e[1] - e[0]) > (h[1] - h[0])
+
+
+def test_task_map_crash_reexecutes_lost_tasks():
+    """Task-granular map absorbs crashes internally: lost map outputs are
+    re-executed and the job completes without a degraded shuffle."""
+    from repro.resilience import get_policy
+    sim = ClusterSim(TOPO, K=8, cost_model=CostModel(
+        map=PhaseCoeffs(0.0, 1e-4)))
+    sim.submit(SPEC, "hybrid", 2, time=0.0,
+               speculation=get_policy("none"))
+    # crash while the task-map phase is running
+    FaultInjector.crash((3,), phase="map", time=0.002).inject_into(sim)
+    st = sim.run()[0]
+    assert st.crashes == 1
+    assert st.recoveries == 0                 # no shuffle recovery needed
+    lost = [d for t, k, d in sim.trace if k == "task_lost"]
+    assert lost                               # some attempts were lost
+
+
+# ---------------------------------------------------------------------------
+# Primitive units: cancel_where / cancel_flows
+# ---------------------------------------------------------------------------
+
+def test_event_queue_cancel_where():
+    q = EventQueue()
+    q.push(1.0, "stage_latency", (7, "x"))
+    q.push(2.0, "phase_done", (7, "map"))
+    q.push(3.0, "phase_done", (8, "map"))
+    assert q.cancel_where(lambda ev: ev.data[0] == 7) == 2
+    assert q.pop().data[0] == 8
+
+
+def test_fluid_network_cancel_flows():
+    net = FluidNetwork(RackTopology(P=2))
+    net.start_flow("root", 10.0, (1, "shuffle"))
+    net.start_flow("root", 10.0, (2, "shuffle"))
+    net.start_flow(("tor", 0), 5.0, (1, "shuffle"))
+    assert net.cancel_flows(lambda tag: tag[0] == 1) == 2
+    assert len(net.flows) == 1 and net.backlog("root") == 10.0

@@ -225,3 +225,39 @@ def test_chunk_table_covers_pairs(P_):
         for c in row:
             counts[c] += 1
     assert (counts == 2).all()
+
+
+@st.composite
+def recoverable_failures(draw):
+    """(family, r, failure set) with at most r-1 failed servers per layer
+    replica-group — the regime the degraded compiler must decode around
+    with ZERO re-mapped subfiles (Theorem IV.1's replication read as an
+    erasure code)."""
+    family, r = draw(st.sampled_from(
+        [("binomial", 2), ("binomial", 3), ("resolvable", 2)]))
+    p = SchemeParams(K=8, P=4, Q=16, N=48, r=r)
+    failed = []
+    for j in range(p.Kr):                    # per layer-group j
+        racks = draw(st.lists(st.integers(0, p.P - 1), unique=True,
+                              max_size=r - 1))
+        failed += [z * p.Kr + j for z in racks]
+    return family, p, tuple(sorted(failed))
+
+
+@settings(max_examples=40, deadline=None)
+@given(recoverable_failures())
+def test_degraded_plan_decodes_around_every_recoverable_failure(case):
+    """PROPERTY: for every family and every <= r-1-per-group failure set,
+    the degraded plan re-maps nothing and the recovered shuffle is
+    bit-identical to the failure-free oracle."""
+    from repro.core.coded_collectives import (plan_shuffle_reference,
+                                              simulate_plan_shuffle)
+    from repro.core.degraded import compile_degraded_plan
+    family, p, failed = case
+    dplan = compile_degraded_plan(p, failed, family=family)
+    assert dplan.decode_around
+    rng = np.random.default_rng(len(failed))
+    V = rng.integers(-50, 50, size=(p.N, p.Q, 2)).astype(np.float32)
+    out = simulate_plan_shuffle(V, dplan.plan, failed=dplan.failed)
+    np.testing.assert_array_equal(
+        out, plan_shuffle_reference(V, p, family=family))
