@@ -4,7 +4,7 @@
 PYTEST ?= python -m pytest
 
 .PHONY: test test-all bench bench-pipeline bench-sim bench-locality \
-	bench-resilience bench-faults bench-table1 bench-scale
+	bench-resilience bench-faults bench-table1 bench-scale bench-obs
 
 test:
 	$(PYTEST) -q -m "not slow"
@@ -35,3 +35,6 @@ bench-table1:
 
 bench-scale:
 	PYTHONPATH=src python benchmarks/scale_bench.py
+
+bench-obs:
+	PYTHONPATH=src python benchmarks/obs_bench.py

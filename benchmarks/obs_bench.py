@@ -1,0 +1,241 @@
+"""Observability benchmark: byte-accounting reconciliation, trace exports,
+trace determinism, and instrumentation overhead.
+
+Sections (results land in ``BENCH_obs.json``):
+
+  * ``reconciliation`` — for EVERY paper Table I row x both plan families
+    (binomial -> ``hybrid``, resolvable -> ``hybrid_resolvable``), a seeded
+    single-job sim run's recorded ``JobStats.intra/cross_rack_bytes`` must
+    reconcile with the closed-form :class:`repro.core.costs.CommCost`
+    (``check=False`` evaluates the rows whose divisibility hypotheses the
+    construction does not meet — the formulas still price them, exactly as
+    the paper's table does).  Where the family actually compiles an
+    executable plan, the plan-derived transfer matrices
+    (:func:`repro.obs.bytes.plan_rack_bytes`) are reconciled too — a HARD
+    assertion tying measured bytes to the compiled schedule.
+  * ``traces`` — a seeded sim run and an 8-host-device engine run both
+    export Chrome/Perfetto ``trace_event`` documents (written under
+    ``bench_out/``, git-ignored) which must pass
+    :func:`repro.obs.tracing.validate_chrome_trace`; the sim export is run
+    twice and its sha256 must match (bit-identical trace artifact per seed).
+  * ``overhead`` — the fused 8-device smoke pipeline timed with the global
+    tracer disabled vs enabled: overhead must stay below 5 % (or below 1 ms
+    absolute, whichever is looser — the pipeline is sub-millisecond-noisy
+    on shared CI runners).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import numpy as np                                             # noqa: E402
+import jax.numpy as jnp                                        # noqa: E402
+
+try:                                                           # noqa: E402
+    from ._common import emit_report, make_parser, repo_root, seeded_rng
+except ImportError:                       # run as a script, not a package
+    from _common import emit_report, make_parser, repo_root, seeded_rng
+
+from repro.core.coded_collectives import compile_hybrid_plan   # noqa: E402
+from repro.core.params import SchemeParams, TABLE1_GRID        # noqa: E402
+from repro.core.plan_registry import (plan_families,           # noqa: E402
+                                      scheme_of_family)
+from repro.distributed.meshes import make_mesh                 # noqa: E402
+from repro.mapreduce.engine import run_job_distributed         # noqa: E402
+from repro.mapreduce.jobs import wide_histogram_job            # noqa: E402
+from repro.obs import metrics                                  # noqa: E402
+from repro.obs.bytes import (closed_form_bytes,                # noqa: E402
+                             plan_rack_bytes, reconcile)
+from repro.obs.tracing import (enable_tracing, get_tracer,     # noqa: E402
+                               to_chrome_trace,
+                               validate_chrome_trace)
+from repro.sim import (ClusterSim, CostModel, JobSpec,         # noqa: E402
+                       PhaseCoeffs, RackTopology,
+                       simulate_single_job)
+
+MESH_SHAPE = (4, 2)                  # P=4 racks x Kr=2 servers = 8 devices
+SUBFILE_TOKENS = 128
+PLAN_COMPILE_N_MAX = 2048            # skip plan enumeration above this N
+OVERHEAD_BOUND = 0.05
+OVERHEAD_ABS_FLOOR = 1e-3            # seconds; timer noise on tiny pipelines
+
+
+# ---------------------------------------------------------------------------
+# Section 1: reconciliation grid (Table I rows x plan families)
+# ---------------------------------------------------------------------------
+
+def reconciliation_grid(d: int, seed: int, smoke: bool) -> list:
+    grid = TABLE1_GRID[:2] if smoke else TABLE1_GRID
+    rows = []
+    for (K, P, Q, N, r) in grid:
+        p = SchemeParams(K=K, P=P, Q=Q, N=N, r=r)
+        for family in plan_families():
+            scheme = scheme_of_family(family)
+            closed = closed_form_bytes(p, scheme, d=d, check=False)
+            spec = JobSpec("recon", Q, N, d)
+            stats = simulate_single_job(spec, RackTopology(P=P), K, scheme,
+                                        r, seed=seed, check=False)
+            reconcile(stats.intra_rack_bytes, stats.cross_rack_bytes,
+                      p, scheme, d=d, check=False)      # raises on mismatch
+            plan_checked = False
+            if N <= PLAN_COMPILE_N_MAX:
+                try:
+                    plan = compile_hybrid_plan(p, family=family)
+                except (ValueError, AssertionError):
+                    plan = None          # row violates the family's
+                if plan is not None:     # divisibility hypotheses
+                    rb = plan_rack_bytes(plan, "coded", d=d)
+                    reconcile(rb.intra_total, rb.cross_total, p, scheme, d=d)
+                    plan_checked = True
+            rows.append({
+                "K": K, "P": P, "Q": Q, "N": N, "r": r,
+                "family": family, "scheme": scheme,
+                "closed_intra": closed["intra"],
+                "closed_cross": closed["cross"],
+                "sim_intra": stats.intra_rack_bytes,
+                "sim_cross": stats.cross_rack_bytes,
+                "reconciled": True,          # reconcile() raised otherwise
+                "plan_checked": plan_checked,
+            })
+            if not plan_checked:
+                print(f"  [reconciliation] ({K},{P},{Q},{N},{r}) {family}: "
+                      f"closed-form + sim only (no executable plan"
+                      f"{' at this size' if N > PLAN_COMPILE_N_MAX else ''})")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Section 2: trace exports + determinism
+# ---------------------------------------------------------------------------
+
+def _sim_trace_doc(seed: int) -> dict:
+    topo = RackTopology(P=3, cross_bw=1e3, intra_bw=1e4)
+    sim = ClusterSim(topo, K=9, cost_model=CostModel(
+        map=PhaseCoeffs(1e-3, 1e-8)), seed=seed)
+    sim.submit(JobSpec("histogram", 72, 18, 1), "hybrid", 2, time=0.0)
+    sim.submit(JobSpec("histogram", 72, 18, 1), "hybrid", 2, time=0.05)
+    sim.run()
+    return to_chrome_trace(sim.tracer.events)
+
+
+def trace_exports(seed: int, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+
+    # -- sim: deterministic per seed, exported twice, hashes must match ----
+    doc1 = _sim_trace_doc(seed)
+    doc2 = _sim_trace_doc(seed)
+    blob1 = json.dumps(doc1, sort_keys=True).encode()
+    blob2 = json.dumps(doc2, sort_keys=True).encode()
+    sha1 = hashlib.sha256(blob1).hexdigest()
+    assert sha1 == hashlib.sha256(blob2).hexdigest(), \
+        "sim trace export not bit-identical across reruns"
+    sim_path = os.path.join(out_dir, "sim_trace.json")
+    with open(sim_path, "wb") as f:
+        f.write(blob1)
+    n_sim = validate_chrome_trace(doc1)
+
+    # -- engine: 8 host devices, host-side spans via the global tracer -----
+    mesh = make_mesh(MESH_SHAPE, ("rack", "server"))
+    p = SchemeParams(K=8, P=4, Q=16, N=48, r=2)
+    job = wide_histogram_job(2)
+    subs = seeded_rng(seed).integers(
+        0, 1 << 16, size=(p.N, SUBFILE_TOKENS)).astype(np.int32)
+    tracer = enable_tracing(True)
+    try:
+        run_job_distributed(job, subs, p, mesh, fused=True)
+    finally:
+        enable_tracing(False)
+    eng_doc = to_chrome_trace(tracer.events)
+    eng_path = os.path.join(out_dir, "engine_trace.json")
+    with open(eng_path, "w") as f:
+        json.dump(eng_doc, f, sort_keys=True)
+    n_eng = validate_chrome_trace(eng_doc)
+    assert n_eng >= 1, "engine run produced no spans"
+
+    print(f"  [traces] sim: {n_sim} events -> {sim_path} (sha {sha1[:12]})")
+    print(f"  [traces] engine: {n_eng} events -> {eng_path}")
+    return {"sim_events": n_sim, "sim_sha256": sha1,
+            "engine_events": n_eng,
+            "sim_trace_path": os.path.relpath(sim_path, repo_root()),
+            "engine_trace_path": os.path.relpath(eng_path, repo_root())}
+
+
+# ---------------------------------------------------------------------------
+# Section 3: instrumentation overhead on the smoke pipeline
+# ---------------------------------------------------------------------------
+
+def overhead(iters: int, seed: int) -> dict:
+    mesh = make_mesh(MESH_SHAPE, ("rack", "server"))
+    p = SchemeParams(K=8, P=4, Q=16, N=48, r=2)
+    job = wide_histogram_job(2)
+    subs = seeded_rng(seed).integers(
+        0, 1 << 16, size=(p.N, SUBFILE_TOKENS)).astype(np.int32)
+
+    def run_once():
+        res = run_job_distributed(job, subs, p, mesh, fused=True)
+        jnp.asarray(res.outputs).block_until_ready()
+
+    def timed(n):
+        best = float("inf")
+        for _ in range(n):
+            t0 = time.perf_counter()
+            run_once()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    run_once()                                   # compile once, warm
+    enable_tracing(False)
+    t_off = timed(iters)
+    enable_tracing(True)
+    try:
+        t_on = timed(iters)
+    finally:
+        enable_tracing(False)
+    frac = (t_on - t_off) / t_off if t_off > 0 else 0.0
+    ok = frac < OVERHEAD_BOUND or (t_on - t_off) < OVERHEAD_ABS_FLOOR
+    assert ok, (f"tracing overhead {frac:.1%} exceeds "
+                f"{OVERHEAD_BOUND:.0%} ({t_off:.6f}s -> {t_on:.6f}s)")
+    print(f"  [overhead] off={t_off * 1e3:.3f}ms on={t_on * 1e3:.3f}ms "
+          f"({frac:+.2%})")
+    return {"t_off_s": t_off, "t_on_s": t_on, "overhead_frac": frac,
+            "bound": OVERHEAD_BOUND, "iters": iters}
+
+
+def main() -> None:
+    ap = make_parser(__doc__.splitlines()[0], "BENCH_obs.json",
+                     default_iters=8)
+    ap.add_argument("--payload-width", type=int, default=2,
+                    help="value payload width d for the reconciliation grid")
+    args = ap.parse_args()
+    metrics.reset()
+
+    print("# reconciliation: Table I rows x plan families")
+    recon = reconciliation_grid(args.payload_width, args.seed, args.smoke)
+    n_plan = sum(r["plan_checked"] for r in recon)
+    print(f"  {len(recon)} grid points reconciled "
+          f"({n_plan} with compiled-plan matrices)")
+
+    print("# trace exports")
+    traces = trace_exports(args.seed, os.path.join(repo_root(), "bench_out"))
+
+    print("# instrumentation overhead")
+    iters = 3 if args.smoke else args.iters
+    ovh = overhead(iters, args.seed)
+
+    # the registry itself saw all of the above — pin its metric names
+    metric_names = metrics.registry().names()
+    emit_report({"payload_width": args.payload_width,
+                 "reconciliation": recon, "traces": traces,
+                 "overhead": ovh, "metric_names": metric_names},
+                bench="obs", out_path=args.out, smoke=args.smoke,
+                seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

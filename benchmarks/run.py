@@ -15,8 +15,8 @@ import argparse
 import sys
 import traceback
 
-from . import (faults_bench, roofline_report, scale_bench, shuffle_bench,
-               table1_costs, table2_locality)
+from . import (faults_bench, obs_bench, roofline_report, scale_bench,
+               shuffle_bench, table1_costs, table2_locality)
 
 SECTIONS = {
     "table1": table1_costs.main,
@@ -25,6 +25,7 @@ SECTIONS = {
     "roofline": roofline_report.main,
     "scale": scale_bench.main,
     "faults": faults_bench.main,
+    "obs": obs_bench.main,
 }
 
 

@@ -600,6 +600,11 @@ def plan_transfer_matrices(plan: HybridShufflePlan,
         (identical per rack by symmetry; total = the closed-form intra
         cost, the same expression for both families).
 
+    Degraded plans (4-dim ``cross_valid`` — see :mod:`repro.core.degraded`)
+    are handled too: their stage-1 routing is per-layer repair unicast, so
+    the matrix is counted straight off the valid slots (the multicast gain
+    is forfeited during recovery regardless of ``multicast``).
+
     The `repro.sim` network model consumes these loads, so simulated traffic
     is the executable schedule — not a formula (their equality with the
     closed forms is nevertheless asserted in tests).
@@ -608,6 +613,13 @@ def plan_transfer_matrices(plan: HybridShufflePlan,
         raise ValueError(f"multicast must be one of {MULTICAST_MODES}")
     p = plan.params
     q_rack, q_srv = p.Q // p.P, p.Q // p.K
+    intra_rack = float(p.Kr * (p.Kr - 1) * p.subfiles_per_layer * q_srv)
+    cv = plan.cross_valid
+    if cv is not None and getattr(cv, "ndim", 0) == 4:
+        # valid slots summed over layers and slot axis: [recv i, src z]
+        counts = cv.sum(axis=(1, 3)) if cv.size else np.zeros((p.P, p.P))
+        return {"cross_rack_matrix": counts.T.astype(float) * q_rack,
+                "intra_per_rack": np.full((p.P,), intra_rack)}
     arity = plan.mcast_arity
     gain = arity if (multicast != "unicast" and arity >= 2) else 1
     if plan.family == "resolvable":
@@ -619,7 +631,6 @@ def plan_transfer_matrices(plan: HybridShufflePlan,
         per_stream = float(p.Kr * plan.n_send * q_rack) / gain
         cross = np.full((p.P, p.P), per_stream)
         np.fill_diagonal(cross, 0.0)
-    intra_rack = float(p.Kr * (p.Kr - 1) * p.subfiles_per_layer * q_srv)
     return {"cross_rack_matrix": cross,
             "intra_per_rack": np.full((p.P,), intra_rack)}
 

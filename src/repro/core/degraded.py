@@ -101,16 +101,10 @@ class DegradedPlan:
         root-switch pairs (unicast — the multicast gain is forfeited during
         recovery) and ``intra_per_rack`` stage-2 ToR pairs (unchanged from
         the failure-free plan: stage 2 is a per-server key split of full
-        layer tables)."""
-        p = self.params
-        q_rack, q_srv = p.Q // p.P, p.Q // p.K
-        cv = self.plan.cross_valid
-        # valid slots summed over layers and slot axis: [recv i, src z]
-        counts = cv.sum(axis=(1, 3)) if cv.size else np.zeros((p.P, p.P))
-        cross = counts.T.astype(float) * q_rack           # [src, dst]
-        intra = float(p.Kr * (p.Kr - 1) * p.subfiles_per_layer * q_srv)
-        return {"cross_rack_matrix": cross,
-                "intra_per_rack": np.full((p.P,), intra)}
+        layer tables).  Delegates to ``plan_transfer_matrices``, which
+        dispatches on the degraded 4-dim ``cross_valid`` schema."""
+        from .coded_collectives import plan_transfer_matrices
+        return plan_transfer_matrices(self.plan, multicast="unicast")
 
 
 def _failed_mask(p: SchemeParams, failed: Sequence[int]) -> np.ndarray:

@@ -48,6 +48,8 @@ from ..core.plan_registry import scheme_of_family
 from ..core.resolvable import resolvable_assignment
 from ..core.shuffle_plan import count_plan, make_plan
 from ..distributed.meshes import shard_map
+from ..obs.bytes import plan_rack_bytes, reconcile, record_rack_bytes
+from ..obs.tracing import get_tracer, spans_from_phase_timings
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +69,12 @@ class JobResult:
     # filled by the recovery ladder when the job ran under injected faults
     # (repro.mapreduce.recovery.RecoveryReport); None on failure-free runs
     recovery: object | None = None
+    # rack-level byte accounting in value-units (pairs x payload width d),
+    # paper-metric counting, derived from the ACTUAL compiled plan and
+    # reconciled against the closed forms (repro.obs.bytes) — the same
+    # fields JobStats carries on the sim side
+    intra_rack_bytes: float = 0.0
+    cross_rack_bytes: float = 0.0
 
 
 def _validate_mesh(mesh: Mesh, p: SchemeParams) -> None:
@@ -117,7 +125,9 @@ def run_job(job: MapReduceJob, subfiles: jax.Array, params: SchemeParams,
                    "hybrid_resolvable": hybrid_resolvable_cost}[scheme]
         c = cost_fn(params)
         intra, cross = c.intra, c.cross
-    return JobResult(outputs, intra, cross, scheme)
+    return JobResult(outputs, intra, cross, scheme,
+                     intra_rack_bytes=intra * job.d,
+                     cross_rack_bytes=cross * job.d)
 
 
 def pack_local_subfiles(subfiles: np.ndarray,
@@ -230,22 +240,44 @@ def run_job_distributed(job: MapReduceJob, subfiles: np.ndarray,
                                  placement=placement,
                                  scheme_family=scheme_family)
     perm = getattr(placement, "perm", placement)
-    plan = compile_hybrid_plan(p, perm=perm, family=scheme_family)
+    tracer = get_tracer()
+    with tracer.span("plan_compile", kind="engine_phase",
+                     job=job.name, family=scheme_family):
+        plan = compile_hybrid_plan(p, perm=perm, family=scheme_family)
     if fused:
-        local_subs = jnp.asarray(pack_local_subfiles(subfiles, plan))
-        exe = _fused_executable(job, plan, mesh, multicast, combine_impl)
-        out = exe(local_subs)                           # [K, q_srv, d_out]
+        with tracer.span("pack", kind="engine_phase", job=job.name):
+            local_subs = jnp.asarray(pack_local_subfiles(subfiles, plan))
+        with tracer.span("map_shuffle_reduce", kind="engine_phase",
+                         job=job.name, fused="true"):
+            exe = _fused_executable(job, plan, mesh, multicast, combine_impl)
+            out = exe(local_subs)                       # [K, q_srv, d_out]
+            jax.block_until_ready(out)
     else:
-        V = np.asarray(map_phase(job, jnp.asarray(subfiles), p.Q))  # [N,Q,d]
-        local = pack_local_values(V, plan)              # [K, n_loc, Q, d]
-        shuffled = hybrid_shuffle(jnp.asarray(local), plan, mesh,
-                                  multicast, combine_impl)
-        # [K, N, q_srv, d]; per-device rows ordered by reduce_ready_order
-        out = jax.vmap(jax.vmap(job.reduce_fn, in_axes=1))(shuffled)
+        with tracer.span("map", kind="engine_phase", job=job.name):
+            V = np.asarray(map_phase(job, jnp.asarray(subfiles), p.Q))
+        with tracer.span("pack", kind="engine_phase", job=job.name):
+            local = pack_local_values(V, plan)          # [K, n_loc, Q, d]
+        with tracer.span("shuffle", kind="engine_phase", job=job.name):
+            shuffled = hybrid_shuffle(jnp.asarray(local), plan, mesh,
+                                      multicast, combine_impl)
+            jax.block_until_ready(shuffled)
+        with tracer.span("reduce", kind="engine_phase", job=job.name):
+            # [K, N, q_srv, d]; rows ordered by reduce_ready_order
+            out = jax.vmap(jax.vmap(job.reduce_fn, in_axes=1))(shuffled)
+            jax.block_until_ready(out)
     final = assemble_outputs(out, plan)                 # [Q, d_out]
+    scheme = scheme_of_family(scheme_family)
     c = (hybrid_resolvable_cost(p) if scheme_family == "resolvable"
          else hybrid_cost(p))
-    return JobResult(final, c.intra, c.cross, scheme_of_family(scheme_family))
+    # rack-level byte accounting off the ACTUAL compiled plan, paper-metric
+    # counting, re-reconciled against the closed form on every run
+    rb = record_rack_bytes(plan_rack_bytes(plan, "coded", job.d),
+                           scheme, scheme_family, layer="engine")
+    reconcile(rb.intra_total, rb.cross_total, p, scheme, d=job.d,
+              check=False)
+    return JobResult(final, c.intra, c.cross, scheme,
+                     intra_rack_bytes=rb.intra_total,
+                     cross_rack_bytes=rb.cross_total)
 
 
 # ---------------------------------------------------------------------------
@@ -304,7 +336,7 @@ def measure_phase_timings(job: MapReduceJob, subfiles: np.ndarray,
         lambda: red_jit(shuffled).block_until_ready(), iters)
 
     d = job.d
-    return {
+    row = {
         "work": {
             "map": float(p.N) * p.Q * d,
             "pack": float(p.K) * plan.local_subfiles.shape[-1] * p.Q * d,
@@ -317,6 +349,9 @@ def measure_phase_timings(job: MapReduceJob, subfiles: np.ndarray,
                  "job": job.name, "shuffle_s": shuffle_s,
                  "backend": jax.default_backend()},
     }
+    if get_tracer().enabled:        # device-timing spans for trace export
+        spans_from_phase_timings(row)
+    return row
 
 
 def measure_calibration_grid(job_factory: Callable[[int], MapReduceJob],

@@ -41,6 +41,8 @@ from ..core.degraded import DegradedPlan, build_patch, compile_degraded_plan
 from ..core.coded_collectives import device_plan_tables, shuffle_device_body
 from ..core.params import SchemeParams
 from ..distributed.meshes import shard_map
+from ..obs import metrics as obs_metrics
+from ..obs.bytes import degraded_rack_bytes, record_rack_bytes
 from ..resilience.backoff import RestartBudget
 from ..resilience.faults import FaultSpec
 
@@ -170,6 +172,7 @@ def run_with_recovery(job, subfiles: np.ndarray, p: SchemeParams, mesh: Mesh,
                     combine_impl=combine_impl, placement=placement,
                     scheme_family=scheme_family)
                 rung = "none" if attempt == 0 else "restart"
+                _record_rung(rung, scheme_family)
                 res.recovery = RecoveryReport(
                     rung, failed, 0, budget.restarts, tuple(budget.delays),
                     attempt + 1)
@@ -183,15 +186,35 @@ def run_with_recovery(job, subfiles: np.ndarray, p: SchemeParams, mesh: Mesh,
             from ..core.plan_registry import scheme_of_family
             c = (hybrid_resolvable_cost(p) if scheme_family == "resolvable"
                  else hybrid_cost(p))
-            res = JobResult(final, c.intra, c.cross,
-                            scheme_of_family(scheme_family))
+            scheme = scheme_of_family(scheme_family)
+            # the degraded attempt's ACTUAL wire bytes (unicast repair
+            # schedule + orphan redistribution), not the failure-free
+            # closed form — what a recovery really moved
+            rb = record_rack_bytes(degraded_rack_bytes(dplan, job.d),
+                                   scheme, scheme_family,
+                                   layer="engine_degraded")
+            _record_rung(rung, scheme_family)
+            res = JobResult(final, c.intra, c.cross, scheme,
+                            intra_rack_bytes=rb.intra_total,
+                            cross_rack_bytes=rb.cross_total)
             res.recovery = RecoveryReport(
                 rung, failed, n_remap, budget.restarts,
                 tuple(budget.delays), attempt + 1)
             return res
         except UnrecoverableFailure as e:
             budget.next_restart(e)    # raises e when the budget is spent
+            obs_metrics.counter(
+                "engine_restarts_total",
+                "restart-budget consumption of the recovery ladder").inc(
+                    family=scheme_family)
             attempt += 1
+
+
+def _record_rung(rung: str, family: str) -> None:
+    obs_metrics.counter(
+        "recovery_rung_total",
+        "recovery-ladder rung that produced the returned outputs").inc(
+            rung=rung, family=family)
 
 
 __all__ = ["RecoveryReport", "RECOVERY_RUNGS", "UnrecoverableFailure",

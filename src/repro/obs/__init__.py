@@ -1,0 +1,38 @@
+"""repro.obs — unified telemetry across engine, sim, and scheduler.
+
+Three instruments with one schema (see docs/observability.md):
+
+  * :mod:`repro.obs.metrics` — process-local counters/gauges/histograms
+    with labels (snapshot/reset, bounded cardinality, deterministic JSON);
+  * :mod:`repro.obs.tracing` — structured :class:`TraceEvent` spans and
+    instants with JSONL and Chrome/Perfetto ``trace_event`` exporters;
+  * :mod:`repro.obs.bytes` — rack-level byte accounting from compiled
+    plans, reconciled against the ``CommCost`` closed forms per job.
+
+Import discipline: ``repro.core`` never imports ``repro.obs`` (obs.bytes
+reaches into core, so the reverse edge would cycle); the engine, sim and
+scheduler import obs directly, and core's cache counters are pulled in
+lazily via :func:`repro.obs.metrics.collect_cache_metrics`.
+"""
+from . import bytes  # noqa: A004 - module name mirrors the instrument
+from . import metrics, tracing
+from .bytes import (ByteReconciliationError, RackBytes, closed_form_bytes,
+                    degraded_rack_bytes, plan_rack_bytes, reconcile,
+                    record_rack_bytes)
+from .metrics import (Counter, Gauge, Histogram, LabelCardinalityError,
+                      MetricsRegistry, collect_cache_metrics)
+from .tracing import (TraceEvent, Tracer, enable_tracing, get_tracer,
+                      spans_from_phase_timings, to_chrome_trace, to_jsonl,
+                      validate_chrome_trace)
+
+__all__ = [
+    "metrics", "tracing", "bytes",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "LabelCardinalityError", "collect_cache_metrics",
+    "TraceEvent", "Tracer", "get_tracer", "enable_tracing",
+    "spans_from_phase_timings", "to_jsonl", "to_chrome_trace",
+    "validate_chrome_trace",
+    "RackBytes", "ByteReconciliationError", "plan_rack_bytes",
+    "degraded_rack_bytes", "closed_form_bytes", "reconcile",
+    "record_rack_bytes",
+]

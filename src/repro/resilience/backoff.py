@@ -67,6 +67,12 @@ class RestartBudget:
 
     def next_restart(self, error: Optional[BaseException] = None) -> float:
         self.restarts += 1
+        from ..obs import metrics as obs_metrics
+        obs_metrics.counter(
+            "restart_budget_total",
+            "restart-budget consumption across all restart loops").inc(
+                outcome=("exceeded" if self.restarts > self.max_restarts
+                         else "restart"))
         if self.restarts > self.max_restarts:
             if error is not None:
                 raise error
@@ -74,6 +80,9 @@ class RestartBudget:
                 f"restart budget exhausted after {self.max_restarts} restarts")
         delay = self.policy.delay(self.restarts - 1, self._rng)
         self.delays.append(delay)
+        obs_metrics.histogram(
+            "restart_backoff_seconds",
+            "backoff delays charged by the restart budget").observe(delay)
         if self.sleep is not None:
             self.sleep(delay)
         return delay

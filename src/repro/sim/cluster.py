@@ -39,6 +39,8 @@ from ..core.assignment import (coded_assignment, hybrid_assignment,
 from ..core.degraded import degraded_stage_traffic
 from ..core.params import SchemeParams
 from ..core.shuffle_plan import StageTraffic, scheme_stage_traffic
+from ..obs import metrics as obs_metrics
+from ..obs.tracing import Tracer
 from .events import Event, EventQueue, TraceEntry
 from .network import ROOT, FluidNetwork, RackTopology, tor
 from .workload import JobSpec
@@ -691,6 +693,12 @@ class _SimJob:
     remap_subfiles: int = 0
     n_crashes: int = 0
     n_recoveries: int = 0
+    # rack-level byte accounting: value-units of COMPLETED flows, by tier
+    # (cancelled flows' partial progress is not counted — a crashed stage
+    # re-runs in full under the degraded schedule)
+    bytes_intra: float = 0.0
+    bytes_cross: float = 0.0
+    bytes_fetch: float = 0.0
 
 
 @dataclasses.dataclass
@@ -712,6 +720,12 @@ class JobStats:
     crashes: int = 0                    # crash events that hit live state
     remapped_subfiles: int = 0          # subfiles re-mapped (all r owners lost)
     recoveries: int = 0                 # degraded-recovery passes run
+    # rack-level byte accounting in value-units (pairs x d) — completed
+    # shuffle flows by tier, matching JobResult on the engine side (the
+    # paper metric; see repro.obs.bytes), plus pre-map fetch traffic
+    intra_rack_bytes: float = 0.0
+    cross_rack_bytes: float = 0.0
+    fetch_bytes: float = 0.0
 
     @property
     def jct(self) -> float:
@@ -747,7 +761,11 @@ class ClusterSim:
         self.network = FluidNetwork(topology)
         self.queue = EventQueue()
         self.now = 0.0
-        self.trace: List[TraceEntry] = []
+        # structured trace: every event/span as a repro.obs TraceEvent,
+        # stamped with the EXACT sim clock (rounding happens only in the
+        # exporters — see repro.obs.tracing); the legacy tuple view lives
+        # on as the `.trace` property
+        self.tracer = Tracer(clock=lambda: self.now, enabled=True)
         self.stats: List[JobStats] = []
         self.on_job_done: Optional[Callable[[JobStats], None]] = None
         self._jobs: Dict[int, _SimJob] = {}
@@ -861,7 +879,7 @@ class ClusterSim:
                 self.now = until
                 for flow in self.network.advance(dt):
                     self._trace("flow_done", flow.tag)
-                    self._flow_done(flow.tag)
+                    self._flow_done(flow.tag, flow.size)
                 break
             if dt_flow < dt_event:
                 done = self.network.advance(dt_flow)
@@ -871,7 +889,7 @@ class ClusterSim:
                 self.now = t_event
             for flow in done:
                 self._trace("flow_done", flow.tag)
-                self._flow_done(flow.tag)
+                self._flow_done(flow.tag, flow.size)
             while self.queue and self.queue.peek_time() <= self.now:
                 ev = self.queue.pop()
                 self._trace(ev.kind, ev.data)
@@ -879,10 +897,33 @@ class ClusterSim:
                     ev.fn()
         return self.stats
 
+    @property
+    def trace(self) -> List[TraceEntry]:
+        """Legacy tuple view of the structured trace: ``(ts, kind, data)``
+        for every INSTANT event, exact timestamps, event order preserved.
+        Spans (``phase_span`` records with a duration) are excluded — they
+        are stamped at their START time, which would break the monotone-time
+        reading of the flat event log.  Use ``self.tracer.events`` for the
+        full structured stream and the ``repro.obs.tracing`` exporters for
+        rendering."""
+        return [(e.ts, e.kind, e.data) for e in self.tracer.events
+                if e.dur is None]
+
     # ---- internals ---------------------------------------------------------
 
-    def _trace(self, kind: str, data: Tuple) -> None:
-        self.trace.append((round(self.now, 12), kind, tuple(data)))
+    def _trace(self, kind: str, data: Tuple,
+               phase: Optional[str] = None) -> None:
+        data = tuple(data)
+        job_id = (int(data[0]) if data
+                  and isinstance(data[0], (int, np.integer)) else None)
+        self.tracer.event(kind, job_id=job_id, phase=phase, data=data)
+
+    def _trace_phase_span(self, job: "_SimJob", phase: str) -> None:
+        """Record the job phase that just ENDED as a span from its recorded
+        start to now (the Perfetto lane structure of a sim run)."""
+        self.tracer.span_at(job.phase_start, self.now, kind="phase_span",
+                            job_id=job.job_id, phase=phase,
+                            scheme=job.scheme, r=job.params.r)
 
     def _start_job(self, job: _SimJob) -> None:
         if job.compile_s > 0:
@@ -975,6 +1016,10 @@ class ClusterSim:
         if ph in ("submitted", "plan_compile", "fetch"):
             return                   # no map output in memory yet
         job.n_crashes += 1
+        obs_metrics.counter(
+            "sim_crashes_total",
+            "crash events that hit a job's live state").inc(
+                scheme=job.scheme, phase=ph.split(":")[0])
         if ph == "map" and job.tasks is not None:
             # task-granular map re-executes the lost work itself; its
             # outputs end up fully recovered, so no degraded shuffle
@@ -1007,6 +1052,14 @@ class ClusterSim:
         job.stage_idx = 0
         job.recovered_for = job.failed
         job.remap_subfiles += n_remap
+        obs_metrics.counter(
+            "sim_recoveries_total",
+            "degraded-recovery passes run").inc(scheme=job.scheme)
+        if n_remap:
+            obs_metrics.counter(
+                "sim_remapped_subfiles_total",
+                "subfiles re-mapped after losing all r owners").inc(
+                    n_remap, scheme=job.scheme)
         self._trace("recovery", (job.job_id, job.failed, n_remap))
         if n_remap > 0:
             self._begin_remap(job, n_remap)
@@ -1031,9 +1084,17 @@ class ClusterSim:
         self.queue.push(self.now + dur, "phase_done", (job.job_id, "remap"),
                         lambda: self._phase_done(job, "remap"))
 
-    def _flow_done(self, tag: Tuple) -> None:
+    def _flow_done(self, tag: Tuple, units: float = 0.0) -> None:
         job = self._jobs[tag[0]]
-        if len(tag) > 1 and tag[1] == "spec_fetch":
+        kind = tag[1] if len(tag) > 1 else ""
+        # rack-level byte accounting: completed value-units by tier
+        if kind == "cross":
+            job.bytes_cross += units
+        elif kind == "intra":
+            job.bytes_intra += units
+        elif kind in ("fetch_cross", "fetch_intra", "spec_fetch"):
+            job.bytes_fetch += units
+        if kind == "spec_fetch":
             if job.tasks is not None:
                 job.tasks.fetch_done(tag[2])
             return
@@ -1054,6 +1115,7 @@ class ClusterSim:
 
     def _fetch_done(self, job: _SimJob) -> None:
         job.phase_times["fetch"] = self.now - job.phase_start
+        self._trace_phase_span(job, "fetch")
         self._begin_compute(job, "map")
 
     def _stage_done(self, job: _SimJob) -> None:
@@ -1061,6 +1123,7 @@ class ClusterSim:
         # accumulate (not assign): recovery re-runs stages after a crash
         job.phase_times[key] = (job.phase_times.get(key, 0.0)
                                 + self.now - job.phase_start)
+        self._trace_phase_span(job, key)
         job.stage_idx += 1
         if job.stage_idx < len(job.stages):
             self._begin_shuffle_stage(job)
@@ -1070,6 +1133,7 @@ class ClusterSim:
     def _phase_done(self, job: _SimJob, phase: str) -> None:
         job.phase_times[phase] = (job.phase_times.get(phase, 0.0)
                                   + self.now - job.phase_start)
+        self._trace_phase_span(job, phase)
         if phase == "plan_compile":
             self._begin_fetch(job)
         elif phase == "map":
@@ -1105,8 +1169,19 @@ class ClusterSim:
                              map_waves=job.map_waves,
                              crashes=job.n_crashes,
                              remapped_subfiles=job.remap_subfiles,
-                             recoveries=job.n_recoveries)
+                             recoveries=job.n_recoveries,
+                             intra_rack_bytes=job.bytes_intra,
+                             cross_rack_bytes=job.bytes_cross,
+                             fetch_bytes=job.bytes_fetch)
             self.stats.append(stats)
+            tot = obs_metrics.counter(
+                "shuffle_bytes_total", "shuffle value-units moved, by tier")
+            fam = {"hybrid": "binomial",
+                   "hybrid_resolvable": "resolvable"}.get(job.scheme, "")
+            tot.inc(job.bytes_intra, tier="intra", scheme=job.scheme,
+                    family=fam, layer="sim")
+            tot.inc(job.bytes_cross, tier="cross", scheme=job.scheme,
+                    family=fam, layer="sim")
             self._trace("job_done", (job.job_id, job.scheme, job.params.r))
             if self.on_job_done is not None:
                 self.on_job_done(stats)

@@ -85,6 +85,7 @@ class Flow:
     resource: Resource
     remaining: float                 # value-units left to move
     tag: Tuple                       # (job_id, phase, ...) — for the trace
+    size: float = 0.0                # original value-units (byte accounting)
 
 
 class FluidNetwork:
@@ -98,7 +99,8 @@ class FluidNetwork:
     def start_flow(self, resource: Resource, size: float, tag: Tuple) -> int:
         fid = self._next_id
         self._next_id += 1
-        self.flows[fid] = Flow(fid, resource, max(float(size), 0.0), tag)
+        sz = max(float(size), 0.0)
+        self.flows[fid] = Flow(fid, resource, sz, tag, sz)
         return fid
 
     def _counts(self) -> Dict[Resource, int]:

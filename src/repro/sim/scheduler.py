@@ -29,6 +29,7 @@ from ..core.coded_collectives import compile_hybrid_plan, plan_cache_info
 from ..core.params import SchemeParams
 from ..core.plan_registry import family_of_scheme
 from ..core.shuffle_plan import scheme_stage_traffic
+from ..obs import metrics as obs_metrics
 from .cluster import ClusterSim, CostModel, JobStats, phase_work
 from .network import ROOT, tor
 from .workload import JobSpec
@@ -299,6 +300,10 @@ class SchemeChooser:
         p = SchemeParams(K=self.K, P=cluster.topology.P,
                          Q=spec.Q, N=spec.N, r=r, r_f=self.placement_r_f)
         compile_s, hit = self._compile_charge(p, scheme, probe=True)
+        obs_metrics.counter(
+            "chooser_decisions_total",
+            "scheme decisions by (scheme, r, family)").inc(
+                scheme=scheme, r=r, family=family_of_scheme(scheme) or "none")
         return Decision(scheme, r, est, compile_s, hit, placement,
                         self.speculation)
 
@@ -392,6 +397,9 @@ class MultiJobScheduler:
     def _arrive(self, spec: JobSpec, cluster: ClusterSim) -> None:
         self._queue.append((self._seq, spec))
         self._seq += 1
+        cluster.tracer.event("sched_arrival",
+                             data=(spec.name, len(self._queue)),
+                             policy=self.policy)
         self._drain(cluster)
 
     def _job_done(self, stats: JobStats, cluster: ClusterSim) -> None:
@@ -400,6 +408,9 @@ class MultiJobScheduler:
         if rp is not None:
             # feed the observed map slowdown back into the straggler fit
             rp.observe(stats, self._expected_map.pop(stats.job_id, 0.0))
+        cluster.tracer.event("sched_drain", job_id=stats.job_id,
+                             data=(self._running, len(self._queue)),
+                             policy=self.policy)
         self._drain(cluster)
 
     def _drain(self, cluster: ClusterSim) -> None:
@@ -411,6 +422,11 @@ class MultiJobScheduler:
                                     placement=d.placement,
                                     speculation=d.speculation)
             self.decisions[job_id] = d
+            # no cache_hit label: it reflects process-global plan-cache
+            # state, which would break per-seed bit-identical traces
+            cluster.tracer.event("sched_admit", job_id=job_id,
+                                 data=(spec.name, d.scheme, d.r),
+                                 scheme=d.scheme, r=d.r, policy=self.policy)
             if self.chooser.r_policy is not None:
                 p = SchemeParams(K=self.chooser.K, P=cluster.topology.P,
                                  Q=spec.Q, N=spec.N, r=d.r)

@@ -1,0 +1,345 @@
+"""Telemetry-layer tests (repro.obs): metrics snapshot/reset semantics and
+label-cardinality bounds, structured tracing + exporters (incl. the
+committed Perfetto golden file), and rack-level byte accounting reconciled
+against the closed forms for every registered plan family."""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.coded_collectives import (compile_hybrid_plan,
+                                          plan_cache_clear, plan_cache_info,
+                                          plan_transfer_matrices)
+from repro.core.costs import cost_table, hybrid_cost, hybrid_resolvable_cost
+from repro.core.degraded import compile_degraded_plan
+from repro.core.params import SchemeParams
+from repro.core.plan_registry import plan_families, scheme_of_family
+from repro.obs import bytes as obytes
+from repro.obs import metrics, tracing
+from repro.sim import (ClusterSim, CostModel, JobSpec, PhaseCoeffs,
+                       RackTopology, simulate_single_job)
+
+GOLDEN = pathlib.Path(__file__).parent / "golden_obs_trace.json"
+
+P9 = SchemeParams(9, 3, 18, 72, 2)
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+def test_counter_accumulates_per_label_set():
+    reg = metrics.MetricsRegistry()
+    c = reg.counter("decisions")
+    c.inc(scheme="hybrid", r=2)
+    c.inc(scheme="hybrid", r=2)
+    c.inc(2.5, scheme="coded", r=3)
+    assert c.value(scheme="hybrid", r=2) == 2.0
+    assert c.value(r=2, scheme="hybrid") == 2.0     # label order irrelevant
+    assert c.value(scheme="coded", r=3) == 2.5
+    assert c.value(scheme="uncoded", r=1) == 0.0    # unobserved reads zero
+
+
+def test_counter_rejects_negative_increments():
+    reg = metrics.MetricsRegistry()
+    with pytest.raises(ValueError):
+        reg.counter("c").inc(-1.0)
+
+
+def test_redeclare_same_name_returns_same_object_and_kind_mismatch_raises():
+    reg = metrics.MetricsRegistry()
+    a = reg.counter("x")
+    assert reg.counter("x") is a
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+
+
+def test_reset_zeroes_values_but_keeps_declarations():
+    reg = metrics.MetricsRegistry()
+    reg.counter("c").inc(5)
+    reg.gauge("g").set(7)
+    reg.reset()
+    assert reg.names() == ["c", "g"]                # declarations survive
+    assert reg.counter("c").value() == 0.0
+    assert reg.gauge("g").value() == 0.0
+    reg.clear()
+    assert reg.names() == []                        # clear drops them too
+
+
+def test_label_cardinality_bound_enforced():
+    reg = metrics.MetricsRegistry()
+    c = reg.counter("bounded", max_label_sets=3)
+    for i in range(3):
+        c.inc(job=i)
+    with pytest.raises(metrics.LabelCardinalityError):
+        c.inc(job=99)
+    c.inc(job=1)                    # existing series still writable
+
+
+def test_histogram_buckets_are_cumulative_with_inf_tail():
+    reg = metrics.MetricsRegistry()
+    h = reg.histogram("lat", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 0.5, 100.0):
+        h.observe(v)
+    (sample,) = reg.snapshot()["lat"]["samples"].values()
+    assert sample["buckets"] == [0.1, 1.0, "inf"]
+    assert sample["counts"] == [1, 3, 4]            # cumulative
+    assert sample["count"] == 4
+    assert sample["sum"] == pytest.approx(101.05)
+
+
+def test_snapshot_json_is_deterministic():
+    def build():
+        reg = metrics.MetricsRegistry()
+        reg.counter("z").inc(scheme="hybrid")
+        reg.counter("a").inc(3, r=2, scheme="coded")
+        reg.gauge("m").set(1.5, kind="x")
+        return reg.snapshot_json()
+    assert build() == build()
+
+
+def test_collect_cache_metrics_mirrors_plan_cache_info():
+    plan_cache_clear()
+    compile_hybrid_plan(P9)
+    compile_hybrid_plan(P9)                          # one hit
+    reg = metrics.MetricsRegistry()
+    metrics.collect_cache_metrics(reg)
+    info = plan_cache_info()
+    pc = reg.gauge("plan_cache")
+    assert pc.value(event="hit", family="all") == info.hits
+    assert pc.value(event="miss", family="all") == info.misses
+    assert reg.gauge("plan_cache_size").value(kind="current") == info.currsize
+    assert "degraded_cache" in reg.names()
+
+
+# ---------------------------------------------------------------------------
+# Tracing
+# ---------------------------------------------------------------------------
+
+def test_disabled_tracer_records_nothing():
+    tr = tracing.Tracer(enabled=False)
+    tr.event("x")
+    with tr.span("map"):
+        pass
+    assert tr.events == []
+
+
+def test_span_uses_injected_clock():
+    t = [0.0]
+    tr = tracing.Tracer(clock=lambda: t[0])
+    with tr.span("map", job_id=3, scheme="hybrid"):
+        t[0] = 2.5
+    (ev,) = tr.events
+    assert (ev.ts, ev.dur, ev.phase, ev.job_id) == (0.0, 2.5, "map", 3)
+    assert dict(ev.labels) == {"scheme": "hybrid"}
+
+
+def test_jsonl_rounds_only_on_export():
+    tr = tracing.Tracer(clock=lambda: 1.0 / 3.0)
+    tr.event("tick")
+    assert tr.events[0].ts == 1.0 / 3.0              # producer stays exact
+    line = json.loads(tracing.to_jsonl(tr.events).strip())
+    assert line["ts"] == round(1.0 / 3.0, tracing.TS_NDIGITS)
+
+
+def test_chrome_trace_schema_and_validation():
+    tr = tracing.Tracer(clock=lambda: 0.0)
+    tr.span_at(0.0, 0.001, "phase_span", job_id=1, phase="map")
+    tr.event("job_done", job_id=1, ts=0.002)
+    doc = tracing.to_chrome_trace(tr.events)
+    assert tracing.validate_chrome_trace(doc) == 2
+    span, instant = doc["traceEvents"]
+    assert span["ph"] == "X" and span["dur"] == 1000.0 and span["pid"] == 1
+    assert instant["ph"] == "i"
+    with pytest.raises(ValueError):
+        tracing.validate_chrome_trace({"traceEvents": [{"name": "x"}]})
+    with pytest.raises(ValueError):
+        tracing.validate_chrome_trace({})
+
+
+def test_spans_from_phase_timings_lays_phases_end_to_end():
+    row = {"work": {}, "seconds": {"plan_compile": 0.5, "map": 1.0,
+                                   "pack": 0.25, "reduce": 0.125},
+           "meta": {"job": "j", "backend": "cpu", "shuffle_s": 2.0}}
+    tr = tracing.Tracer(clock=lambda: 0.0)
+    spans = tracing.spans_from_phase_timings(row, tr)
+    assert [s.phase for s in spans] == ["plan_compile", "map", "pack",
+                                       "shuffle", "reduce"]
+    for a, b in zip(spans, spans[1:]):
+        assert b.ts == pytest.approx(a.ts + a.dur)
+    assert tr.events == spans
+
+
+# ---------------------------------------------------------------------------
+# Sim trace: structured schema behind the legacy shim
+# ---------------------------------------------------------------------------
+
+def _golden_sim() -> ClusterSim:
+    """Canonical deterministic run for the committed Perfetto golden: two
+    hybrid jobs contending, non-trivial compute costs, no stragglers."""
+    topo = RackTopology(P=3, cross_bw=1e3, intra_bw=1e4)
+    sim = ClusterSim(topo, K=9, cost_model=CostModel(
+        map=PhaseCoeffs(1e-3, 1e-8)), seed=0)
+    sim.submit(JobSpec("histogram", 72, 18, 1), "hybrid", 2, time=0.0)
+    sim.submit(JobSpec("histogram", 72, 18, 1), "hybrid", 2, time=0.05)
+    sim.run()
+    return sim
+
+
+def test_legacy_trace_shim_is_instants_with_exact_timestamps():
+    sim = _golden_sim()
+    instants = [e for e in sim.tracer.events if e.dur is None]
+    spans = [e for e in sim.tracer.events if e.dur is not None]
+    assert sim.trace == [(e.ts, e.kind, e.data) for e in instants]
+    assert spans, "phase spans must be recorded"
+    assert all(e.kind == "phase_span" for e in spans)
+    # span [start, start+dur] windows stay within the run
+    for e in spans:
+        assert 0.0 <= e.ts <= e.ts + e.dur <= sim.now + 1e-12
+    # the legacy view stays monotone precisely because spans are excluded
+    times = [t for t, _, _ in sim.trace]
+    assert times == sorted(times)
+
+
+def test_sim_trace_events_bit_identical_across_reruns():
+    e1 = _golden_sim().tracer.events
+    e2 = _golden_sim().tracer.events
+    assert e1 == e2                  # frozen dataclasses: exact equality
+
+
+def test_perfetto_export_matches_golden_file():
+    """The committed golden pins BOTH the exporter schema and the sim's
+    event stream — regenerate with
+    ``python -m tests.test_obs`` only when a deliberate schema/sim change
+    is being made, and review the diff."""
+    doc = tracing.to_chrome_trace(_golden_sim().tracer.events)
+    golden = json.loads(GOLDEN.read_text())
+    assert doc == golden
+
+
+def test_phase_spans_cover_reported_phase_times():
+    sim = _golden_sim()
+    for stats in sim.stats:
+        spans = [e for e in sim.tracer.events
+                 if e.kind == "phase_span" and e.job_id == stats.job_id]
+        by_phase = {}
+        for e in spans:
+            by_phase[e.phase] = by_phase.get(e.phase, 0.0) + e.dur
+        for phase, secs in stats.phase_times.items():
+            assert by_phase[phase] == pytest.approx(secs)
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting: plans, degraded plans, sim, reconciliation property
+# ---------------------------------------------------------------------------
+
+def test_plan_rack_bytes_reconcile_for_every_registered_family():
+    cases = {"binomial": SchemeParams(8, 4, 16, 48, 2),
+             "resolvable": SchemeParams(16, 4, 16, 240, 2)}
+    for family in plan_families():
+        p = cases[family]
+        plan = compile_hybrid_plan(p, family=family)
+        scheme = scheme_of_family(family)
+        for d in (1, 4):
+            rb = obytes.plan_rack_bytes(plan, "coded", d=d)
+            obytes.reconcile(rb.intra_total, rb.cross_total, p, scheme, d=d)
+            # recorded == plan_transfer_matrices totals (the property)
+            tm = plan_transfer_matrices(plan, "coded")
+            assert rb.cross_total == pytest.approx(
+                float(tm["cross_rack_matrix"].sum()) * d)
+            assert rb.intra_total == pytest.approx(
+                float(tm["intra_per_rack"].sum()) * d)
+
+
+def test_reconcile_raises_on_mismatch():
+    with pytest.raises(obytes.ByteReconciliationError):
+        obytes.reconcile(0.0, 1.0, P9, "hybrid")
+
+
+def test_degraded_plan_transfer_matrices_dispatch_on_schema():
+    dp = compile_degraded_plan(P9, (0,))
+    tm = plan_transfer_matrices(dp.plan)            # 4-dim cross_valid path
+    loads = dp.transfer_loads()
+    assert np.allclose(tm["cross_rack_matrix"], loads["cross_rack_matrix"])
+    assert np.allclose(tm["intra_per_rack"], loads["intra_per_rack"])
+    # decode-around of one failure moves MORE cross traffic than the coded
+    # failure-free schedule (the forfeited multicast gain) but stays unicast
+    assert tm["cross_rack_matrix"].sum() > hybrid_cost(P9).cross
+
+
+def test_degraded_rack_bytes_add_orphan_redistribution():
+    dp = compile_degraded_plan(P9, (0,))
+    rb = obytes.degraded_rack_bytes(dp, d=2)
+    base = float(dp.transfer_loads()["cross_rack_matrix"].sum()) * 2
+    extra = dp.orphan_subfiles.size * P9.Q * 2
+    assert rb.cross_total == pytest.approx(base + extra)
+    assert np.diag(rb.cross_matrix).sum() == 0.0
+
+
+def test_record_rack_bytes_increments_registry():
+    reg = metrics.MetricsRegistry()
+    plan = compile_hybrid_plan(P9)
+    rb = obytes.plan_rack_bytes(plan, "coded", d=1)
+    obytes.record_rack_bytes(rb, "hybrid", "binomial", reg=reg)
+    obytes.record_rack_bytes(rb, "hybrid", "binomial", reg=reg)
+    tot = reg.counter("shuffle_bytes_total")
+    assert tot.value(tier="cross", scheme="hybrid", family="binomial",
+                     layer="engine") == pytest.approx(2 * rb.cross_total)
+    pair = reg.counter("rack_pair_bytes_total")
+    assert pair.value(src=0, dst=1, layer="engine") == pytest.approx(
+        2 * float(rb.cross_matrix[0, 1]))
+
+
+@pytest.mark.parametrize("scheme", ["uncoded", "coded", "hybrid"])
+def test_sim_job_stats_bytes_reconcile_with_closed_form(scheme):
+    d = 4
+    spec = JobSpec("histogram", 72, 18, d)
+    topo = RackTopology(P=3)
+    stats = simulate_single_job(spec, topo, 9, scheme, 2 if scheme != "uncoded"
+                                else 1)
+    p = SchemeParams(9, 3, 18, 72, 2 if scheme != "uncoded" else 1)
+    obytes.reconcile(stats.intra_rack_bytes, stats.cross_rack_bytes,
+                     p, scheme, d=d)
+    c = cost_table(p, check=False)[scheme]
+    assert stats.cross_rack_bytes == pytest.approx(c.cross * d)
+
+
+def test_sim_crash_recovery_records_bytes_and_metrics():
+    metrics.reset()
+    topo = RackTopology(P=3, cross_bw=1e3, intra_bw=1e4)
+    sim = ClusterSim(topo, K=9, cost_model=CostModel(
+        map=PhaseCoeffs(1e-3, 1e-8)), seed=0)
+    sim.submit(JobSpec("histogram", 72, 18, 1), "hybrid", 2, time=0.0)
+    # crash mid-shuffle: recovery replaces the schedule with the degraded one
+    sim.inject_crash(0.002, (0,))
+    (stats,) = sim.run()
+    assert stats.crashes == 1 and stats.recoveries >= 1
+    assert metrics.counter("sim_crashes_total").value(
+        scheme="hybrid", phase="shuffle") + metrics.counter(
+        "sim_crashes_total").value(scheme="hybrid", phase="map") >= 1
+    # completed bytes include the degraded re-shuffle, so cross exceeds the
+    # failure-free closed form (unicast repair forfeits the multicast gain)
+    assert stats.cross_rack_bytes > hybrid_cost(P9).cross
+
+
+def test_chooser_decisions_counter_increments():
+    from repro.sim import SchemeChooser, default_catalog, run_scheduled
+    from repro.sim.workload import PoissonWorkload
+    metrics.reset()
+    jobs = PoissonWorkload(default_catalog(8, 4), n_jobs=5,
+                           rate=3.0).generate(seed=4)
+    topo = RackTopology(P=4, cross_bw=1e5, intra_bw=1e6)
+    cluster = ClusterSim(topo, K=8)
+    chooser = SchemeChooser(8)
+    stats, sched = run_scheduled(jobs, cluster, chooser)
+    snap = metrics.snapshot()["chooser_decisions_total"]["samples"]
+    assert sum(v for v in snap.values()) == 5
+    kinds = {e.kind for e in cluster.tracer.events}
+    assert {"sched_arrival", "sched_admit", "sched_drain"} <= kinds
+
+
+if __name__ == "__main__":          # regenerate the committed golden file
+    doc = tracing.to_chrome_trace(_golden_sim().tracer.events)
+    GOLDEN.write_text(json.dumps(doc, sort_keys=True, indent=1) + "\n")
+    print(f"wrote {GOLDEN} ({len(doc['traceEvents'])} events)")

@@ -73,26 +73,30 @@ def _scheduled_run(seed, policy="srpt"):
                                  max_concurrent=3)
     decisions = [(sched.decisions[s.job_id].scheme,
                   sched.decisions[s.job_id].r) for s in stats]
-    return [s.jct for s in stats], list(cluster.trace), decisions
+    return [s.jct for s in stats], list(cluster.trace), decisions, cluster
 
 
 def test_same_seed_bit_identical():
-    jcts1, trace1, dec1 = _scheduled_run(seed=11)
-    jcts2, trace2, dec2 = _scheduled_run(seed=11)
+    jcts1, trace1, dec1, c1 = _scheduled_run(seed=11)
+    jcts2, trace2, dec2, c2 = _scheduled_run(seed=11)
     assert jcts1 == jcts2          # exact float equality, not approx
     assert trace1 == trace2
     assert dec1 == dec2
+    # the full structured schema too: spans, scheduler events, labels
+    assert c1.tracer.events == c2.tracer.events
+    assert any(e.dur is not None for e in c1.tracer.events)
+    assert any(e.kind == "sched_admit" for e in c1.tracer.events)
 
 
 def test_different_seed_differs():
-    jcts1, _, _ = _scheduled_run(seed=11)
-    jcts2, _, _ = _scheduled_run(seed=12)
+    jcts1, _, _, _ = _scheduled_run(seed=11)
+    jcts2, _, _, _ = _scheduled_run(seed=12)
     assert jcts1 != jcts2
 
 
 @pytest.mark.parametrize("policy", ["fifo", "srpt", "fair"])
 def test_policies_complete_all_jobs(policy):
-    jcts, trace, decisions = _scheduled_run(seed=3, policy=policy)
+    jcts, trace, decisions, _ = _scheduled_run(seed=3, policy=policy)
     assert len(jcts) == 25
     assert all(j > 0 for j in jcts)
     assert sum(1 for t in trace if t[1] == "job_done") == 25
