@@ -4,7 +4,8 @@
 PYTEST ?= python -m pytest
 
 .PHONY: test test-all bench bench-pipeline bench-sim bench-locality \
-	bench-resilience bench-faults bench-table1 bench-scale bench-obs
+	bench-resilience bench-faults bench-table1 bench-scale bench-obs \
+	bench-calibration bench-history-check obs-report
 
 test:
 	$(PYTEST) -q -m "not slow"
@@ -38,3 +39,12 @@ bench-scale:
 
 bench-obs:
 	PYTHONPATH=src python benchmarks/obs_bench.py
+
+bench-calibration:
+	PYTHONPATH=src python benchmarks/calibration_bench.py
+
+bench-history-check:
+	PYTHONPATH=src python benchmarks/history.py check
+
+obs-report:
+	PYTHONPATH=src python -m repro.obs.report

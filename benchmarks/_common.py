@@ -46,7 +46,10 @@ def seeded_rng(seed: int) -> np.random.Generator:
 
 def emit_report(report: Dict, bench: str, out_path: str,
                 smoke: bool = False, seed: Optional[int] = None) -> Dict:
-    """Wrap ``report`` in the common envelope and write it to ``out_path``."""
+    """Wrap ``report`` in the common envelope, write it to ``out_path``,
+    and append the bench's headline scalars to the trajectory ledger
+    (``BENCH_history.jsonl`` next to ``out_path`` — see
+    :mod:`benchmarks.history`)."""
     envelope = {
         "schema_version": SCHEMA_VERSION,
         "bench": bench,
@@ -57,4 +60,9 @@ def emit_report(report: Dict, bench: str, out_path: str,
     with open(out_path, "w") as f:
         json.dump(envelope, f, indent=2)
     print(f"wrote {out_path}")
+    try:
+        from .history import append_entry
+    except ImportError:                   # run as a script, not a package
+        from history import append_entry
+    append_entry(envelope, out_path)
     return envelope

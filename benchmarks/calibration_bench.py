@@ -1,0 +1,342 @@
+"""Sim-to-metal conformance benchmark: calibrate the cost model on the
+real 8-device driver, assert the simulator predicts measured fused-pipeline
+wall clock within a tolerance band, and prove the online drift->refit loop
+beats a stale model after a straggler-regime shift.
+
+Four sections, all pinned in ``BENCH_calibration.json``:
+
+  * **phase_fit** — ``measure_calibration_grid`` over (N, r, d) points on
+    the 8-host-device ('rack','server') mesh; the fitted per-phase
+    :class:`CostModel` is committed as
+    ``calibration/default_cost_model.json`` with fit residuals and
+    provenance (the artifact ``repro.sim.load_default_cost_model`` loads);
+  * **conformance** — measured END-TO-END fused-pipeline wall clock over
+    the pipeline-bench grid, fitted by the JCT-level
+    :class:`repro.sim.ConformanceModel` (sim work conventions), then
+    re-predicted by ACTUALLY RUNNING :func:`simulate_single_job` under the
+    distributed (CostModel, RackTopology): every cell must land within the
+    tolerance band, and each cell is reconciled into the engine-layer
+    ``jct_prediction_*`` histograms;
+  * **drift** — a seeded scheduled sim stream whose straggler regime
+    shifts 3x mid-run: the EWMA detector must fire, the online refit
+    (``MultiJobScheduler(recalibrate=True)``) must absorb the inflation,
+    and the refit run's post-shift prediction error must beat the stale
+    counterfactual (same seed, same workload, no refit) — with the stale
+    model's regret banked in ``stale_model_regret_seconds_total``;
+  * **determinism** — the drift scenario re-run in-process produces a
+    byte-identical ``jct_*`` metric snapshot per seed.
+
+``--smoke`` shrinks every grid for CI.  Emits ``BENCH_calibration.json``
+(+ a ``BENCH_history.jsonl`` ledger entry via the common envelope).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import numpy as np                                             # noqa: E402
+import jax                                                     # noqa: E402
+import jax.numpy as jnp                                        # noqa: E402
+
+try:                                                           # noqa: E402
+    from ._common import emit_report, make_parser, repo_root, seeded_rng
+except ImportError:                       # run as a script, not a package
+    from _common import emit_report, make_parser, repo_root, seeded_rng
+
+from repro.core.params import SchemeParams                     # noqa: E402
+from repro.distributed.meshes import make_mesh                 # noqa: E402
+from repro.mapreduce.engine import (                           # noqa: E402
+    _fused_executable, assemble_outputs, measure_calibration_grid,
+    pack_local_subfiles)
+from repro.core.coded_collectives import (                     # noqa: E402
+    compile_hybrid_plan, plan_cache_clear)
+from repro.mapreduce.jobs import wide_histogram_job            # noqa: E402
+from repro.obs import metrics                                  # noqa: E402
+from repro.obs.drift import (DriftConfig, DriftMonitor,        # noqa: E402
+                             record_prediction)
+from repro.sim import (ClusterSim, CostModel,                  # noqa: E402
+                       DeterministicSlowdown, MultiJobScheduler,
+                       PhaseCoeffs, PoissonWorkload, RackTopology,
+                       SchemeChooser, default_catalog, fit_conformance,
+                       load_cost_model)
+from repro.sim.calibration import (calibrate_with_residuals,   # noqa: E402
+                                   conformance_report, save_cost_model)
+
+MESH_SHAPE = (4, 2)                  # P=4 racks x Kr=2 servers = 8 devices
+K, P, Q = 8, 4, 16
+SUBFILE_TOKENS = 256
+
+# phase-fit grid: (N, r, d) spread so the affine per-phase fit is
+# overdetermined in work for every phase
+GRID_POINTS = [(48, 2, 256), (48, 2, 1024), (96, 2, 512), (96, 2, 2048),
+               (96, 3, 1024), (192, 2, 1024)]
+SMOKE_GRID_POINTS = [(48, 2, 64), (48, 2, 256)]
+
+# conformance grid mirrors benchmarks/pipeline_bench.py
+CONFORMANCE_SIZES = [(96, 16, 2048), (96, 16, 512), (192, 16, 1024)]
+CONFORMANCE_RS = (1, 2, 3)
+SMOKE_CONFORMANCE_SIZES = [(48, 16, 64)]
+SMOKE_CONFORMANCE_RS = (2,)
+
+TOL_REL = 0.35                       # conformance tolerance band
+
+
+def _timeit(fn, iters: int) -> float:
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Section 1: per-phase calibration on the 8-device driver -> artifact
+# ---------------------------------------------------------------------------
+
+def phase_fit(mesh, smoke: bool, iters: int, seed: int,
+              calib_out: str) -> dict:
+    points = [(SchemeParams(K=K, P=P, Q=Q, N=n, r=r), d)
+              for n, r, d in (SMOKE_GRID_POINTS if smoke else GRID_POINTS)]
+    rows = measure_calibration_grid(wide_histogram_job, mesh, points,
+                                    iters=iters)
+    model, residuals = calibrate_with_residuals(rows)
+    provenance = {
+        "bench": "calibration_bench.phase_fit",
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "mesh_shape": list(MESH_SHAPE),
+        "points": [{"N": p.N, "Q": p.Q, "r": p.r, "d": d}
+                   for p, d in points],
+        "iters": iters, "seed": seed, "smoke": smoke,
+    }
+    save_cost_model(model, calib_out, residuals=residuals,
+                    provenance=provenance)
+    reloaded, doc = load_cost_model(calib_out)       # round-trip check
+    assert reloaded == model, "artifact round-trip must be exact"
+    assert model.map.beta > 0 and model.reduce.beta > 0, \
+        "calibration must see positive compute rates"
+    worst = max(residuals[ph]["rel_rmse"]
+                for ph in ("map", "pack", "reduce") if ph in residuals)
+    for ph, res in sorted(residuals.items()):
+        print(f"  [phase_fit] {ph:12s} n={res['n']} "
+              f"rmse={res['rmse_s'] * 1e3:.3f}ms "
+              f"rel_rmse={res['rel_rmse']:.3f}")
+    print(f"  [phase_fit] wrote {calib_out}")
+    return {"cost_model": doc["cost_model"], "residuals": residuals,
+            "provenance": provenance, "artifact": calib_out,
+            "worst_rel_rmse": worst}
+
+
+# ---------------------------------------------------------------------------
+# Section 2: measured fused wall clock vs simulated JCT, per grid cell
+# ---------------------------------------------------------------------------
+
+def measure_fused_e2e(mesh, p: SchemeParams, d: int, iters: int,
+                      seed: int) -> float:
+    """Warm end-to-end fused pipeline seconds (host pack -> jitted fused
+    program -> output assembly), best of ``iters`` — the wall clock the
+    simulator is asked to predict."""
+    plan = compile_hybrid_plan(p)
+    job = wide_histogram_job(d)
+    rng = seeded_rng(seed * 1009 + p.r)
+    subfiles = rng.integers(0, 1 << 16, size=(p.N, SUBFILE_TOKENS)
+                            ).astype(np.int32)
+    exe = _fused_executable(job, plan, mesh, "unicast", "xla")
+    exe(jnp.asarray(pack_local_subfiles(subfiles, plan))
+        ).block_until_ready()                                  # compile
+
+    def e2e():
+        packed = jnp.asarray(pack_local_subfiles(subfiles, plan))
+        return assemble_outputs(exe(packed), plan).block_until_ready()
+
+    return _timeit(e2e, iters)
+
+
+def conformance(mesh, smoke: bool, iters: int, seed: int,
+                tol: float) -> dict:
+    sizes = SMOKE_CONFORMANCE_SIZES if smoke else CONFORMANCE_SIZES
+    rs = SMOKE_CONFORMANCE_RS if smoke else CONFORMANCE_RS
+    cells = []
+    for (n, q, d) in sizes:
+        for r in rs:
+            p = SchemeParams(K=K, P=P, Q=q, N=n, r=r)
+            meas = measure_fused_e2e(mesh, p, d, iters, seed)
+            cells.append({"p": p, "scheme": "hybrid", "d": d,
+                          "measured_s": meas})
+    model = fit_conformance(cells)
+    # honesty check: the sim must REPRODUCE the fitted linear predictor
+    for c in cells:
+        lin = model.predict(c["p"], "hybrid", c["d"])
+        sim = model.sim_stats(c["p"], "hybrid", c["d"]).jct
+        assert abs(sim - lin) <= 1e-9 * max(lin, 1e-12), \
+            f"sim JCT {sim} must equal the linear predictor {lin}"
+    rows = conformance_report(model, cells, via_sim=True)
+    for row, c in zip(rows, cells):
+        record_prediction(row["predicted_s"], row["measured_s"],
+                          layer="engine", scheme="hybrid")
+        print(f"  [conformance] N={row['N']:3d} r={row['r']} "
+              f"d={row['d']:4d}  measured {row['measured_s'] * 1e3:8.2f}ms"
+              f"  sim {row['predicted_s'] * 1e3:8.2f}ms  "
+              f"rel_err {row['rel_err']:.3f}")
+    max_rel = max(r["rel_err"] for r in rows)
+    mean_rel = float(np.mean([r["rel_err"] for r in rows]))
+    ok = max_rel <= tol
+    assert ok, (f"sim-predicted JCT misses measured wall clock beyond the "
+                f"band: max rel err {max_rel:.3f} > tol {tol}")
+    return {"model": model.to_dict(), "cells": rows, "tol_rel": tol,
+            "max_rel_err": max_rel, "mean_rel_err": mean_rel, "ok": ok}
+
+
+# ---------------------------------------------------------------------------
+# Section 3: drift detector + online refit vs the stale counterfactual
+# ---------------------------------------------------------------------------
+
+STALE_COST = CostModel(map=PhaseCoeffs(1e-3, 5e-7),
+                       pack=PhaseCoeffs(5e-4, 2e-7),
+                       reduce=PhaseCoeffs(1e-3, 5e-7))
+SHIFT_FACTOR = 3.0
+
+
+def _drift_run(n_jobs: int, seed: int, t_shift: float,
+               recalibrate: bool) -> dict:
+    """One seeded scheduled run whose straggler regime shifts at
+    ``t_shift``; returns per-job prediction errors and monitor state."""
+    topo = RackTopology(P=P, cross_bw=2e5, intra_bw=2e6)
+    cluster = ClusterSim(topo, K=K, cost_model=STALE_COST, seed=seed)
+    cluster.at(t_shift, lambda: setattr(
+        cluster, "stragglers",
+        DeterministicSlowdown((SHIFT_FACTOR,) * K)))
+    chooser = SchemeChooser(K, cost_model=STALE_COST,
+                            compile_real_plans=False)
+    monitor = DriftMonitor(DriftConfig(ewma_alpha=0.3, threshold=0.2,
+                                       min_observations=3))
+    sched = MultiJobScheduler(chooser, policy="fifo", max_concurrent=2,
+                              drift=monitor, recalibrate=recalibrate)
+    wl = PoissonWorkload(default_catalog(K, P), n_jobs=n_jobs, rate=2.0)
+    stats = sched.run(wl.generate(seed), cluster)
+    post = []
+    for s in stats:
+        d = sched.decisions.get(s.job_id)
+        if d is None or s.submit < t_shift:
+            continue
+        actual = s.finish - s.submit
+        post.append(abs(d.est_jct - actual) / max(actual, 1e-12))
+    return {"post_shift_rel_errs": post, "monitor": monitor.state(),
+            "n_jobs": len(stats),
+            "refit_trace_events": sum(
+                1 for e in cluster.tracer.events if e.kind == "sched_refit"),
+            "banked_regret_s": metrics.registry().counter(
+                "stale_model_regret_seconds_total").value(layer="sim")}
+
+
+def drift(smoke: bool, seed: int) -> dict:
+    n_jobs = 30 if smoke else 60
+    t_shift = 8.0 if smoke else 15.0
+    metrics.reset()
+    stale = _drift_run(n_jobs, seed, t_shift, recalibrate=False)
+    metrics.reset()
+    refit = _drift_run(n_jobs, seed, t_shift, recalibrate=True)
+    stale_mean = float(np.mean(stale["post_shift_rel_errs"]))
+    refit_mean = float(np.mean(refit["post_shift_rel_errs"]))
+    fired = refit["monitor"]["drift_events"] >= 1
+    refits = refit["monitor"]["refits"]
+    print(f"  [drift] shift@{t_shift}s x{SHIFT_FACTOR}: stale mean rel err "
+          f"{stale_mean:.3f} -> refit {refit_mean:.3f} "
+          f"({refits} refits, regret banked "
+          f"{refit['banked_regret_s']:.2f}s)")
+    assert fired, "EWMA drift detector must fire after the regime shift"
+    assert refits >= 1 and refit["refit_trace_events"] == refits
+    assert refit_mean < stale_mean, \
+        (f"online refit must beat the stale model post-shift: "
+         f"{refit_mean:.3f} !< {stale_mean:.3f}")
+    return {"n_jobs": n_jobs, "t_shift": t_shift,
+            "shift_factor": SHIFT_FACTOR,
+            "stale_mean_rel_err": stale_mean,
+            "refit_mean_rel_err": refit_mean,
+            "improvement": stale_mean / max(refit_mean, 1e-12),
+            "drift_fired": fired, "refits": refits,
+            "banked_regret_s": refit["banked_regret_s"],
+            "stale_monitor": stale["monitor"],
+            "refit_monitor": refit["monitor"], "ok": True}
+
+
+# ---------------------------------------------------------------------------
+# Section 4: per-seed determinism of the prediction-error histograms
+# ---------------------------------------------------------------------------
+
+def _jct_snapshot(seed: int, n_jobs: int, t_shift: float) -> str:
+    metrics.reset()
+    _drift_run(n_jobs, seed, t_shift, recalibrate=True)
+    snap = metrics.snapshot()
+    sub = {name: snap[name] for name in sorted(snap)
+           if name.startswith("jct_") or name.startswith("stale_model")}
+    return json.dumps(sub, sort_keys=True)
+
+
+def determinism(smoke: bool, seed: int) -> dict:
+    n_jobs = 20 if smoke else 40
+    t_shift = 6.0 if smoke else 10.0
+    a = _jct_snapshot(seed, n_jobs, t_shift)
+    b = _jct_snapshot(seed, n_jobs, t_shift)
+    sha_a = hashlib.sha256(a.encode()).hexdigest()
+    sha_b = hashlib.sha256(b.encode()).hexdigest()
+    assert a == b, "jct_* metric snapshots must be bit-identical per seed"
+    print(f"  [determinism] jct_* snapshot sha256 {sha_a[:16]}… "
+          f"(bit-identical across reruns)")
+    return {"n_jobs": n_jobs, "sha256": sha_a, "identical": sha_a == sha_b,
+            "ok": True}
+
+
+# ---------------------------------------------------------------------------
+
+def run(smoke: bool = False, iters: int = 5, seed: int = 0,
+        tol: float = TOL_REL, calib_out: str | None = None) -> dict:
+    mesh = make_mesh(MESH_SHAPE, ("rack", "server"))
+    if calib_out is None:
+        calib_out = os.path.join(repo_root(), "calibration",
+                                 "default_cost_model.json")
+    print("# phase_fit: per-phase calibration on the 8-device driver")
+    plan_cache_clear()
+    fit = phase_fit(mesh, smoke, iters, seed, calib_out)
+
+    print("# conformance: simulated JCT vs measured fused wall clock")
+    metrics.reset()
+    conf = conformance(mesh, smoke, iters, seed, tol)
+
+    print("# drift: regime shift -> EWMA fires -> online refit wins")
+    dr = drift(smoke, seed)
+
+    print("# determinism: jct_* histograms bit-identical per seed")
+    det = determinism(smoke, seed)
+
+    return {"mesh": {"shape": list(MESH_SHAPE),
+                     "axes": ["rack", "server"],
+                     "backend": jax.default_backend()},
+            "iters": iters, "phase_fit": fit, "conformance": conf,
+            "drift": dr, "determinism": det}
+
+
+def main() -> None:
+    ap = make_parser(__doc__.splitlines()[0], "BENCH_calibration.json",
+                     default_iters=5)
+    ap.add_argument("--tol", type=float, default=TOL_REL,
+                    help="conformance tolerance band (relative error)")
+    ap.add_argument("--calib-out", default=None,
+                    help="cost-model artifact path (default: "
+                         "calibration/default_cost_model.json)")
+    args = ap.parse_args()
+    report = run(smoke=args.smoke, iters=2 if args.smoke else args.iters,
+                 seed=args.seed, tol=args.tol, calib_out=args.calib_out)
+    emit_report(report, "calibration", args.out, smoke=args.smoke,
+                seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

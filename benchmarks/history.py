@@ -1,0 +1,166 @@
+"""Bench-trajectory ledger: every bench CLI appends its headline scalars
+to ``BENCH_history.jsonl`` (one JSON object per line, append-only), and
+``check`` diffs the newest entry against the previous comparable run so a
+silent perf/quality regression fails loudly in CI.
+
+Wired into :func:`benchmarks._common.emit_report`, so any bench that emits
+the common envelope gets a ledger entry for free; the ledger lives next to
+the emitted ``BENCH_*.json`` (repo root for the committed artifacts, the
+bench's --out directory otherwise — CI smoke runs therefore never touch
+the committed ledger).
+
+    python benchmarks/history.py check [--bench NAME] [--max-regress PCT]
+    python benchmarks/history.py show  [--bench NAME]
+
+``check`` compares only same-(bench, smoke) pairs — a smoke run is never
+diffed against a full run — and passes when no comparable prior entry
+exists (the first run of a new bench cannot regress).  Each tracked scalar
+carries its good direction: ``higher`` (a speedup dropping is a
+regression) or ``lower`` (an error/overhead rising is one).
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+LEDGER_NAME = "BENCH_history.jsonl"
+
+#: headline scalars per bench: dotted path into the envelope -> direction
+#: in which BIGGER is BETTER ("higher") or WORSE ("lower")
+TRACKED: Dict[str, Dict[str, str]] = {
+    "pipeline": {"default_size_speedup": "higher"},
+    "calibration": {
+        "conformance.max_rel_err": "lower",
+        "conformance.mean_rel_err": "lower",
+        "drift.refit_mean_rel_err": "lower",
+        "phase_fit.worst_rel_rmse": "lower",
+    },
+    "obs": {"overhead.overhead_frac": "lower"},
+    "sim": {"scheduler_wins.mean_jct_ratio": "lower"},
+}
+
+
+def _get_path(doc: Dict, dotted: str) -> Optional[float]:
+    cur: object = doc
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    try:
+        return float(cur)                    # type: ignore[arg-type]
+    except (TypeError, ValueError):
+        return None
+
+
+def entry_from_envelope(envelope: Dict, out_path: str) -> Dict:
+    bench = envelope.get("bench", "unknown")
+    scalars = {path: v for path, _ in TRACKED.get(bench, {}).items()
+               if (v := _get_path(envelope, path)) is not None}
+    return {
+        "ts": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        "bench": bench,
+        "smoke": bool(envelope.get("smoke", False)),
+        "seed": envelope.get("seed"),
+        "schema_version": envelope.get("schema_version"),
+        "out": os.path.basename(out_path),
+        "scalars": scalars,
+    }
+
+
+def ledger_path_for(out_path: str) -> str:
+    return os.path.join(os.path.dirname(os.path.abspath(out_path)),
+                        LEDGER_NAME)
+
+
+def append_entry(envelope: Dict, out_path: str,
+                 ledger_path: Optional[str] = None) -> Dict:
+    """Append one ledger line for an emitted report; returns the entry."""
+    path = ledger_path or ledger_path_for(out_path)
+    entry = entry_from_envelope(envelope, out_path)
+    with open(path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    return entry
+
+
+def read_ledger(path: str) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def check(path: str, bench: Optional[str] = None,
+          max_regress_pct: float = 25.0) -> List[str]:
+    """Violations of the regression gate: for every (bench, smoke) group
+    with >= 2 entries, the newest tracked scalars must not be worse than
+    the previous entry's by more than ``max_regress_pct`` percent (in the
+    scalar's bad direction).  Empty list = gate passes."""
+    groups: Dict[Tuple[str, bool], List[Dict]] = {}
+    for e in read_ledger(path):
+        if bench is not None and e.get("bench") != bench:
+            continue
+        groups.setdefault((e.get("bench"), bool(e.get("smoke"))),
+                          []).append(e)
+    violations: List[str] = []
+    for (b, smoke), entries in sorted(groups.items()):
+        if len(entries) < 2:
+            continue
+        prev, last = entries[-2], entries[-1]
+        directions = TRACKED.get(b, {})
+        for key, direction in directions.items():
+            p = prev.get("scalars", {}).get(key)
+            l = last.get("scalars", {}).get(key)
+            if p is None or l is None or p == 0:
+                continue
+            change = (l - p) / abs(p)
+            regress = change < -max_regress_pct / 100.0 \
+                if direction == "higher" else change > max_regress_pct / 100.0
+            if regress:
+                violations.append(
+                    f"{b}{' (smoke)' if smoke else ''}: {key} went "
+                    f"{p:.6g} -> {l:.6g} ({change:+.1%}), worse than the "
+                    f"{max_regress_pct:.0f}% gate in the "
+                    f"'{direction}-is-better' direction")
+    return violations
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    for name in ("check", "show"):
+        sp = sub.add_parser(name)
+        sp.add_argument("--ledger", default=os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            LEDGER_NAME))
+        sp.add_argument("--bench", default=None)
+        if name == "check":
+            sp.add_argument("--max-regress", type=float, default=25.0,
+                            help="max tolerated regression, percent")
+    args = ap.parse_args(argv)
+    if args.cmd == "show":
+        for e in read_ledger(args.ledger):
+            if args.bench is None or e.get("bench") == args.bench:
+                print(json.dumps(e, sort_keys=True))
+        return
+    violations = check(args.ledger, bench=args.bench,
+                       max_regress_pct=args.max_regress)
+    for v in violations:
+        print(f"REGRESSION: {v}", file=sys.stderr)
+    if violations:
+        sys.exit(1)
+    print("bench-trajectory gate: OK "
+          f"({len(read_ledger(args.ledger))} ledger entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,8 +15,14 @@ import argparse
 import sys
 import traceback
 
-from . import (faults_bench, obs_bench, roofline_report, scale_bench,
-               shuffle_bench, table1_costs, table2_locality)
+from . import (calibration_bench, faults_bench, obs_bench, roofline_report,
+               scale_bench, shuffle_bench, table1_costs, table2_locality)
+
+
+def _obs_report() -> None:
+    from repro.obs.report import main as report_main
+    report_main([])
+
 
 SECTIONS = {
     "table1": table1_costs.main,
@@ -26,6 +32,8 @@ SECTIONS = {
     "scale": scale_bench.main,
     "faults": faults_bench.main,
     "obs": obs_bench.main,
+    "calibration": calibration_bench.main,
+    "report": _obs_report,
 }
 
 

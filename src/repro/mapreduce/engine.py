@@ -49,6 +49,7 @@ from ..core.resolvable import resolvable_assignment
 from ..core.shuffle_plan import count_plan, make_plan
 from ..distributed.meshes import shard_map
 from ..obs.bytes import plan_rack_bytes, reconcile, record_rack_bytes
+from ..obs.metrics import refresh_cache_metrics
 from ..obs.tracing import get_tracer, spans_from_phase_timings
 
 
@@ -234,11 +235,13 @@ def run_job_distributed(job: MapReduceJob, subfiles: np.ndarray,
     _validate_mesh(mesh, p)
     if faults is not None:
         from .recovery import run_with_recovery
-        return run_with_recovery(job, subfiles, p, mesh, faults,
-                                 multicast=multicast,
-                                 combine_impl=combine_impl,
-                                 placement=placement,
-                                 scheme_family=scheme_family)
+        res = run_with_recovery(job, subfiles, p, mesh, faults,
+                                multicast=multicast,
+                                combine_impl=combine_impl,
+                                placement=placement,
+                                scheme_family=scheme_family)
+        refresh_cache_metrics()
+        return res
     perm = getattr(placement, "perm", placement)
     tracer = get_tracer()
     with tracer.span("plan_compile", kind="engine_phase",
@@ -275,6 +278,8 @@ def run_job_distributed(job: MapReduceJob, subfiles: np.ndarray,
                            scheme, scheme_family, layer="engine")
     reconcile(rb.intra_total, rb.cross_total, p, scheme, d=job.d,
               check=False)
+    # cache gauges stay current in snapshots without a manual pull
+    refresh_cache_metrics()
     return JobResult(final, c.intra, c.cross, scheme,
                      intra_rack_bytes=rb.intra_total,
                      cross_rack_bytes=rb.cross_total)

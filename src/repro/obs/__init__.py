@@ -15,20 +15,26 @@ scheduler import obs directly, and core's cache counters are pulled in
 lazily via :func:`repro.obs.metrics.collect_cache_metrics`.
 """
 from . import bytes  # noqa: A004 - module name mirrors the instrument
-from . import metrics, tracing
+from . import drift, metrics, report, tracing
 from .bytes import (ByteReconciliationError, RackBytes, closed_form_bytes,
                     degraded_rack_bytes, plan_rack_bytes, reconcile,
                     record_rack_bytes)
+from .drift import DriftConfig, DriftMonitor, record_prediction
 from .metrics import (Counter, Gauge, Histogram, LabelCardinalityError,
-                      MetricsRegistry, collect_cache_metrics)
+                      MetricsRegistry, collect_cache_metrics,
+                      refresh_cache_metrics)
+from .report import build_report, render_html, render_markdown, write_report
 from .tracing import (TraceEvent, Tracer, enable_tracing, get_tracer,
                       spans_from_phase_timings, to_chrome_trace, to_jsonl,
                       validate_chrome_trace)
 
 __all__ = [
-    "metrics", "tracing", "bytes",
+    "metrics", "tracing", "bytes", "drift", "report",
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "LabelCardinalityError", "collect_cache_metrics",
+    "refresh_cache_metrics",
+    "DriftConfig", "DriftMonitor", "record_prediction",
+    "build_report", "render_markdown", "render_html", "write_report",
     "TraceEvent", "Tracer", "get_tracer", "enable_tracing",
     "spans_from_phase_timings", "to_jsonl", "to_chrome_trace",
     "validate_chrome_trace",

@@ -262,11 +262,9 @@ def reset() -> None:
 # Cache collectors: pull the existing one-off counters into the registry
 # ---------------------------------------------------------------------------
 
-def collect_cache_metrics(reg: Optional[MetricsRegistry] = None
-                          ) -> Dict[str, Dict[str, object]]:
+def refresh_cache_metrics(reg: Optional[MetricsRegistry] = None) -> None:
     """Mirror the plan-cache and degraded-cache introspection counters into
-    ``reg`` (default registry) under the unified schema, and return the
-    registry snapshot.
+    ``reg`` (default registry) under the unified schema.
 
     Gauges (they mirror cumulative upstream state, they do not own it):
 
@@ -278,6 +276,9 @@ def collect_cache_metrics(reg: Optional[MetricsRegistry] = None
         ``degraded_cache_size{kind=current|max}`` — the bounded side LRU of
         :func:`repro.core.degraded.degraded_cache_info`.
 
+    Called automatically at every engine ``JobResult`` emission and sim job
+    completion, so snapshots carry current cache state without callers
+    pulling it by hand; call it directly to refresh outside a job boundary.
     Imported lazily so :mod:`repro.obs.metrics` itself stays dependency-free
     (and importable before jax is available).
     """
@@ -306,6 +307,15 @@ def collect_cache_metrics(reg: Optional[MetricsRegistry] = None
                       "degraded-plan side-cache occupancy")
     dsize.set(dinfo.currsize, kind="current")
     dsize.set(-1 if dinfo.maxsize is None else dinfo.maxsize, kind="max")
+
+
+def collect_cache_metrics(reg: Optional[MetricsRegistry] = None
+                          ) -> Dict[str, Dict[str, object]]:
+    """:func:`refresh_cache_metrics` plus the refreshed registry snapshot
+    (the original pull-style entry point, kept for callers that want the
+    snapshot in one call)."""
+    reg = reg if reg is not None else _REGISTRY
+    refresh_cache_metrics(reg)
     return reg.snapshot()
 
 
@@ -313,5 +323,5 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "LabelCardinalityError", "DEFAULT_BUCKETS", "DEFAULT_MAX_LABEL_SETS",
     "registry", "counter", "gauge", "histogram", "snapshot", "reset",
-    "collect_cache_metrics",
+    "refresh_cache_metrics", "collect_cache_metrics",
 ]

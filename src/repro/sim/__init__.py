@@ -7,6 +7,10 @@ recipe, scheduler policies and scenario catalog, and docs/faults.md for
 seeded crash injection (:meth:`ClusterSim.inject_crash` /
 :class:`repro.resilience.FaultInjector`) and recovery pricing.
 """
+from .calibration import (ConformanceModel, calibrate_with_residuals,
+                          conformance_report, fit_conformance,
+                          load_cost_model, load_default_cost_model,
+                          measurement_row_from_stats, save_cost_model)
 from .cluster import (ClusterSim, CostModel, DeterministicSlowdown,
                       ExponentialTail, JobStats, MapTask, MapTaskAttempt,
                       NoStragglers, PhaseCoeffs, RackCorrelated,
@@ -21,6 +25,9 @@ from .workload import (BurstyWorkload, DiurnalWorkload, JOB_ZOO, JobSpec,
                        valid_subfile_counts)
 
 __all__ = [
+    "ConformanceModel", "calibrate_with_residuals", "conformance_report",
+    "fit_conformance", "load_cost_model", "load_default_cost_model",
+    "measurement_row_from_stats", "save_cost_model",
     "ClusterSim", "CostModel", "DeterministicSlowdown", "ExponentialTail",
     "JobStats", "MapTask", "MapTaskAttempt", "NoStragglers", "PhaseCoeffs",
     "RackCorrelated", "StragglerModel", "TaskMapPhase", "calibrate",

@@ -135,6 +135,11 @@ def calibrate(measurements: Sequence[Dict[str, object]]) -> CostModel:
     return CostModel(**fitted)
 
 
+#: envelope version of ``BENCH_pipeline.json`` this adapter understands
+#: (written by ``benchmarks/_common.emit_report`` — bump together)
+PIPELINE_BENCH_SCHEMA_VERSION = 1
+
+
 def measurements_from_pipeline_bench(report: Dict) -> List[Dict[str, object]]:
     """Adapt ``BENCH_pipeline.json`` rows into :func:`calibrate` rows.
 
@@ -143,7 +148,20 @@ def measurements_from_pipeline_bench(report: Dict) -> List[Dict[str, object]]:
     moves the r-fold replicated packed tensor (work r*N*Q*d); the fused
     ``shuffle_reduce`` phase is not separable there — use
     ``measure_phase_timings`` for reduce calibration.
+
+    The report must carry the benchmark envelope of the version this
+    adapter understands — a silent schema drift here would mis-calibrate
+    every downstream simulation, so an unknown ``schema_version`` raises.
     """
+    ver = report.get("schema_version")
+    if ver != PIPELINE_BENCH_SCHEMA_VERSION:
+        raise ValueError(
+            f"BENCH_pipeline report carries schema_version={ver!r}, but "
+            f"this adapter understands version "
+            f"{PIPELINE_BENCH_SCHEMA_VERSION}. Regenerate the artifact "
+            f"with `PYTHONPATH=src python benchmarks/pipeline_bench.py` "
+            f"(or update measurements_from_pipeline_bench for the new "
+            f"envelope).")
     rows = []
     for x in report.get("results", []):
         N, Q, d, r = x["N"], x["Q"], x["d"], x["r"]
@@ -1182,6 +1200,8 @@ class ClusterSim:
                     family=fam, layer="sim")
             tot.inc(job.bytes_cross, tier="cross", scheme=job.scheme,
                     family=fam, layer="sim")
+            # cache gauges stay current in snapshots without a manual pull
+            obs_metrics.refresh_cache_metrics()
             self._trace("job_done", (job.job_id, job.scheme, job.params.r))
             if self.on_job_done is not None:
                 self.on_job_done(stats)

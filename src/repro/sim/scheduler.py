@@ -21,7 +21,8 @@ one (scheme, r).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -30,7 +31,8 @@ from ..core.params import SchemeParams
 from ..core.plan_registry import family_of_scheme
 from ..core.shuffle_plan import scheme_stage_traffic
 from ..obs import metrics as obs_metrics
-from .cluster import ClusterSim, CostModel, JobStats, phase_work
+from ..obs.drift import DriftMonitor
+from .cluster import ClusterSim, CostModel, JobStats, calibrate, phase_work
 from .network import ROOT, tor
 from .workload import JobSpec
 
@@ -352,7 +354,24 @@ class MultiJobScheduler:
     capacity frees up)."""
 
     def __init__(self, chooser: SchemeChooser, policy: str = "fifo",
-                 max_concurrent: int = 4) -> None:
+                 max_concurrent: int = 4,
+                 drift: Optional[DriftMonitor] = None,
+                 recalibrate: bool = False, refit_window: int = 16,
+                 refit_min_rows: int = 4) -> None:
+        """Every admission's predicted JCT (:class:`Decision.est_jct`) is
+        reconciled against the completed job's actual JCT through
+        ``drift`` (a :class:`repro.obs.DriftMonitor`; a default
+        ``layer='sim'`` monitor is built when None) — the registry's
+        ``jct_*`` histograms/gauges always see the stream.
+
+        ``recalibrate=True`` closes the loop online: completed jobs'
+        barrier phase times are kept as calibration rows (the last
+        ``refit_window`` of them), and when the monitor's EWMA crosses its
+        drift threshold the chooser's cost model is refitted from that
+        live stream via :func:`repro.sim.calibrate` (straggler inflation
+        is absorbed into the refitted betas).  The stale model's regret is
+        banked by the monitor at each refit.  Default False: no behavior
+        change, telemetry only."""
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}")
         if max_concurrent < 1:
@@ -360,12 +379,17 @@ class MultiJobScheduler:
         self.chooser = chooser
         self.policy = policy
         self.max_concurrent = max_concurrent
+        self.drift = drift if drift is not None else DriftMonitor()
+        self.recalibrate = recalibrate
+        self.refit_min_rows = int(refit_min_rows)
         self.decisions: Dict[int, Decision] = {}
         self._queue: List[Tuple[int, JobSpec]] = []
         self._running = 0
         self._seq = 0
         self._service_by_kind: Dict[str, float] = {}
         self._expected_map: Dict[int, float] = {}
+        self._specs: Dict[int, JobSpec] = {}
+        self._rows: Deque[Dict] = deque(maxlen=int(refit_window))
 
     # ---- policy ordering ---------------------------------------------------
 
@@ -408,10 +432,35 @@ class MultiJobScheduler:
         if rp is not None:
             # feed the observed map slowdown back into the straggler fit
             rp.observe(stats, self._expected_map.pop(stats.job_id, 0.0))
+        self._reconcile(stats, cluster)
         cluster.tracer.event("sched_drain", job_id=stats.job_id,
                              data=(self._running, len(self._queue)),
                              policy=self.policy)
         self._drain(cluster)
+
+    def _reconcile(self, stats: JobStats, cluster: ClusterSim) -> None:
+        """Predicted-vs-actual JCT for one completion; refit on drift."""
+        d = self.decisions.get(stats.job_id)
+        spec = self._specs.pop(stats.job_id, None)
+        if d is None:
+            return
+        # est_jct was priced AT ADMISSION (= submit time), so the actual
+        # it predicts is finish - submit, not the arrival-based stats.jct
+        fired = self.drift.observe(d.est_jct, stats.finish - stats.submit,
+                                   scheme=d.scheme)
+        if not self.recalibrate or spec is None:
+            return
+        from .calibration import measurement_row_from_stats
+        p = SchemeParams(K=self.chooser.K, P=cluster.topology.P,
+                         Q=spec.Q, N=spec.N, r=d.r)
+        self._rows.append(
+            measurement_row_from_stats(stats, p, d.scheme, spec.d))
+        if fired and len(self._rows) >= self.refit_min_rows:
+            self.chooser.cost_model = calibrate(list(self._rows))
+            self.drift.refitted()
+            cluster.tracer.event("sched_refit", job_id=stats.job_id,
+                                 data=(len(self._rows),),
+                                 policy=self.policy)
 
     def _drain(self, cluster: ClusterSim) -> None:
         while self._queue and self._running < self.max_concurrent:
@@ -422,6 +471,7 @@ class MultiJobScheduler:
                                     placement=d.placement,
                                     speculation=d.speculation)
             self.decisions[job_id] = d
+            self._specs[job_id] = spec
             # no cache_hit label: it reflects process-global plan-cache
             # state, which would break per-seed bit-identical traces
             cluster.tracer.event("sched_admit", job_id=job_id,

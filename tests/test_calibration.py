@@ -1,0 +1,483 @@
+"""Sim-to-metal conformance observatory tests: the calibrated cost-model
+artifact (save/load/versioning + the committed default), prediction-drift
+monitoring and the scheduler's online refit loop, the JCT-level conformance
+fit the simulator reproduces exactly, the bench-trajectory ledger gate, and
+the standalone observatory report renderers."""
+import json
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from benchmarks import history
+from repro.core.params import SchemeParams
+from repro.obs import metrics
+from repro.obs.drift import DriftConfig, DriftMonitor, record_prediction
+from repro.obs.report import (build_report, render_html, render_markdown,
+                              write_report)
+from repro.sim import (ClusterSim, ConformanceModel, CostModel,
+                       DeterministicSlowdown, MultiJobScheduler, PhaseCoeffs,
+                       PoissonWorkload, RackTopology, SchemeChooser,
+                       calibrate, calibrate_with_residuals,
+                       conformance_report, default_catalog, fit_conformance,
+                       load_cost_model, load_default_cost_model,
+                       measurement_row_from_stats,
+                       measurements_from_pipeline_bench, phase_work,
+                       save_cost_model, simulate_single_job)
+from repro.sim.calibration import (COST_MODEL_SCHEMA_VERSION,
+                                   conformance_features, fit_residuals)
+
+REPO_ROOT = pathlib.Path(__file__).parent.parent
+
+
+# ---------------------------------------------------------------------------
+# record_prediction + DriftMonitor
+# ---------------------------------------------------------------------------
+
+def test_record_prediction_returns_relative_error_and_registers():
+    reg = metrics.MetricsRegistry()
+    rel = record_prediction(12.0, 10.0, layer="sim", reg=reg, scheme="hyb")
+    assert rel == pytest.approx(0.2)
+    snap = reg.snapshot()
+    assert snap["jct_predictions_total"]["samples"]
+    assert snap["jct_prediction_error_seconds"]["type"] == "histogram"
+    assert snap["jct_prediction_relative_error"]["type"] == "histogram"
+    assert reg.counter("jct_predictions_total").value(
+        layer="sim", scheme="hyb") == 1.0
+
+
+def test_drift_monitor_warms_up_before_firing():
+    reg = metrics.MetricsRegistry()
+    mon = DriftMonitor(DriftConfig(ewma_alpha=0.5, threshold=0.1,
+                                   min_observations=3), reg=reg)
+    # large errors, but the warm-up gate holds the first two back
+    assert mon.observe(2.0, 1.0) is False
+    assert mon.observe(2.0, 1.0) is False
+    assert mon.observe(2.0, 1.0) is True
+    assert mon.drift_events == 1
+    assert reg.counter("jct_drift_events_total").value(layer="sim") == 1.0
+
+
+def test_drift_monitor_stays_quiet_on_accurate_predictions():
+    reg = metrics.MetricsRegistry()
+    mon = DriftMonitor(DriftConfig(threshold=0.25, min_observations=2),
+                       reg=reg)
+    assert not any(mon.observe(1.0 + 1e-3, 1.0) for _ in range(20))
+    assert mon.drift_events == 0 and mon.total_observations == 20
+
+
+def test_drift_monitor_refit_banks_regret_and_restarts_warmup():
+    reg = metrics.MetricsRegistry()
+    mon = DriftMonitor(DriftConfig(min_observations=1, threshold=0.1),
+                       reg=reg)
+    mon.observe(3.0, 1.0)                          # regret 2.0, fires
+    mon.observe(2.0, 1.0)                          # regret 3.0 total
+    mon.refitted()
+    assert mon.refits == 1 and mon.observations == 0 and mon.ewma is None
+    assert mon.regret_s == 0.0
+    assert reg.counter("stale_model_regret_seconds_total").value(
+        layer="sim") == pytest.approx(3.0)
+    assert reg.gauge("jct_model_regret_seconds").value(layer="sim") == 0.0
+    state = mon.state()
+    assert state["refits"] == 1 and state["total_observations"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Per-phase fit + artifact round-trip
+# ---------------------------------------------------------------------------
+
+def _affine_rows(alpha=2e-3, beta=4e-8):
+    return [{"work": {"map": w, "reduce": w / 2},
+             "seconds": {"map": alpha + beta * w,
+                         "reduce": alpha + 2 * beta * (w / 2)}}
+            for w in (1e4, 1e5, 1e6, 1e7)]
+
+
+def test_calibrate_with_residuals_reports_near_zero_on_affine_data():
+    model, res = calibrate_with_residuals(_affine_rows())
+    assert model.map.beta == pytest.approx(4e-8, rel=1e-6)
+    assert res["map"]["n"] == 4
+    assert res["map"]["rel_rmse"] == pytest.approx(0.0, abs=1e-9)
+    assert res["reduce"]["max_abs_err_s"] == pytest.approx(0.0, abs=1e-9)
+
+
+def test_fit_residuals_flags_a_wrong_model():
+    rows = _affine_rows()
+    wrong = CostModel(map=PhaseCoeffs(0.0, 1e-6))
+    res = fit_residuals(wrong, rows)
+    assert res["map"]["rel_rmse"] > 0.5
+
+
+def test_cost_model_artifact_round_trip(tmp_path):
+    model, res = calibrate_with_residuals(_affine_rows())
+    path = tmp_path / "cm.json"
+    doc = save_cost_model(model, str(path), residuals=res,
+                          provenance={"bench": "unit-test"})
+    assert doc["schema_version"] == COST_MODEL_SCHEMA_VERSION
+    loaded, doc2 = load_cost_model(str(path))
+    assert loaded == model
+    assert doc2["provenance"]["bench"] == "unit-test"
+    assert doc2["residuals"]["map"]["n"] == 4
+
+
+def test_cost_model_loader_rejects_unknown_schema_version(tmp_path):
+    path = tmp_path / "cm.json"
+    path.write_text(json.dumps({"schema_version": 999, "cost_model": {}}))
+    with pytest.raises(ValueError, match="schema_version=999"):
+        load_cost_model(str(path))
+
+
+def test_committed_default_cost_model_loads():
+    model, doc = load_default_cost_model()
+    assert model.map.beta > 0 and model.reduce.beta > 0
+    prov = doc["provenance"]
+    assert prov["bench"] == "calibration_bench.phase_fit"
+    assert prov["mesh_shape"] == [4, 2] and not prov["smoke"]
+    assert doc["residuals"]["map"]["n"] >= 4
+
+
+# ---------------------------------------------------------------------------
+# Live measurement rows from completed sim jobs
+# ---------------------------------------------------------------------------
+
+def _single_job_stats(slowdown=1.0, d=64):
+    topo = RackTopology(P=4, cross_bw=2e5, intra_bw=2e6)
+    cm = CostModel(map=PhaseCoeffs(1e-3, 5e-7), pack=PhaseCoeffs(0.0, 2e-7),
+                   reduce=PhaseCoeffs(1e-3, 5e-7))
+    from repro.sim import JobSpec
+    spec = JobSpec("j", 96, 16, d, arrival=0.0)
+    stragglers = (DeterministicSlowdown((slowdown,) * 8)
+                  if slowdown != 1.0 else None)
+    return simulate_single_job(spec, topo, 8, "hybrid", 2, cost_model=cm,
+                               stragglers=stragglers)
+
+
+def test_measurement_row_from_stats_feeds_calibrate():
+    stats = _single_job_stats()
+    p = SchemeParams(K=8, P=4, Q=16, N=96, r=2)
+    row = measurement_row_from_stats(stats, p, "hybrid", 64)
+    assert set(row["work"]) == set(row["seconds"])
+    assert row["work"]["map"] == phase_work(p, "hybrid", 64)["map"]
+    model = calibrate([row])
+    assert model.map.beta >= 0.0
+
+
+def test_refit_from_straggler_rows_absorbs_inflation():
+    p = SchemeParams(K=8, P=4, Q=16, N=96, r=2)
+    rows = [measurement_row_from_stats(_single_job_stats(3.0, d), p,
+                                       "hybrid", d) for d in (32, 64, 128)]
+    refit = calibrate(rows)
+    base = CostModel(map=PhaseCoeffs(1e-3, 5e-7))
+    # a uniform 3x slowdown must show up as ~3x the compute rate
+    assert refit.map.beta == pytest.approx(3 * base.map.beta, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler reconciliation + online refit
+# ---------------------------------------------------------------------------
+
+def _scheduled_run(reg, recalibrate, n_jobs=24, threshold=0.2,
+                   shift_at=None, seed=7):
+    topo = RackTopology(P=4, cross_bw=2e5, intra_bw=2e6)
+    cm = CostModel(map=PhaseCoeffs(1e-3, 5e-7), pack=PhaseCoeffs(5e-4, 2e-7),
+                   reduce=PhaseCoeffs(1e-3, 5e-7))
+    cluster = ClusterSim(topo, K=8, cost_model=cm, seed=seed)
+    if shift_at is not None:
+        cluster.at(shift_at, lambda: setattr(
+            cluster, "stragglers", DeterministicSlowdown((3.0,) * 8)))
+    chooser = SchemeChooser(8, cost_model=cm, compile_real_plans=False)
+    mon = DriftMonitor(DriftConfig(ewma_alpha=0.3, threshold=threshold,
+                                   min_observations=3), reg=reg)
+    sched = MultiJobScheduler(chooser, max_concurrent=2, drift=mon,
+                              recalibrate=recalibrate)
+    wl = PoissonWorkload(default_catalog(8, 4), n_jobs=n_jobs, rate=2.0)
+    stats = sched.run(wl.generate(seed), cluster)
+    return stats, sched, mon, cluster
+
+
+def test_scheduler_reconciles_every_admission():
+    reg = metrics.MetricsRegistry()
+    stats, sched, mon, _ = _scheduled_run(reg, recalibrate=False)
+    assert mon.total_observations == len(stats) == 24
+    assert reg.counter("jct_predictions_total").value(
+        layer="sim", scheme="hybrid") + reg.counter(
+        "jct_predictions_total").value(
+        layer="sim", scheme="coded") + reg.counter(
+        "jct_predictions_total").value(
+        layer="sim", scheme="uncoded") + reg.counter(
+        "jct_predictions_total").value(
+        layer="sim", scheme="hybrid_resolvable") == float(len(stats))
+
+
+def test_scheduler_online_refit_fires_and_rewrites_cost_model():
+    reg = metrics.MetricsRegistry()
+    stats, sched, mon, cluster = _scheduled_run(reg, recalibrate=True,
+                                                shift_at=6.0)
+    assert mon.refits >= 1 and mon.drift_events >= 1
+    refit_events = [e for e in cluster.tracer.events
+                    if e.kind == "sched_refit"]
+    assert len(refit_events) == mon.refits
+    # the chooser's model was rewritten toward the 3x regime
+    assert sched.chooser.cost_model.map.beta > 5e-7
+    assert reg.counter("stale_model_regret_seconds_total").value(
+        layer="sim") > 0.0
+
+
+def test_scheduler_without_recalibrate_never_refits_or_traces():
+    reg = metrics.MetricsRegistry()
+    _, sched, mon, cluster = _scheduled_run(reg, recalibrate=False,
+                                            shift_at=6.0)
+    assert mon.refits == 0
+    assert not [e for e in cluster.tracer.events if e.kind == "sched_refit"]
+    assert sched.chooser.cost_model.map.beta == pytest.approx(5e-7)
+
+
+# ---------------------------------------------------------------------------
+# JCT-level conformance fit: the simulator reproduces the linear predictor
+# ---------------------------------------------------------------------------
+
+def _synthetic_cells(theta=(2e-3, 3e-7, 5e-7, 2e-6, 1e-6)):
+    cells = []
+    for n in (48, 96, 192):
+        for r in (1, 2, 3):
+            p = SchemeParams(K=8, P=4, Q=16, N=n, r=r)
+            y = float(np.dot(np.asarray(theta),
+                             conformance_features(p, "hybrid", 64)))
+            cells.append({"p": p, "scheme": "hybrid", "d": 64,
+                          "measured_s": y})
+    return cells
+
+
+def test_fit_conformance_recovers_synthetic_predictions():
+    cells = _synthetic_cells()
+    model = fit_conformance(cells)
+    for c in cells:
+        pred = model.predict(c["p"], "hybrid", 64)
+        assert pred == pytest.approx(c["measured_s"], rel=1e-9)
+
+
+def test_sim_reproduces_the_conformance_predictor_exactly():
+    model = fit_conformance(_synthetic_cells())
+    rows = conformance_report(model, _synthetic_cells(), via_sim=True)
+    for row in rows:
+        assert row["rel_err"] < 1e-9
+    lin = conformance_report(model, _synthetic_cells(), via_sim=False)
+    for a, b in zip(rows, lin):
+        assert a["predicted_s"] == pytest.approx(b["predicted_s"], rel=1e-9)
+
+
+def test_conformance_model_with_zero_network_coeffs_is_compute_bound():
+    model = ConformanceModel((1e-3, 2e-7, 3e-7, 0.0, 0.0))
+    p = SchemeParams(K=8, P=4, Q=16, N=96, r=2)
+    stats = model.sim_stats(p, "hybrid", 64)
+    assert stats.jct == pytest.approx(model.predict(p, "hybrid", 64),
+                                      rel=1e-9)
+
+
+def test_fit_conformance_rejects_empty_cells():
+    with pytest.raises(ValueError):
+        fit_conformance([])
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-bench envelope validation + the committed artifact
+# ---------------------------------------------------------------------------
+
+def test_pipeline_bench_adapter_rejects_missing_schema_version():
+    with pytest.raises(ValueError, match="schema_version=None"):
+        measurements_from_pipeline_bench({"results": []})
+
+
+def test_pipeline_bench_adapter_rejects_future_schema_version():
+    with pytest.raises(ValueError, match="schema_version=99"):
+        measurements_from_pipeline_bench({"schema_version": 99,
+                                          "results": []})
+
+
+def test_committed_pipeline_bench_feeds_calibrate():
+    with open(REPO_ROOT / "BENCH_pipeline.json") as f:
+        report = json.load(f)
+    rows = measurements_from_pipeline_bench(report)
+    assert len(rows) >= 3
+    model = calibrate(rows)
+    assert model.map.beta > 0 and model.pack.beta >= 0
+
+
+def test_committed_calibration_bench_pins_conformance_band():
+    with open(REPO_ROOT / "BENCH_calibration.json") as f:
+        report = json.load(f)
+    assert report["schema_version"] == 1 and not report["smoke"]
+    conf = report["conformance"]
+    assert conf["ok"] and conf["max_rel_err"] <= conf["tol_rel"]
+    drift = report["drift"]
+    assert drift["drift_fired"] and drift["refits"] >= 1
+    assert drift["refit_mean_rel_err"] < drift["stale_mean_rel_err"]
+    assert report["determinism"]["identical"]
+
+
+# ---------------------------------------------------------------------------
+# Bench-trajectory ledger
+# ---------------------------------------------------------------------------
+
+def _envelope(max_rel=0.1, smoke=False):
+    return {"schema_version": 1, "bench": "calibration", "smoke": smoke,
+            "seed": 0, "conformance": {"max_rel_err": max_rel,
+                                       "mean_rel_err": max_rel / 2},
+            "drift": {"refit_mean_rel_err": 0.2},
+            "phase_fit": {"worst_rel_rmse": 0.3}}
+
+
+def test_history_append_and_check_pass_on_stable_scalars(tmp_path):
+    out = tmp_path / "BENCH_calibration.json"
+    for _ in range(2):
+        history.append_entry(_envelope(0.10), str(out))
+    ledger = history.ledger_path_for(str(out))
+    entries = history.read_ledger(ledger)
+    assert len(entries) == 2
+    assert entries[0]["scalars"]["conformance.max_rel_err"] == 0.10
+    assert history.check(ledger) == []
+
+
+def test_history_check_fails_on_regression_beyond_gate(tmp_path):
+    out = tmp_path / "BENCH_calibration.json"
+    history.append_entry(_envelope(0.10), str(out))
+    history.append_entry(_envelope(0.20), str(out))      # +100% worse
+    violations = history.check(history.ledger_path_for(str(out)))
+    assert len(violations) == 2          # max_rel_err and mean_rel_err
+    assert "conformance.max_rel_err" in violations[0]
+
+
+def test_history_check_never_compares_smoke_with_full(tmp_path):
+    out = tmp_path / "BENCH_calibration.json"
+    history.append_entry(_envelope(0.10, smoke=False), str(out))
+    history.append_entry(_envelope(0.50, smoke=True), str(out))
+    assert history.check(history.ledger_path_for(str(out))) == []
+
+
+def test_history_check_respects_higher_is_better_direction(tmp_path):
+    out = tmp_path / "BENCH_pipeline.json"
+    env = {"schema_version": 1, "bench": "pipeline", "smoke": False,
+           "default_size_speedup": 3.0}
+    history.append_entry(env, str(out))
+    history.append_entry({**env, "default_size_speedup": 1.5}, str(out))
+    violations = history.check(history.ledger_path_for(str(out)))
+    assert len(violations) == 1 and "default_size_speedup" in violations[0]
+    # improvement in the same direction is never a violation
+    history.append_entry({**env, "default_size_speedup": 4.0}, str(out))
+    assert history.check(history.ledger_path_for(str(out))) == []
+
+
+def test_history_cli_check_exits_nonzero_on_regression(tmp_path):
+    out = tmp_path / "BENCH_calibration.json"
+    history.append_entry(_envelope(0.10), str(out))
+    history.append_entry(_envelope(0.30), str(out))
+    proc = subprocess.run(
+        [sys.executable, str(REPO_ROOT / "benchmarks" / "history.py"),
+         "check", "--ledger", history.ledger_path_for(str(out))],
+        capture_output=True, text=True)
+    assert proc.returncode == 1 and "REGRESSION" in proc.stderr
+
+
+def test_committed_ledger_passes_the_gate():
+    assert history.check(str(REPO_ROOT / history.LEDGER_NAME)) == []
+
+
+# ---------------------------------------------------------------------------
+# Observatory report
+# ---------------------------------------------------------------------------
+
+def _populated_snapshot():
+    reg = metrics.MetricsRegistry()
+    record_prediction(1.2, 1.0, layer="sim", reg=reg)
+    record_prediction(0.9, 1.0, layer="engine", reg=reg)
+    reg.counter("rack_pair_bytes_total").inc(64, src=0, dst=1, layer="sim")
+    reg.counter("rack_pair_bytes_total").inc(32, src=1, dst=0, layer="sim")
+    reg.gauge("jct_drift_ewma").set(0.12, layer="sim")
+    return reg.snapshot()
+
+
+def test_build_report_sections():
+    rep = build_report(_populated_snapshot())
+    assert {h["name"] for h in rep["prediction_hists"]} == {
+        "jct_prediction_error_seconds", "jct_prediction_relative_error"}
+    assert rep["rack_matrices"]["sim"][0][1] == 64.0
+    assert rep["rack_matrices"]["sim"][1][0] == 32.0
+    assert rep["drift_gauges"][0]["value"] == pytest.approx(0.12)
+
+
+def test_render_markdown_and_html_carry_the_content():
+    rep = build_report(_populated_snapshot(), title="Unit report")
+    md = render_markdown(rep)
+    assert "# Unit report" in md
+    assert "jct_prediction_relative_error" in md
+    assert "Per-rack byte matrices" in md
+    html = render_html(rep)
+    assert html.startswith("<!doctype html>")
+    assert "jct_prediction_relative_error" in html
+    assert "Trace summary" in html
+
+
+def test_write_report_picks_format_by_extension(tmp_path):
+    rep = build_report(_populated_snapshot())
+    md_path = write_report(str(tmp_path / "r.md"), rep)
+    html_path = write_report(str(tmp_path / "r.html"), rep)
+    assert (tmp_path / "r.md").read_text().startswith("# ")
+    assert (tmp_path / "r.html").read_text().startswith("<!doctype html>")
+    assert md_path.endswith(".md") and html_path.endswith(".html")
+
+
+def test_report_cli_demo_writes_both_formats(tmp_path):
+    from repro.obs.report import main as report_main
+    report_main(["--out-dir", str(tmp_path), "--seed", "3"])
+    md = (tmp_path / "obs_report.md").read_text()
+    assert "jct_prediction" in md                # demo schedules + reconciles
+    assert (tmp_path / "obs_report.html").exists()
+
+
+# ---------------------------------------------------------------------------
+# Engine traces export to Perfetto + cache gauges refresh at job boundaries
+# ---------------------------------------------------------------------------
+
+def _run_engine_job():
+    from repro.distributed.meshes import make_mesh
+    from repro.mapreduce.engine import run_job_distributed
+    from repro.mapreduce.jobs import histogram_job
+
+    p = SchemeParams(K=1, P=1, Q=4, N=6, r=1)
+    mesh = make_mesh((1, 1), ("rack", "server"))
+    rng = np.random.default_rng(0)
+    subs = rng.integers(0, 1 << 16, size=(p.N, 64)).astype(np.int32)
+    return run_job_distributed(histogram_job(), subs, p, mesh)
+
+
+def test_engine_trace_exports_valid_perfetto_document():
+    from repro.obs import tracing
+    tracer = tracing.enable_tracing(True)
+    try:
+        _run_engine_job()
+        events = list(tracer.events)
+    finally:
+        tracing.enable_tracing(False)
+    phases = {e.phase for e in events if e.kind == "engine_phase"}
+    assert {"plan_compile", "pack", "map_shuffle_reduce"} <= phases
+    doc = tracing.to_chrome_trace(events)
+    assert tracing.validate_chrome_trace(doc) == len(doc["traceEvents"])
+    assert any(ev["ph"] == "X" for ev in doc["traceEvents"])
+
+
+def test_cache_gauges_refresh_at_engine_job_result():
+    metrics.reset()
+    _run_engine_job()
+    snap = metrics.snapshot()        # no manual collect_cache_metrics pull
+    assert "plan_cache" in snap and snap["plan_cache"]["samples"]
+    assert "plan_cache_size" in snap
+
+
+def test_cache_gauges_refresh_at_sim_job_completion():
+    metrics.reset()
+    _single_job_stats()
+    snap = metrics.snapshot()
+    assert "plan_cache" in snap and snap["plan_cache"]["samples"]
+    assert "degraded_cache" in snap

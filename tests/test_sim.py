@@ -286,7 +286,7 @@ def test_calibrate_recovers_affine_coeffs():
 
 
 def test_calibrate_from_pipeline_bench_rows():
-    report = {"results": [
+    report = {"schema_version": 1, "results": [
         {"N": 96, "Q": 16, "d": 8, "r": 2,
          "legacy": {"phases_s": {"map_to_host": 0.012,
                                  "host_pack_upload": 0.024,
