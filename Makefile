@@ -5,7 +5,7 @@ PYTEST ?= python -m pytest
 
 .PHONY: test test-all bench bench-pipeline bench-sim bench-locality \
 	bench-resilience bench-faults bench-table1 bench-scale bench-obs \
-	bench-calibration bench-history-check obs-report
+	bench-blame bench-calibration bench-history-check obs-report
 
 test:
 	$(PYTEST) -q -m "not slow"
@@ -39,6 +39,9 @@ bench-scale:
 
 bench-obs:
 	PYTHONPATH=src python benchmarks/obs_bench.py
+
+bench-blame:
+	PYTHONPATH=src python benchmarks/blame_bench.py
 
 bench-calibration:
 	PYTHONPATH=src python benchmarks/calibration_bench.py

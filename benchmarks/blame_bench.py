@@ -1,0 +1,300 @@
+"""Blame benchmark: JCT blame-decomposition exactness, cause attribution,
+and telemetry determinism (the critical-path observatory's pin).
+
+Sections (results land in ``BENCH_blame.json``):
+
+  * ``exactness`` — for EVERY paper Table I row x all four schemes (both
+    plan families), a seeded single-job sim run's blame components must
+    sum to the measured JCT (relative residual <= 1e-9; in practice the
+    decomposition telescopes and the residual is ~1e-16), with the
+    zero-contention calibration identity (solo job => contention == 0)
+    asserted on every cell; a contended scheduled run re-checks the law
+    under queueing + link sharing.
+  * ``attribution`` — three seeded cause-injection scenarios, each of
+    which must move blame to the injected cause:
+      - ``skew``: ``rack_bw_scale`` slows one rack's ToR; ``shuffle_intra``
+        blame grows vs the uniform baseline and the slow rack's ToR is the
+        busiest intra link in the telemetry;
+      - ``straggle``: an :class:`repro.sim.ExponentialTail` map tail makes
+        ``map_straggle`` the dominant component;
+      - ``crash``: an injected mid-shuffle crash's ``recovery`` component
+        equals the JCT delta vs the failure-free run (the degraded
+        schedule's full price, to 1e-9 relative);
+    plus a monotonicity sweep: mean contention+queueing blame is
+    nondecreasing in offered load at fixed seed.
+  * ``determinism`` — the network-telemetry dump is byte-identical (sha256)
+    across same-seed reruns, and the golden trace-event stream is
+    byte-identical with telemetry on vs off (observation is free).
+  * ``extract`` — :func:`repro.obs.blame.extract_blame` re-derives every
+    scheduled job's decomposition from the trace stream alone and must
+    agree with the stats-side blame (cross-check raises on mismatch).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import math
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+try:                                                           # noqa: E402
+    from ._common import emit_report, make_parser
+except ImportError:                       # run as a script, not a package
+    from _common import emit_report, make_parser
+
+from repro.core.params import TABLE1_GRID                      # noqa: E402
+from repro.obs import blame as obs_blame                       # noqa: E402
+from repro.obs import metrics                                  # noqa: E402
+from repro.obs.tracing import to_chrome_trace                  # noqa: E402
+from repro.sim import (ClusterSim, CostModel, ExponentialTail,  # noqa: E402
+                       JobSpec, MultiJobScheduler, PhaseCoeffs,
+                       PoissonWorkload, RackTopology, SchemeChooser,
+                       default_catalog)
+
+SCHEMES = ("uncoded", "coded", "hybrid", "hybrid_resolvable")
+RESIDUAL_TOL = 1e-9
+CONTENTION_TOL = 1e-9
+
+# nonzero compute so every component is exercised (zero coeffs would make
+# the law trivially shuffle-only)
+COSTS = CostModel(map=PhaseCoeffs(1e-3, 1e-8),
+                  pack=PhaseCoeffs(5e-4, 5e-9),
+                  reduce=PhaseCoeffs(1e-3, 1e-8))
+
+
+def _rel_residual(stats) -> float:
+    s = math.fsum(stats.blame.values())
+    return abs(stats.jct - s) / max(abs(stats.jct), 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Section 1: exactness law on the Table I grid + under contention
+# ---------------------------------------------------------------------------
+
+def exactness(seed: int, smoke: bool) -> dict:
+    grid = TABLE1_GRID[:2] if smoke else TABLE1_GRID
+    rows = []
+    for (K, P, Q, N, r) in grid:
+        for scheme in SCHEMES:
+            topo = RackTopology(P=P, cross_bw=1e3, intra_bw=1e4)
+            sim = ClusterSim(topo, K, COSTS, seed=seed)
+            sim.submit(JobSpec("exact", N, Q, 2), scheme, r, time=0.0,
+                       check=False)
+            (stats,) = sim.run()
+            res = _rel_residual(stats)
+            contention = abs(stats.blame["contention"])
+            assert res <= RESIDUAL_TOL, \
+                f"({K},{P},{Q},{N},{r}) {scheme}: residual {res:.3e}"
+            assert contention <= CONTENTION_TOL, \
+                f"({K},{P},{Q},{N},{r}) {scheme}: solo-job contention " \
+                f"{contention:.3e} != 0"
+            rows.append({"K": K, "P": P, "Q": Q, "N": N, "r": r,
+                         "scheme": scheme, "jct": stats.jct,
+                         "rel_residual": res, "solo_contention": contention})
+
+    # contended rerun: the law must survive queueing + shared links
+    stats_list = _scheduled_run(seed, n_jobs=8 if smoke else 24, rate=4.0)[2]
+    sched_res = [_rel_residual(s) for s in stats_list if s.blame is not None]
+    assert sched_res and max(sched_res) <= RESIDUAL_TOL
+    out = {"rows": rows, "n_grid": len(rows),
+           "max_rel_residual": max(
+               max(r["rel_residual"] for r in rows), max(sched_res)),
+           "max_solo_contention": max(r["solo_contention"] for r in rows),
+           "scheduled_jobs": len(sched_res),
+           "scheduled_max_rel_residual": max(sched_res)}
+    print(f"  [exactness] {len(rows)} grid cells + {len(sched_res)} "
+          f"scheduled jobs, max rel residual {out['max_rel_residual']:.3e}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Section 2: cause attribution (skew / straggle / crash / load sweep)
+# ---------------------------------------------------------------------------
+
+def _solo_stats(topo: RackTopology, seed: int, telemetry: bool = False,
+                stragglers=None, crash_at: float | None = None,
+                K: int = 8, scheme: str = "hybrid", r: int = 2,
+                costs: CostModel = COSTS):
+    sim = ClusterSim(topo, K, costs, stragglers=stragglers, seed=seed,
+                     telemetry=telemetry)
+    sim.submit(JobSpec("attr", 48, 16, 2), scheme, r, time=0.0)
+    if crash_at is not None:
+        sim.inject_crash(crash_at, [0])
+    (stats,) = sim.run()
+    return stats, sim
+
+
+def attribution_skew(seed: int) -> dict:
+    base = RackTopology(P=4, cross_bw=1e3, intra_bw=1e4)
+    skew = RackTopology(P=4, cross_bw=1e3, intra_bw=1e4,
+                        rack_bw_scale=(0.25, 1.0, 1.0, 1.0))
+    s0, _ = _solo_stats(base, seed)
+    s1, sim1 = _solo_stats(skew, seed, telemetry=True)
+    util = sim1.telemetry.utilization()
+    tor_busy = {k: v["busy_s"] for k, v in util.items()
+                if k.startswith("tor:")}
+    busiest = max(sorted(tor_busy), key=lambda k: tor_busy[k])
+    ratio = s1.blame["shuffle_intra"] / max(s0.blame["shuffle_intra"], 1e-12)
+    assert ratio > 1.5, \
+        f"intra blame did not follow the slow rack (ratio {ratio:.3f})"
+    assert busiest == "tor:0", \
+        f"slowest rack's ToR is not the busiest link ({busiest})"
+    print(f"  [skew] shuffle_intra x{ratio:.2f}, busiest link {busiest}")
+    return {"intra_blame_base": s0.blame["shuffle_intra"],
+            "intra_blame_skew": s1.blame["shuffle_intra"],
+            "intra_blame_ratio": ratio, "busiest_tor": busiest,
+            "tor_busy_s": tor_busy}
+
+
+def attribution_straggle(seed: int) -> dict:
+    topo = RackTopology(P=4, cross_bw=1e6, intra_bw=1e7)  # shuffle ~free
+    # map-heavy coefficients: the injected tail rides on the map barrier,
+    # so the scenario isolates it from pack/reduce serial time
+    costs = CostModel(map=PhaseCoeffs(2e-3, 2e-8),
+                      pack=PhaseCoeffs(1e-4, 1e-9),
+                      reduce=PhaseCoeffs(1e-4, 1e-9))
+    plain, _ = _solo_stats(topo, seed, costs=costs)
+    tail, _ = _solo_stats(topo, seed, stragglers=ExponentialTail(3.0),
+                          costs=costs)
+    rep = obs_blame.blame_report(tail)
+    assert rep.dominant() == "map_straggle", \
+        f"expected map_straggle dominant, got {rep.dominant()}"
+    assert abs(plain.blame["map_straggle"]) < 1e-12
+    share = rep.share("map_straggle")
+    print(f"  [straggle] map_straggle dominant ({share:.1%} of JCT)")
+    return {"dominant": rep.dominant(), "map_straggle_share": share,
+            "map_straggle_s": tail.blame["map_straggle"],
+            "plain_map_straggle_s": plain.blame["map_straggle"]}
+
+
+def attribution_crash(seed: int) -> dict:
+    topo = RackTopology(P=4, cross_bw=1e3, intra_bw=1e4)
+    ff, _ = _solo_stats(topo, seed)
+    # crash mid-shuffle: past the map phase, inside the JCT
+    crash_at = ff.phase_times.get("map", 0.0) + 0.6 * (
+        ff.jct - ff.phase_times.get("map", 0.0))
+    crashed, _ = _solo_stats(topo, seed, crash_at=crash_at)
+    delta = crashed.jct - ff.jct
+    rel_err = abs(crashed.blame["recovery"] - delta) / max(ff.jct, 1e-12)
+    assert delta > 0, "crash did not slow the job"
+    assert rel_err <= RESIDUAL_TOL, \
+        f"recovery blame != degraded-schedule delta (rel err {rel_err:.3e})"
+    assert _rel_residual(crashed) <= RESIDUAL_TOL
+    print(f"  [crash] recovery {crashed.blame['recovery']:.4f}s == "
+          f"JCT delta {delta:.4f}s (rel err {rel_err:.1e})")
+    return {"jct_ff": ff.jct, "jct_crashed": crashed.jct,
+            "recovery_s": crashed.blame["recovery"], "jct_delta": delta,
+            "recovery_rel_err": rel_err}
+
+
+def _scheduled_run(seed: int, n_jobs: int, rate: float,
+                   telemetry: bool = True):
+    topo = RackTopology(P=4, cross_bw=2e4, intra_bw=2e5)
+    cluster = ClusterSim(topo, 8, seed=seed, telemetry=telemetry)
+    chooser = SchemeChooser(8, cost_model=COSTS, compile_real_plans=False)
+    wl = PoissonWorkload(default_catalog(8, 4), n_jobs=n_jobs, rate=rate)
+    sched = MultiJobScheduler(chooser, policy="fifo", max_concurrent=4)
+    stats = sched.run(wl.generate(seed), cluster)
+    return cluster, sched, stats
+
+
+def attribution_load_sweep(seed: int, smoke: bool) -> dict:
+    n_jobs = 8 if smoke else 16
+    points = []
+    for rate in (0.5, 2.0, 8.0):
+        _, _, stats = _scheduled_run(seed, n_jobs, rate, telemetry=False)
+        blames = [s.blame for s in stats if s.blame is not None]
+        mean = math.fsum(b["contention"] + b["queueing"]
+                         for b in blames) / len(blames)
+        points.append({"rate": rate, "n": len(blames),
+                       "mean_contention_queueing_s": mean})
+    vals = [p["mean_contention_queueing_s"] for p in points]
+    assert all(vals[i] <= vals[i + 1] + 1e-12 for i in range(len(vals) - 1)), \
+        f"contention blame not monotone in offered load: {vals}"
+    print(f"  [load] mean contention+queueing {['%.4f' % v for v in vals]} "
+          f"over rates (0.5, 2, 8)")
+    return {"points": points}
+
+
+# ---------------------------------------------------------------------------
+# Section 3: determinism (telemetry bytes, golden traces untouched)
+# ---------------------------------------------------------------------------
+
+def determinism(seed: int, smoke: bool, out_dir: str) -> dict:
+    n_jobs = 6 if smoke else 12
+    shas = []
+    trace_shas = {}
+    for tag, telem in (("on_a", True), ("on_b", True), ("off", False)):
+        cluster, _, _ = _scheduled_run(seed, n_jobs, 4.0, telemetry=telem)
+        trace_blob = json.dumps(to_chrome_trace(cluster.tracer.events),
+                                sort_keys=True).encode()
+        trace_shas[tag] = hashlib.sha256(trace_blob).hexdigest()
+        if telem:
+            blob = json.dumps(cluster.telemetry.to_dict(),
+                              sort_keys=True).encode()
+            shas.append(hashlib.sha256(blob).hexdigest())
+    assert shas[0] == shas[1], "telemetry dump not byte-identical per seed"
+    assert len(set(trace_shas.values())) == 1, \
+        "trace events differ with telemetry on vs off"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "blame_telemetry.json")
+    cluster, _, _ = _scheduled_run(seed, n_jobs, 4.0, telemetry=True)
+    with open(path, "w") as f:
+        json.dump(cluster.telemetry.to_dict(), f, sort_keys=True)
+    print(f"  [determinism] telemetry sha {shas[0][:12]} (x2), traces "
+          f"identical on/off")
+    return {"telemetry_sha256": shas[0], "telemetry_reruns_match": True,
+            "trace_invariant_under_telemetry": True,
+            "telemetry_path": os.path.relpath(path)}
+
+
+# ---------------------------------------------------------------------------
+# Section 4: trace-side extraction agrees with stats-side blame
+# ---------------------------------------------------------------------------
+
+def extraction(seed: int, smoke: bool) -> dict:
+    cluster, _, stats = _scheduled_run(seed, 6 if smoke else 16, 4.0)
+    events = list(cluster.tracer.events)
+    reports = [obs_blame.extract_blame(events, s)   # raises on disagreement
+               for s in stats if s.blame is not None]
+    fleet = obs_blame.fleet_blame(reports)
+    max_res = max(abs(r.residual) / max(r.jct, 1e-12) for r in reports)
+    assert max_res <= RESIDUAL_TOL
+    print(f"  [extract] {len(reports)} jobs re-derived from trace, "
+          f"max rel residual {max_res:.3e}")
+    return {"n_jobs": len(reports), "max_rel_residual": max_res,
+            "fleet_p99": fleet}
+
+
+def main() -> None:
+    ap = make_parser(__doc__.splitlines()[0], "BENCH_blame.json",
+                     default_iters=1)
+    args = ap.parse_args()
+    metrics.reset()
+
+    print("# exactness: blame sums to JCT on the Table I grid")
+    exact = exactness(args.seed, args.smoke)
+
+    print("# attribution: injected causes move the blame")
+    attr = {"skew": attribution_skew(args.seed),
+            "straggle": attribution_straggle(args.seed),
+            "crash": attribution_crash(args.seed),
+            "load": attribution_load_sweep(args.seed, args.smoke)}
+
+    print("# determinism: telemetry bytes + golden traces")
+    det = determinism(args.seed, args.smoke, "bench_out")
+
+    print("# extraction: trace-derived blame agrees with stats")
+    ext = extraction(args.seed, args.smoke)
+
+    emit_report({"exactness": exact, "attribution": attr,
+                 "determinism": det, "extract": ext},
+                bench="blame", out_path=args.out, smoke=args.smoke,
+                seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -40,6 +40,13 @@ TRACKED: Dict[str, Dict[str, str]] = {
         "phase_fit.worst_rel_rmse": "lower",
     },
     "obs": {"overhead.overhead_frac": "lower"},
+    "blame": {
+        "exactness.max_rel_residual": "lower",
+        "extract.max_rel_residual": "lower",
+        "attribution.crash.recovery_rel_err": "lower",
+        "attribution.skew.intra_blame_ratio": "higher",
+        "attribution.straggle.map_straggle_share": "higher",
+    },
     "sim": {"scheduler_wins.mean_jct_ratio": "lower"},
 }
 

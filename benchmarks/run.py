@@ -15,8 +15,9 @@ import argparse
 import sys
 import traceback
 
-from . import (calibration_bench, faults_bench, obs_bench, roofline_report,
-               scale_bench, shuffle_bench, table1_costs, table2_locality)
+from . import (blame_bench, calibration_bench, faults_bench, obs_bench,
+               roofline_report, scale_bench, shuffle_bench, table1_costs,
+               table2_locality)
 
 
 def _obs_report() -> None:
@@ -32,6 +33,7 @@ SECTIONS = {
     "scale": scale_bench.main,
     "faults": faults_bench.main,
     "obs": obs_bench.main,
+    "blame": blame_bench.main,
     "calibration": calibration_bench.main,
     "report": _obs_report,
 }

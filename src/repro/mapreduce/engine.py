@@ -76,6 +76,12 @@ class JobResult:
     # fields JobStats carries on the sim side
     intra_rack_bytes: float = 0.0
     cross_rack_bytes: float = 0.0
+    # measured-wall-clock blame components (repro.obs.blame schema) from
+    # the run's engine_phase trace spans; None when tracing is disabled.
+    # Components sum to the total traced phase wall (the engine-side
+    # exactness law) — the fused device program stays one indivisible
+    # 'map_shuffle_reduce' entry rather than a fabricated per-phase split
+    blame: Dict[str, float] | None = None
 
 
 def _validate_mesh(mesh: Mesh, p: SchemeParams) -> None:
@@ -184,6 +190,33 @@ def _fused_executable(job: MapReduceJob, plan: HybridShufflePlan, mesh: Mesh,
     return jax.jit(fn, donate_argnums=donate)
 
 
+def _blame_from_spans(events, cost) -> Dict[str, float] | None:
+    """Fold one run's ``engine_phase`` trace spans into blame components
+    (:mod:`repro.obs.blame` schema).  Host phases map directly; a measured
+    legacy ``shuffle`` wall is split ``shuffle_cross`` / ``shuffle_intra``
+    by the scheme's closed-form unit ratio (the same convention as
+    :func:`repro.obs.blame.blame_from_phase_timings`); the fused device
+    program is kept whole under ``map_shuffle_reduce``.  Returns None when
+    no spans were traced (tracing disabled)."""
+    phases: Dict[str, float] = {}
+    for ev in events:
+        if ev.kind == "engine_phase" and ev.dur is not None:
+            phases[ev.phase] = phases.get(ev.phase, 0.0) + float(ev.dur)
+    if not phases:
+        return None
+    comps: Dict[str, float] = {}
+    for k in ("plan_compile", "map", "pack", "reduce",
+              "map_shuffle_reduce"):
+        if k in phases:
+            comps[k] = phases[k]
+    if "shuffle" in phases:
+        tot = cost.intra + cost.cross
+        frac = cost.cross / tot if tot > 0 else 0.5
+        comps["shuffle_cross"] = phases["shuffle"] * frac
+        comps["shuffle_intra"] = phases["shuffle"] * (1.0 - frac)
+    return comps
+
+
 def run_job_distributed(job: MapReduceJob, subfiles: np.ndarray,
                         params: SchemeParams, mesh: Mesh,
                         r: int | None = None, *, fused: bool = True,
@@ -244,6 +277,7 @@ def run_job_distributed(job: MapReduceJob, subfiles: np.ndarray,
         return res
     perm = getattr(placement, "perm", placement)
     tracer = get_tracer()
+    span_lo = len(tracer.events)
     with tracer.span("plan_compile", kind="engine_phase",
                      job=job.name, family=scheme_family):
         plan = compile_hybrid_plan(p, perm=perm, family=scheme_family)
@@ -282,7 +316,8 @@ def run_job_distributed(job: MapReduceJob, subfiles: np.ndarray,
     refresh_cache_metrics()
     return JobResult(final, c.intra, c.cross, scheme,
                      intra_rack_bytes=rb.intra_total,
-                     cross_rack_bytes=rb.cross_total)
+                     cross_rack_bytes=rb.cross_total,
+                     blame=_blame_from_spans(tracer.events[span_lo:], c))
 
 
 # ---------------------------------------------------------------------------

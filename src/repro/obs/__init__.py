@@ -7,7 +7,12 @@ Three instruments with one schema (see docs/observability.md):
   * :mod:`repro.obs.tracing` — structured :class:`TraceEvent` spans and
     instants with JSONL and Chrome/Perfetto ``trace_event`` exporters;
   * :mod:`repro.obs.bytes` — rack-level byte accounting from compiled
-    plans, reconciled against the ``CommCost`` closed forms per job.
+    plans, reconciled against the ``CommCost`` closed forms per job;
+  * :mod:`repro.obs.blame` — per-job JCT blame decomposition under an
+    exactness law (components sum to measured JCT) plus the critical-path
+    extractor over the trace stream and fleet-level p99 rollups;
+  * :mod:`repro.obs.drift` — predicted-vs-actual reconciliation, EWMA
+    drift detection, and the per-component error breakdown.
 
 Import discipline: ``repro.core`` never imports ``repro.obs`` (obs.bytes
 reaches into core, so the reverse edge would cycle); the engine, sim and
@@ -15,11 +20,15 @@ scheduler import obs directly, and core's cache counters are pulled in
 lazily via :func:`repro.obs.metrics.collect_cache_metrics`.
 """
 from . import bytes  # noqa: A004 - module name mirrors the instrument
-from . import drift, metrics, report, tracing
+from . import blame, drift, metrics, report, tracing
+from .blame import (COMPONENTS, BlameReport, blame_from_phase_timings,
+                    blame_report, critical_path, decompose, extract_blame,
+                    fleet_blame)
 from .bytes import (ByteReconciliationError, RackBytes, closed_form_bytes,
                     degraded_rack_bytes, plan_rack_bytes, reconcile,
                     record_rack_bytes)
-from .drift import DriftConfig, DriftMonitor, record_prediction
+from .drift import (DriftConfig, DriftMonitor, record_blame,
+                    record_component_errors, record_prediction)
 from .metrics import (Counter, Gauge, Histogram, LabelCardinalityError,
                       MetricsRegistry, collect_cache_metrics,
                       refresh_cache_metrics)
@@ -29,11 +38,14 @@ from .tracing import (TraceEvent, Tracer, enable_tracing, get_tracer,
                       validate_chrome_trace)
 
 __all__ = [
-    "metrics", "tracing", "bytes", "drift", "report",
+    "metrics", "tracing", "bytes", "drift", "report", "blame",
+    "COMPONENTS", "BlameReport", "blame_from_phase_timings", "blame_report",
+    "critical_path", "decompose", "extract_blame", "fleet_blame",
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "LabelCardinalityError", "collect_cache_metrics",
     "refresh_cache_metrics",
-    "DriftConfig", "DriftMonitor", "record_prediction",
+    "DriftConfig", "DriftMonitor", "record_blame",
+    "record_component_errors", "record_prediction",
     "build_report", "render_markdown", "render_html", "write_report",
     "TraceEvent", "Tracer", "get_tracer", "enable_tracing",
     "spans_from_phase_timings", "to_jsonl", "to_chrome_trace",

@@ -66,6 +66,54 @@ def record_prediction(predicted: float, actual: float, layer: str = "sim",
     return rel
 
 
+def record_blame(components: Dict[str, float], layer: str = "sim",
+                 reg: Optional[_metrics.MetricsRegistry] = None,
+                 **labels: object) -> None:
+    """Fold one job's blame decomposition (:func:`repro.obs.blame
+    .decompose`) into the registry: ``jct_blame_seconds{component,layer}``
+    accumulates per-component seconds across completions.  A gauge (via
+    ``add``), not a counter, because ``map_straggle`` can go negative when
+    speculative backups beat the home server's serial ideal."""
+    reg = reg if reg is not None else _metrics.registry()
+    g = reg.gauge("jct_blame_seconds",
+                  "accumulated JCT blame seconds by component "
+                  "(repro.obs.blame exactness-law decomposition)")
+    jobs = reg.counter("jct_blame_jobs_total",
+                       "jobs folded into jct_blame_seconds")
+    for comp in sorted(components):
+        g.add(float(components[comp]), component=comp, layer=layer, **labels)
+    jobs.inc(layer=layer, **labels)
+
+
+def record_component_errors(estimated: Dict[str, float],
+                            actual: Dict[str, float], layer: str = "sim",
+                            reg: Optional[_metrics.MetricsRegistry] = None,
+                            **labels: object) -> Dict[str, float]:
+    """Per-component prediction-error breakdown: what the chooser's
+    estimate missed, component by component (the drift layer's refinement
+    of the scalar ``jct_prediction_*`` stream).
+
+    Records ``jct_component_error_seconds{component,layer}`` (absolute
+    error histogram) and ``jct_component_bias_seconds{component,layer}``
+    (signed actual - estimated, accumulated — positive bias on
+    ``contention`` means the chooser systematically under-prices network
+    sharing).  Returns the signed errors for callers that fold further.
+    """
+    reg = reg if reg is not None else _metrics.registry()
+    hist = reg.histogram("jct_component_error_seconds",
+                         "absolute per-component JCT prediction error (s)")
+    bias = reg.gauge("jct_component_bias_seconds",
+                     "accumulated signed per-component prediction error "
+                     "(actual - estimated, s)")
+    out: Dict[str, float] = {}
+    for comp in sorted(set(estimated) | set(actual)):
+        err = float(actual.get(comp, 0.0)) - float(estimated.get(comp, 0.0))
+        out[comp] = err
+        hist.observe(abs(err), component=comp, layer=layer, **labels)
+        bias.add(err, component=comp, layer=layer, **labels)
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class DriftConfig:
     """Knobs of the EWMA drift detector.
@@ -155,5 +203,6 @@ class DriftMonitor:
                 "threshold": self.config.threshold}
 
 
-__all__ = ["DriftConfig", "DriftMonitor", "record_prediction",
+__all__ = ["DriftConfig", "DriftMonitor", "record_blame",
+           "record_component_errors", "record_prediction",
            "REL_ERR_BUCKETS"]

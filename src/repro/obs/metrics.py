@@ -164,6 +164,55 @@ class Histogram(_Metric):
                 "counts": list(st.counts), "sum": st.total, "count": st.n}
 
 
+# ---------------------------------------------------------------------------
+# Prometheus text exposition helpers
+# ---------------------------------------------------------------------------
+
+def _prom_metric_name(name: str) -> str:
+    """Sanitize to the Prometheus metric-name charset
+    ``[a-zA-Z_:][a-zA-Z0-9_:]*`` (invalid characters become ``_``)."""
+    out = [c if (c.isascii() and (c.isalnum() or c in "_:")) else "_"
+           for c in name]
+    if not out:
+        return "_"
+    if out[0].isdigit():
+        out.insert(0, "_")
+    return "".join(out)
+
+
+def _prom_label_name(name: str) -> str:
+    """Label names allow ``[a-zA-Z_][a-zA-Z0-9_]*`` (no colon)."""
+    out = [c if (c.isascii() and (c.isalnum() or c == "_")) else "_"
+           for c in name]
+    if not out:
+        return "_"
+    if out[0].isdigit():
+        out.insert(0, "_")
+    return "".join(out)
+
+
+def _prom_label_value(value: str) -> str:
+    """Escape per the exposition format: backslash, double-quote, newline."""
+    return (value.replace("\\", r"\\").replace('"', r'\"')
+            .replace("\n", r"\n"))
+
+
+def _prom_labels(pairs: List[Tuple[str, str]]) -> str:
+    if not pairs:
+        return ""
+    return "{" + ",".join(f'{k}="{v}"' for k, v in pairs) + "}"
+
+
+def _prom_number(v: float) -> str:
+    if v == float("inf"):
+        return "+Inf"
+    if v == float("-inf"):
+        return "-Inf"
+    if v != v:
+        return "NaN"
+    return repr(float(v))
+
+
 class MetricsRegistry:
     """Name -> metric map with declare-on-first-use semantics.
 
@@ -224,6 +273,42 @@ class MetricsRegistry:
         """Drop the declarations too (a fully fresh registry)."""
         self._metrics.clear()
 
+    def to_prometheus_text(self) -> str:
+        """Prometheus text exposition (format version 0.0.4) of every
+        series: ``# HELP`` / ``# TYPE`` headers, sanitized metric and label
+        names, escaped label values, and the histogram ``_bucket`` (with
+        cumulative counts and an ``le="+Inf"`` terminal) / ``_sum`` /
+        ``_count`` convention.  Output is deterministic: metrics sorted by
+        name, series by label key — same contract as :meth:`snapshot`.
+        """
+        lines: List[str] = []
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            pname = _prom_metric_name(name)
+            if m.help:
+                esc = m.help.replace("\\", r"\\").replace("\n", r"\n")
+                lines.append(f"# HELP {pname} {esc}")
+            lines.append(f"# TYPE {pname} {m.kind}")
+            for key in sorted(m._series):
+                val = m._series[key]
+                pairs = [(_prom_label_name(k), _prom_label_value(v))
+                         for k, v in key]
+                if isinstance(m, Histogram):
+                    # stored counts are already cumulative (Prometheus
+                    # convention) — emit as-is
+                    for b, c in zip(m.buckets, val.counts):
+                        le = _prom_number(b)
+                        lbl = _prom_labels(pairs + [("le", le)])
+                        lines.append(f"{pname}_bucket{lbl} {c}")
+                    lbl = _prom_labels(pairs)
+                    lines.append(f"{pname}_sum{lbl} "
+                                 f"{_prom_number(val.total)}")
+                    lines.append(f"{pname}_count{lbl} {val.n}")
+                else:
+                    lines.append(f"{pname}{_prom_labels(pairs)} "
+                                 f"{_prom_number(float(val))}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
 
 # ---------------------------------------------------------------------------
 # Default process-local registry + module-level conveniences
@@ -252,6 +337,10 @@ def histogram(name: str, help: str = "", **kwargs) -> Histogram:
 
 def snapshot() -> Dict[str, Dict[str, object]]:
     return _REGISTRY.snapshot()
+
+
+def to_prometheus_text() -> str:
+    return _REGISTRY.to_prometheus_text()
 
 
 def reset() -> None:

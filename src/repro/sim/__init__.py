@@ -17,7 +17,8 @@ from .cluster import (ClusterSim, CostModel, DeterministicSlowdown,
                       StragglerModel, TaskMapPhase, calibrate,
                       measurements_from_pipeline_bench, phase_work,
                       simulate_single_job)
-from .network import ROOT, FluidNetwork, RackTopology, tor
+from .network import (ROOT, FlowRecord, FluidNetwork, NetworkTelemetry,
+                      RackTopology, resource_key, tor)
 from .scheduler import (Decision, MultiJobScheduler, POLICIES, SchemeChooser,
                         run_scheduled)
 from .workload import (BurstyWorkload, DiurnalWorkload, JOB_ZOO, JobSpec,
@@ -32,7 +33,8 @@ __all__ = [
     "JobStats", "MapTask", "MapTaskAttempt", "NoStragglers", "PhaseCoeffs",
     "RackCorrelated", "StragglerModel", "TaskMapPhase", "calibrate",
     "measurements_from_pipeline_bench", "phase_work", "simulate_single_job",
-    "ROOT", "FluidNetwork", "RackTopology", "tor",
+    "ROOT", "FlowRecord", "FluidNetwork", "NetworkTelemetry",
+    "RackTopology", "resource_key", "tor",
     "Decision", "MultiJobScheduler", "POLICIES", "SchemeChooser",
     "run_scheduled",
     "BurstyWorkload", "DiurnalWorkload", "JOB_ZOO", "JobSpec",

@@ -39,10 +39,12 @@ from ..core.assignment import (coded_assignment, hybrid_assignment,
 from ..core.degraded import degraded_stage_traffic
 from ..core.params import SchemeParams
 from ..core.shuffle_plan import StageTraffic, scheme_stage_traffic
+from ..obs import blame as obs_blame
 from ..obs import metrics as obs_metrics
 from ..obs.tracing import Tracer
 from .events import Event, EventQueue, TraceEntry
-from .network import ROOT, FluidNetwork, RackTopology, tor
+from .network import (ROOT, FluidNetwork, NetworkTelemetry, RackTopology,
+                      tor)
 from .workload import JobSpec
 
 COMPUTE_PHASES = ("map", "pack", "reduce")
@@ -576,12 +578,13 @@ class TaskMapPhase:
         if a.state == "fetching" and not self.done and not a.task.done:
             self._start_compute(a)
 
-    def _cancel_attempt(self, a: MapTaskAttempt) -> None:
+    def _cancel_attempt(self, a: MapTaskAttempt,
+                        reason: str = "speculation") -> None:
         state = a.state
         a.state = "cancelled"
         if state == "fetching":
             if a.fetch_flow is not None:
-                self.sim.network.cancel_flow(a.fetch_flow)
+                self.sim.network.cancel_flow(a.fetch_flow, reason=reason)
                 a.fetch_flow = None
             if self.running[a.server] is a:
                 self.running[a.server] = None
@@ -639,7 +642,7 @@ class TaskMapPhase:
         for a in list(self._attempts.values()):
             if a.server in dead and a.state in ("queued", "fetching",
                                                 "running"):
-                self._cancel_attempt(a)
+                self._cancel_attempt(a, reason="crash")
         for task in self.tasks:
             if dead.intersection(task.stores):
                 task.stores = tuple(s for s in task.stores if s not in dead)
@@ -717,6 +720,15 @@ class _SimJob:
     bytes_intra: float = 0.0
     bytes_cross: float = 0.0
     bytes_fetch: float = 0.0
+    # blame bookkeeping (repro.obs.blame): zero-contention / straggler-free
+    # ideal seconds of COMPLETED network stages and the map barrier, the
+    # pending ideal of the stage currently in flight (committed at stage
+    # completion, discarded when a crash voids the stage), the failure-free
+    # shuffle ideals by tier, and crash-voided partial-phase seconds
+    ideal_times: Dict[str, float] = dataclasses.field(default_factory=dict)
+    pending_ideal: float = 0.0
+    ff_ideal: Dict[str, float] = dataclasses.field(default_factory=dict)
+    wasted_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -744,6 +756,15 @@ class JobStats:
     intra_rack_bytes: float = 0.0
     cross_rack_bytes: float = 0.0
     fetch_bytes: float = 0.0
+    # JCT blame decomposition (repro.obs.blame.decompose): components sum
+    # to jct exactly — the exactness law pinned by benchmarks/blame_bench;
+    # the raw inputs ride along so repro.obs.blame.extract_blame can rebuild
+    # the decomposition independently from the trace and cross-check it
+    blame: Optional[Dict[str, float]] = None
+    ideal_times: Dict[str, float] = dataclasses.field(default_factory=dict)
+    ff_shuffle_ideal: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    wasted_s: float = 0.0
 
     @property
     def jct(self) -> float:
@@ -765,9 +786,16 @@ class ClusterSim:
                  cost_model: CostModel = ZERO_COST,
                  stragglers: StragglerModel | None = None,
                  seed: int = 0,
-                 speculation: object | None = None) -> None:
+                 speculation: object | None = None,
+                 telemetry: bool = False) -> None:
         """``speculation`` is the cluster-wide default policy applied to
-        every submission that does not pass its own (see ``submit``)."""
+        every submission that does not pass its own (see ``submit``).
+
+        ``telemetry=True`` attaches a :class:`repro.sim.network
+        .NetworkTelemetry` observer (per-resource utilization series,
+        per-flow lifecycle + rate history) sampled on the sim clock; it is
+        purely observational — event order, traces, and stats are
+        bit-identical with it on or off."""
         if K % topology.P != 0:
             raise ValueError(f"P={topology.P} must divide K={K}")
         self.topology = topology
@@ -776,7 +804,10 @@ class ClusterSim:
         self.stragglers = stragglers or NoStragglers()
         self.speculation = speculation
         self.rng = np.random.default_rng(seed)
-        self.network = FluidNetwork(topology)
+        self.telemetry: Optional[NetworkTelemetry] = (
+            NetworkTelemetry(topology, clock=lambda: self.now)
+            if telemetry else None)
+        self.network = FluidNetwork(topology, telemetry=self.telemetry)
         self.queue = EventQueue()
         self.now = 0.0
         # structured trace: every event/span as a repro.obs TraceEvent,
@@ -834,6 +865,12 @@ class ClusterSim:
                       else self.speculation)
         self._next_job_id += 1
         self._jobs[job.job_id] = job
+        # failure-free zero-contention shuffle ideals by tier: the
+        # shuffle_cross / shuffle_intra blame components (repro.obs.blame)
+        d = float(spec.d)
+        job.ff_ideal = {"cross": 0.0, "intra": 0.0}
+        for st in stages:
+            job.ff_ideal[st.stage] += self._stage_ideal(st, d)
         self.queue.push(t, "submit", (job.job_id,),
                         lambda j=job: self._start_job(j))
         return job.job_id
@@ -936,6 +973,32 @@ class ClusterSim:
                   and isinstance(data[0], (int, np.integer)) else None)
         self.tracer.event(kind, job_id=job_id, phase=phase, data=data)
 
+    def _stage_ideal(self, stage: StageTraffic, d: float) -> float:
+        """Zero-contention drain time of one shuffle stage: the slower of
+        the root drain and the bottleneck ToR drain, plus the stage latency
+        floor (0.0 for an empty stage, which completes instantly)."""
+        t = -1.0
+        if stage.cross_pairs > 0:
+            t = stage.cross_pairs * d / self.topology.capacity(ROOT)
+        for rack, load in enumerate(stage.intra_pairs_per_rack):
+            if load > 0:
+                t = max(t, load * d / self.topology.capacity(tor(rack)))
+        if t < 0:
+            return 0.0
+        return t + self.topology.latency(stage.stage)
+
+    def _fetch_ideal(self, pl: object) -> float:
+        """Zero-contention drain time of the pre-map fetch stage."""
+        t = -1.0
+        if pl.cross_units > 0:
+            t = pl.cross_units / self.topology.capacity(ROOT)
+        for rack, load in enumerate(pl.intra_units_per_rack):
+            if load > 0:
+                t = max(t, load / self.topology.capacity(tor(rack)))
+        if t < 0:
+            return 0.0
+        return t + self.topology.latency("fetch")
+
     def _trace_phase_span(self, job: "_SimJob", phase: str) -> None:
         """Record the job phase that just ENDED as a span from its recorded
         start to now (the Perfetto lane structure of a sim run)."""
@@ -975,6 +1038,7 @@ class ClusterSim:
         else:
             job.phase = "fetch"
             job.phase_start = self.now
+            job.pending_ideal = self._fetch_ideal(pl)
 
     def _begin_compute(self, job: _SimJob, phase: str) -> None:
         if phase == "map" and job.speculation is not None:
@@ -985,11 +1049,18 @@ class ClusterSim:
         coeffs = self.cost_model.phase_coeffs(phase)
         work = phase_work(job.params, job.scheme, job.spec.d)[phase]
         factors = self.stragglers.factors(self.rng, self.K, self.topology.P)
+        base = np.ones(self.K)
         if phase == "map" and job.placement is not None:
             # locality imbalance compounds with stragglers per server; the
             # barrier still ends at the slowest server
-            factors = factors * np.asarray(job.placement.map_factors)
+            base = np.asarray(job.placement.map_factors)
+            factors = factors * base
         dur = float(np.max(factors) * coeffs.seconds(work))
+        if phase == "map":
+            # straggler-free barrier ideal (locality imbalance included):
+            # the map / map_straggle blame split (repro.obs.blame)
+            job.ideal_times["map"] = float(np.max(base)
+                                           * coeffs.seconds(work))
         self.queue.push(self.now + dur, "phase_done", (job.job_id, phase),
                         lambda: self._phase_done(job, phase))
 
@@ -999,6 +1070,7 @@ class ClusterSim:
         job.phase_start = self.now
         d = job.spec.d
         job.open_flows = 0
+        job.pending_ideal = self._stage_ideal(stage, float(d))
         if stage.cross_pairs > 0:
             self.network.start_flow(ROOT, stage.cross_pairs * d,
                                     (job.job_id, "cross"))
@@ -1017,6 +1089,18 @@ class ClusterSim:
         job.phase = "map"
         job.phase_start = self.now
         job.tasks = TaskMapPhase(self, job, job.speculation)
+        # straggler-free serial ideal: each home server runs its own tasks
+        # back to back at factor pl_factor[s] with no fetches (the home
+        # server always stores its inputs) — map_straggle = actual - this,
+        # and can go NEGATIVE when speculative backups steal work and beat
+        # the home server's serial bound (documented in repro.obs.blame)
+        coeffs = self.cost_model.phase_coeffs("map")
+        per_server = [0.0] * self.K
+        for task in job.tasks.tasks:
+            per_server[task.server] += coeffs.seconds(task.work)
+        job.ideal_times["map"] = max(
+            (float(job.tasks.pl_factors[s]) * per_server[s]
+             for s in range(self.K)), default=0.0)
         job.tasks.start()
 
     def _task_map_done(self, job: _SimJob) -> None:
@@ -1048,7 +1132,8 @@ class ClusterSim:
             return      # loss recorded; recovery (re)starts after the barrier
         is_shuffle = ph.startswith("shuffle:")
         if is_shuffle:
-            n = self.network.cancel_flows(lambda tag: tag[0] == job.job_id)
+            n = self.network.cancel_flows(
+                lambda tag: tag[0] == job.job_id, reason="crash")
             job.open_flows = 0
             self._trace("flows_cancelled", (job.job_id, n))
         # void the job's pending completions (stage latency / phase barrier)
@@ -1056,6 +1141,10 @@ class ClusterSim:
             lambda ev: ev.kind in ("stage_latency", "phase_done")
             and bool(ev.data) and ev.data[0] == job.job_id)
         if is_shuffle or ph == "reduce":
+            # the voided phase's elapsed time is pure crash waste: it never
+            # reaches phase_times, so the exactness law needs it here
+            job.wasted_s += self.now - job.phase_start
+            job.pending_ideal = 0.0
             self._begin_recovery(job)
 
     def _begin_recovery(self, job: _SimJob) -> None:
@@ -1133,6 +1222,9 @@ class ClusterSim:
 
     def _fetch_done(self, job: _SimJob) -> None:
         job.phase_times["fetch"] = self.now - job.phase_start
+        job.ideal_times["fetch"] = (job.ideal_times.get("fetch", 0.0)
+                                    + job.pending_ideal)
+        job.pending_ideal = 0.0
         self._trace_phase_span(job, "fetch")
         self._begin_compute(job, "map")
 
@@ -1141,6 +1233,11 @@ class ClusterSim:
         # accumulate (not assign): recovery re-runs stages after a crash
         job.phase_times[key] = (job.phase_times.get(key, 0.0)
                                 + self.now - job.phase_start)
+        # commit the as-run zero-contention ideal of the COMPLETED stage
+        # run (crash-voided runs discard theirs into wasted_s instead)
+        job.ideal_times[key] = (job.ideal_times.get(key, 0.0)
+                                + job.pending_ideal)
+        job.pending_ideal = 0.0
         self._trace_phase_span(job, key)
         job.stage_idx += 1
         if job.stage_idx < len(job.stages):
@@ -1175,6 +1272,15 @@ class ClusterSim:
                 self._begin_compute(job, "reduce")
         elif phase == "reduce":
             job.phase = "done"
+            # blame decomposition in canonical component order (exactness
+            # law: components sum to jct — see repro.obs.blame)
+            blame = obs_blame.decompose(
+                jct=self.now - job.spec.arrival,
+                queueing=job.submit_time - job.spec.arrival,
+                phase_times=job.phase_times,
+                ideal_times=job.ideal_times,
+                ff_shuffle_ideal=job.ff_ideal,
+                wasted_s=job.wasted_s)
             stats = JobStats(job.job_id, job.spec.name, job.scheme,
                              job.params.r, job.spec.arrival, job.submit_time,
                              self.now, dict(job.phase_times),
@@ -1190,7 +1296,11 @@ class ClusterSim:
                              recoveries=job.n_recoveries,
                              intra_rack_bytes=job.bytes_intra,
                              cross_rack_bytes=job.bytes_cross,
-                             fetch_bytes=job.bytes_fetch)
+                             fetch_bytes=job.bytes_fetch,
+                             blame=blame,
+                             ideal_times=dict(job.ideal_times),
+                             ff_shuffle_ideal=dict(job.ff_ideal),
+                             wasted_s=job.wasted_s)
             self.stats.append(stats)
             tot = obs_metrics.counter(
                 "shuffle_bytes_total", "shuffle value-units moved, by tier")

@@ -30,8 +30,10 @@ from ..core.coded_collectives import compile_hybrid_plan, plan_cache_info
 from ..core.params import SchemeParams
 from ..core.plan_registry import family_of_scheme
 from ..core.shuffle_plan import scheme_stage_traffic
+from ..obs import blame as obs_blame
 from ..obs import metrics as obs_metrics
-from ..obs.drift import DriftMonitor
+from ..obs.drift import (DriftMonitor, record_blame,
+                         record_component_errors)
 from .cluster import ClusterSim, CostModel, JobStats, calibrate, phase_work
 from .network import ROOT, tor
 from .workload import JobSpec
@@ -52,6 +54,10 @@ class Decision:
     placement: Optional[object] = None
     # speculation policy handed to ClusterSim.submit (None = barrier map)
     speculation: Optional[object] = None
+    # component-wise view of est_jct (repro.obs.blame COMPONENTS keys),
+    # priced by SchemeChooser.estimate_components for the WINNING candidate;
+    # reconciled per-component against the job's actual blame at completion
+    est_components: Optional[Dict[str, float]] = None
 
 
 class SchemeChooser:
@@ -215,6 +221,82 @@ class SchemeChooser:
                                                            cluster)
         return est
 
+    def estimate_components(self, spec: JobSpec, scheme: str, r: int,
+                            cluster: ClusterSim,
+                            placement: Optional[object] = None
+                            ) -> Optional[Dict[str, float]]:
+        """Component-wise view of :meth:`estimate`, keyed like
+        :data:`repro.obs.blame.COMPONENTS`: the same pieces the estimate
+        sums, attributed the same way the simulator attributes the actuals
+        — zero-contention stage ideals under ``fetch`` / ``shuffle_*``,
+        backlog-induced excess under ``contention``, straggler inflation of
+        the map barrier under ``map_straggle``, and the availability charge
+        under ``recovery``.  Components sum to :meth:`estimate` up to float
+        round-off (``estimate`` itself is untouched — admission decisions
+        are bit-identical with or without this view).  ``queueing`` is 0:
+        the estimate is priced AT admission and predicts finish - submit.
+        """
+        try:
+            p = SchemeParams(K=self.K, P=cluster.topology.P,
+                             Q=spec.Q, N=spec.N, r=r)
+            stages = scheme_stage_traffic(p, scheme, check=True)
+        except ValueError:
+            return None
+        comps = {k: 0.0 for k in obs_blame.COMPONENTS}
+        comps["plan_compile"] = self._compile_charge(p, scheme,
+                                                     probe=False)[0]
+        topo = cluster.topology
+        if placement is not None and placement.total_units > 0:
+            ideal = [0.0]
+            loaded = [0.0]
+            if placement.cross_units > 0:
+                cap = topo.capacity(ROOT)
+                ideal.append(placement.cross_units / cap)
+                loaded.append((placement.cross_units
+                               + cluster.network.backlog(ROOT)) / cap)
+            for rack, units in enumerate(placement.intra_units_per_rack):
+                if units > 0:
+                    cap = topo.capacity(tor(rack))
+                    ideal.append(units / cap)
+                    loaded.append((units
+                                   + cluster.network.backlog(tor(rack)))
+                                  / cap)
+            comps["fetch"] = max(ideal) + topo.latency("fetch")
+            comps["contention"] += max(loaded) - max(ideal)
+        map_skew = (max(placement.map_factors)
+                    if placement is not None else 1.0)
+        infl = self._phase_inflation(scheme, r)
+        work = phase_work(p, scheme, spec.d)
+        for phase in ("map", "pack", "reduce"):
+            secs = self.cost_model.phase_coeffs(phase).seconds(work[phase])
+            if phase == "map":
+                comps["map"] = secs * map_skew
+                comps["map_straggle"] = (infl - 1.0) * secs * map_skew
+            else:
+                comps[phase] = infl * secs
+        for stage in stages:
+            ideal = [0.0]
+            loaded = [0.0]
+            if stage.cross_pairs > 0:
+                cap = topo.capacity(ROOT)
+                ideal.append(stage.cross_pairs * spec.d / cap)
+                loaded.append((stage.cross_pairs * spec.d
+                               + cluster.network.backlog(ROOT)) / cap)
+            for rack, pairs in enumerate(stage.intra_pairs_per_rack):
+                if pairs > 0:
+                    cap = topo.capacity(tor(rack))
+                    ideal.append(pairs * spec.d / cap)
+                    loaded.append((pairs * spec.d
+                                   + cluster.network.backlog(tor(rack)))
+                                  / cap)
+            comps[f"shuffle_{stage.stage}"] += (max(ideal)
+                                                + topo.latency(stage.stage))
+            comps["contention"] += max(loaded) - max(ideal)
+        if self.crash_prob > 0.0:
+            comps["recovery"] = self.crash_prob * self._recovery_charge(
+                p, scheme, spec, cluster)
+        return comps
+
     def _recovery_charge(self, p: SchemeParams, scheme: str, spec: JobSpec,
                          cluster: ClusterSim) -> float:
         """Expected seconds to recover from ONE server crash mid-shuffle
@@ -306,8 +388,10 @@ class SchemeChooser:
             "chooser_decisions_total",
             "scheme decisions by (scheme, r, family)").inc(
                 scheme=scheme, r=r, family=family_of_scheme(scheme) or "none")
+        est_components = self.estimate_components(spec, scheme, r, cluster,
+                                                  placement=placement)
         return Decision(scheme, r, est, compile_s, hit, placement,
-                        self.speculation)
+                        self.speculation, est_components)
 
     def _candidate_placement(self, spec: JobSpec, scheme: str, r: int,
                              cluster: ClusterSim) -> Optional[object]:
@@ -448,6 +532,17 @@ class MultiJobScheduler:
         # it predicts is finish - submit, not the arrival-based stats.jct
         fired = self.drift.observe(d.est_jct, stats.finish - stats.submit,
                                    scheme=d.scheme)
+        if stats.blame is not None:
+            # per-admission blame: fold the job's decomposition into the
+            # fleet gauges, and break the chooser's miss down by component
+            # (queueing is outside the estimate's scope — see
+            # estimate_components — so it is excluded from the comparison)
+            record_blame(stats.blame, layer="sim", scheme=d.scheme)
+            if d.est_components is not None:
+                actual = dict(stats.blame)
+                actual["queueing"] = 0.0
+                record_component_errors(d.est_components, actual,
+                                        layer="sim", scheme=d.scheme)
         if not self.recalibrate or spec is None:
             return
         from .calibration import measurement_row_from_stats

@@ -1,0 +1,290 @@
+"""Critical-path observatory tests (repro.obs.blame + sim telemetry): the
+JCT blame exactness law on Table I rows, cause attribution (stragglers,
+crashes), the trace-side critical-path extractor, network-telemetry
+determinism, cancelled-flow byte accounting, and the scheduler's
+per-admission component-error feed."""
+import hashlib
+import json
+import math
+
+import pytest
+
+from repro.core.params import TABLE1_GRID
+from repro.obs import blame as obs_blame
+from repro.obs import metrics
+from repro.obs.tracing import to_chrome_trace
+from repro.sim import (ClusterSim, CostModel, ExponentialTail, JobSpec,
+                       MultiJobScheduler, PhaseCoeffs, PoissonWorkload,
+                       RackTopology, SchemeChooser, default_catalog)
+
+COSTS = CostModel(map=PhaseCoeffs(1e-3, 1e-8),
+                  pack=PhaseCoeffs(5e-4, 5e-9),
+                  reduce=PhaseCoeffs(1e-3, 1e-8))
+SCHEMES = ("uncoded", "coded", "hybrid", "hybrid_resolvable")
+
+
+def _solo(scheme="hybrid", r=2, stragglers=None, crash_at=None,
+          telemetry=False, seed=0, topo=None, costs=COSTS):
+    topo = topo or RackTopology(P=4, cross_bw=1e3, intra_bw=1e4)
+    sim = ClusterSim(topo, 8, costs, stragglers=stragglers, seed=seed,
+                     telemetry=telemetry)
+    sim.submit(JobSpec("j", 48, 16, 2), scheme, r, time=0.0)
+    if crash_at is not None:
+        sim.inject_crash(crash_at, [0])
+    (stats,) = sim.run()
+    return stats, sim
+
+
+def _scheduled(seed=0, n_jobs=8, rate=4.0, telemetry=True):
+    topo = RackTopology(P=4, cross_bw=2e4, intra_bw=2e5)
+    cluster = ClusterSim(topo, 8, seed=seed, telemetry=telemetry)
+    chooser = SchemeChooser(8, cost_model=COSTS, compile_real_plans=False)
+    wl = PoissonWorkload(default_catalog(8, 4), n_jobs=n_jobs, rate=rate)
+    sched = MultiJobScheduler(chooser, policy="fifo", max_concurrent=4)
+    stats = sched.run(wl.generate(seed), cluster)
+    return cluster, sched, stats
+
+
+def _residual(stats):
+    return abs(stats.jct - math.fsum(stats.blame.values()))
+
+
+# ---------------------------------------------------------------------------
+# Exactness law
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_blame_sums_to_jct_on_table1_rows(scheme):
+    for (K, P, Q, N, r) in TABLE1_GRID[:3]:
+        topo = RackTopology(P=P, cross_bw=1e3, intra_bw=1e4)
+        sim = ClusterSim(topo, K, COSTS, seed=0)
+        sim.submit(JobSpec("exact", N, Q, 2), scheme, r, time=0.0,
+                   check=False)
+        (stats,) = sim.run()
+        assert stats.blame is not None
+        assert _residual(stats) <= 1e-9 * max(stats.jct, 1.0)
+        # zero-contention calibration identity: solo job => no contention
+        assert abs(stats.blame["contention"]) < 1e-9
+
+
+def test_blame_components_match_schema():
+    stats, _ = _solo()
+    assert set(stats.blame) == set(obs_blame.COMPONENTS)
+    rep = obs_blame.blame_report(stats)
+    assert rep.jct == stats.jct
+    assert abs(rep.residual) <= 1e-12
+
+
+def test_decompose_degrades_gracefully_without_ideals():
+    # missing ideal/failure-free inputs default to the actuals: the sum
+    # law must hold even for a caller that only has phase times
+    comps = obs_blame.decompose(
+        jct=10.0, queueing=1.0,
+        phase_times={"plan_compile": 0.5, "map": 3.0, "pack": 0.5,
+                     "shuffle:cross": 2.0, "shuffle:intra": 1.0,
+                     "reduce": 2.0})
+    assert abs(math.fsum(comps.values()) - 10.0) < 1e-12
+    assert comps["contention"] == 0.0 and comps["recovery"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Cause attribution
+# ---------------------------------------------------------------------------
+
+def test_straggler_tail_lands_in_map_straggle():
+    topo = RackTopology(P=4, cross_bw=1e6, intra_bw=1e7)
+    plain, _ = _solo(topo=topo)
+    tail, _ = _solo(topo=topo, stragglers=ExponentialTail(3.0))
+    assert abs(plain.blame["map_straggle"]) < 1e-12
+    assert tail.blame["map_straggle"] > 0
+    assert _residual(tail) <= 1e-9 * max(tail.jct, 1.0)
+
+
+def test_crash_recovery_blame_equals_degraded_delta():
+    ff, _ = _solo()
+    crash_at = ff.phase_times.get("map", 0.0) + 0.6 * (
+        ff.jct - ff.phase_times.get("map", 0.0))
+    crashed, _ = _solo(crash_at=crash_at)
+    delta = crashed.jct - ff.jct
+    assert delta > 0
+    assert abs(crashed.blame["recovery"] - delta) <= 1e-9 * ff.jct
+    assert _residual(crashed) <= 1e-9 * max(crashed.jct, 1.0)
+
+
+def test_rack_skew_shifts_intra_blame_and_telemetry_busy_time():
+    skewed = RackTopology(P=4, cross_bw=1e3, intra_bw=1e4,
+                          rack_bw_scale=(0.25, 1.0, 1.0, 1.0))
+    s0, _ = _solo()
+    s1, sim = _solo(topo=skewed, telemetry=True)
+    assert s1.blame["shuffle_intra"] > 1.5 * s0.blame["shuffle_intra"]
+    busy = {k: v["busy_s"] for k, v in sim.telemetry.utilization().items()
+            if k.startswith("tor:")}
+    assert max(sorted(busy), key=lambda k: busy[k]) == "tor:0"
+
+
+# ---------------------------------------------------------------------------
+# Trace-side extraction + fleet rollup
+# ---------------------------------------------------------------------------
+
+def test_extract_blame_agrees_with_stats_blame():
+    cluster, _, stats = _scheduled()
+    events = list(cluster.tracer.events)
+    done = [s for s in stats if s.blame is not None]
+    assert done
+    for s in done:
+        rep = obs_blame.extract_blame(events, s)   # raises on disagreement
+        assert abs(rep.residual) <= 1e-9 * max(rep.jct, 1.0)
+
+
+def test_critical_path_segments_are_ordered_and_cover_phases():
+    cluster, _, stats = _scheduled(n_jobs=4)
+    s = next(x for x in stats if x.blame is not None)
+    path = obs_blame.critical_path(list(cluster.tracer.events), s.job_id)
+    assert path
+    for a, b in zip(path, path[1:]):
+        assert a.end <= b.start + 1e-9
+    assert all(seg.end >= seg.start for seg in path)
+
+
+def test_fleet_blame_rollup_shape_and_tail():
+    _, _, stats = _scheduled()
+    reports = [obs_blame.blame_report(s) for s in stats
+               if s.blame is not None]
+    fleet = obs_blame.fleet_blame(reports, q=0.9)
+    assert fleet["n"] == len(reports)
+    assert fleet["jct_q"] >= fleet["jct_mean"] * 0.0
+    assert set(fleet["mean"]) == set(fleet["tail_share"])
+    assert fleet["max_abs_residual"] <= 1e-9
+    # empty fleet is well-defined (report edge case)
+    assert obs_blame.fleet_blame([])["n"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Telemetry determinism + cancelled-byte accounting
+# ---------------------------------------------------------------------------
+
+def test_network_telemetry_byte_identical_per_seed():
+    dumps = []
+    for _ in range(2):
+        cluster, _, _ = _scheduled(seed=3)
+        dumps.append(json.dumps(cluster.telemetry.to_dict(),
+                                sort_keys=True).encode())
+    assert hashlib.sha256(dumps[0]).hexdigest() == \
+        hashlib.sha256(dumps[1]).hexdigest()
+
+
+def test_traces_unchanged_with_telemetry_on_or_off():
+    docs = []
+    for telem in (True, False):
+        cluster, _, _ = _scheduled(seed=1, telemetry=telem)
+        docs.append(json.dumps(to_chrome_trace(cluster.tracer.events),
+                               sort_keys=True))
+    assert docs[0] == docs[1]
+
+
+def test_crash_cancel_counts_partially_drained_bytes():
+    metrics.reset()
+    ff, _ = _solo()
+    crash_at = ff.phase_times.get("map", 0.0) + 0.6 * (
+        ff.jct - ff.phase_times.get("map", 0.0))
+    _, sim = _solo(crash_at=crash_at, telemetry=True, seed=0)
+    snap = metrics.snapshot()
+    samples = snap.get("flow_cancelled_bytes_total", {}).get("samples", {})
+    crash_units = sum(v for k, v in samples.items()
+                      if json.loads(k).get("reason") == "crash")
+    assert crash_units > 0
+    # the telemetry-side mirror agrees on the total
+    assert abs(sum(sim.telemetry.cancelled_units().values())
+               - crash_units) < 1e-9 * max(crash_units, 1.0)
+
+
+def test_flow_records_carry_rate_history_and_outcomes():
+    _, sim = _solo(telemetry=True)
+    recs = list(sim.telemetry.flows.values())
+    assert recs
+    assert all(r.state == "done" for r in recs)
+    for r in recs:
+        assert r.rates and r.end >= r.start
+        assert all(rate >= 0 for _, rate in r.rates)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: component estimates + drift feed
+# ---------------------------------------------------------------------------
+
+def test_estimate_components_sum_to_estimate():
+    topo = RackTopology(P=4, cross_bw=1e3, intra_bw=1e4)
+    cluster = ClusterSim(topo, 8, COSTS, seed=0)
+    chooser = SchemeChooser(8, cost_model=COSTS, compile_real_plans=False)
+    spec = JobSpec("j", 48, 16, 2)
+    for scheme, r in (("hybrid", 2), ("coded", 3), ("uncoded", 1)):
+        est = chooser.estimate(spec, scheme, r, cluster)
+        comps = chooser.estimate_components(spec, scheme, r, cluster)
+        if est is None:
+            assert comps is None
+            continue
+        assert abs(math.fsum(comps.values()) - est) <= 1e-9 * max(est, 1.0)
+        assert comps["queueing"] == 0.0    # priced at admission
+
+
+def test_scheduler_records_blame_and_component_error_metrics():
+    metrics.reset()
+    _, sched, stats = _scheduled()
+    n_done = sum(1 for s in stats if s.blame is not None)
+    snap = metrics.snapshot()
+    jobs = sum(snap["jct_blame_jobs_total"]["samples"].values())
+    assert jobs == n_done
+    blame_comps = {json.loads(k)["component"]
+                   for k in snap["jct_blame_seconds"]["samples"]}
+    assert blame_comps == set(obs_blame.COMPONENTS)
+    assert "jct_component_bias_seconds" in snap
+    assert "jct_component_error_seconds" in snap
+    for d in sched.decisions.values():
+        assert d.est_components is not None
+
+
+# ---------------------------------------------------------------------------
+# Engine-side blame (measured spans)
+# ---------------------------------------------------------------------------
+
+def test_engine_job_result_blame_sums_to_traced_walls():
+    import numpy as np
+    from repro.core.params import SchemeParams
+    from repro.distributed.meshes import make_mesh
+    from repro.mapreduce.engine import run_job_distributed
+    from repro.mapreduce.jobs import histogram_job
+    from repro.obs.tracing import enable_tracing, get_tracer
+
+    p = SchemeParams(K=1, P=1, Q=4, N=6, r=1)
+    mesh = make_mesh((1, 1), ("rack", "server"))
+    job = histogram_job()
+    subs = np.random.default_rng(0).integers(
+        0, 1 << 16, size=(p.N, 64)).astype(np.int32)
+
+    res = run_job_distributed(job, subs, p, mesh, fused=True)
+    assert res.blame is None               # tracing disabled -> no blame
+
+    tracer = enable_tracing(True)
+    try:
+        for fused in (True, False):
+            n0 = len(tracer.events)
+            res = run_job_distributed(job, subs, p, mesh, fused=fused)
+            total = math.fsum(float(e.dur) for e in tracer.events[n0:]
+                              if e.kind == "engine_phase" and e.dur)
+            assert res.blame is not None
+            assert abs(math.fsum(res.blame.values()) - total) <= 1e-9
+            if not fused:       # legacy shuffle wall is split by tier
+                assert "shuffle_cross" in res.blame
+                assert "shuffle_intra" in res.blame
+    finally:
+        enable_tracing(False)
+
+
+def test_blame_from_phase_timings_splits_shuffle_by_tier():
+    row = {"seconds": {"plan_compile": 0.1, "map": 1.0, "pack": 0.2,
+                       "reduce": 0.3},
+           "meta": {"K": 8, "P": 4, "Q": 16, "N": 48, "r": 2,
+                    "shuffle_s": 0.6}}
+    comps = obs_blame.blame_from_phase_timings(row)
+    assert abs(math.fsum(comps.values()) - 2.2) < 1e-12
+    assert comps["shuffle_cross"] > 0 and comps["shuffle_intra"] > 0

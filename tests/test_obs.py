@@ -339,6 +339,154 @@ def test_chooser_decisions_counter_increments():
     assert {"sched_arrival", "sched_admit", "sched_drain"} <= kinds
 
 
+# ---------------------------------------------------------------------------
+# Prometheus text exposition
+# ---------------------------------------------------------------------------
+
+def _parse_prom(text):
+    """Minimal exposition-format parser for round-trip checks: returns
+    {metric_name: [(labels_dict, value), ...]} for sample lines."""
+    import re
+    out = {}
+    for line in text.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        name_labels, value = line.rsplit(" ", 1)
+        if "{" in name_labels:
+            name, rest = name_labels.split("{", 1)
+            labels = {k: v.replace(r'\"', '"').replace(r'\n', '\n')
+                      .replace(r'\\', '\\')
+                      for k, v in re.findall(
+                          r'([A-Za-z_][A-Za-z0-9_]*)="((?:[^"\\]|\\.)*)"',
+                          rest[:-1])}
+        else:
+            name, labels = name_labels, {}
+        out.setdefault(name, []).append((labels, float(value)))
+    return out
+
+
+def test_prometheus_counters_and_gauges_round_trip():
+    reg = metrics.MetricsRegistry()
+    c = reg.counter("decisions_total", "admission decisions")
+    c.inc(2, scheme="hybrid", r=2)
+    c.inc(3.5, scheme="coded", r=3)
+    reg.gauge("queue_depth", "jobs waiting").set(7.0, policy="fifo")
+    parsed = _parse_prom(reg.to_prometheus_text())
+    got = {frozenset(lb.items()): v for lb, v in parsed["decisions_total"]}
+    assert got[frozenset({("scheme", "hybrid"), ("r", "2")})] == 2.0
+    assert got[frozenset({("scheme", "coded"), ("r", "3")})] == 3.5
+    assert parsed["queue_depth"] == [({"policy": "fifo"}, 7.0)]
+    text = reg.to_prometheus_text()
+    assert "# HELP decisions_total admission decisions" in text
+    assert "# TYPE decisions_total counter" in text
+    assert "# TYPE queue_depth gauge" in text
+
+
+def test_prometheus_histogram_bucket_sum_count_convention():
+    reg = metrics.MetricsRegistry()
+    h = reg.histogram("lat_seconds", "latency", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 0.5, 5.0, 50.0):
+        h.observe(v, layer="sim")
+    parsed = _parse_prom(reg.to_prometheus_text())
+    buckets = {lb["le"]: v for lb, v in parsed["lat_seconds_bucket"]}
+    # cumulative counts per le, with a +Inf terminal equal to _count
+    assert buckets["0.1"] == 1 and buckets["1.0"] == 3
+    assert buckets["10.0"] == 4 and buckets["+Inf"] == 5
+    assert parsed["lat_seconds_count"] == [({"layer": "sim"}, 5.0)]
+    (_, total), = parsed["lat_seconds_sum"]
+    assert abs(total - 56.05) < 1e-9
+
+
+def test_prometheus_sanitizes_names_and_escapes_values():
+    reg = metrics.MetricsRegistry()
+    g = reg.gauge("9weird.name-x", 'multi\nline "help" \\slash')
+    g.set(1.5, **{"bad-label": 'va"l\\ue\nz'})
+    text = reg.to_prometheus_text()
+    assert "_9weird_name_x" in text          # digit prefix + charset fix
+    assert "bad_label" in text
+    assert r'va\"l\\ue\nz' in text           # escaped label value
+    assert "\\slash" in text                 # HELP keeps escaped backslash
+    parsed = _parse_prom(text)
+    (lb, v), = parsed["_9weird_name_x"]
+    assert v == 1.5 and lb["bad_label"] == 'va"l\\ue\nz'
+
+
+def test_prometheus_output_matches_snapshot_and_is_deterministic():
+    reg = metrics.MetricsRegistry()
+    reg.counter("a_total").inc(4, k="x")
+    reg.gauge("b").set(-2.5)
+    snap = reg.snapshot()
+    parsed = _parse_prom(reg.to_prometheus_text())
+    assert parsed["a_total"][0][1] == snap["a_total"]["samples"]['{"k": "x"}']
+    assert parsed["b"][0][1] == snap["b"]["samples"]["{}"]
+    assert reg.to_prometheus_text() == reg.to_prometheus_text()
+    assert metrics.to_prometheus_text() == \
+        metrics.registry().to_prometheus_text()
+
+
+# ---------------------------------------------------------------------------
+# Observatory report: new sections + edge cases
+# ---------------------------------------------------------------------------
+
+def test_report_renders_from_empty_registry():
+    from repro.obs import report as obs_report
+    rep = obs_report.build_report(snapshot={})
+    md = obs_report.render_markdown(rep)
+    html = obs_report.render_html(rep)
+    assert "_registry is empty_" in md
+    assert "_no network telemetry provided_" in md
+    assert "_no completed-job blame provided_" in md
+    assert "_no cancelled-flow bytes recorded_" in md
+    assert "no network telemetry provided" in html
+
+
+def test_report_tolerates_missing_metric_families():
+    from repro.obs import report as obs_report
+    # a snapshot with one counter and none of the families the report
+    # reassembles (rack matrices, prediction hists, cancelled bytes)
+    snap = {"lonely_total": {"type": "counter", "help": "",
+                             "samples": {"{}": 3.0}}}
+    rep = obs_report.build_report(snapshot=snap)
+    assert rep["rack_matrices"] == {} and rep["wasted"] == []
+    md = obs_report.render_markdown(rep)
+    assert "lonely_total" in md and "_no predictions recorded_" in md
+    assert "</html>" in obs_report.render_html(rep)
+
+
+def test_report_renders_utilization_and_blame_sections():
+    from repro.obs import report as obs_report
+    metrics.reset()
+    topo = RackTopology(P=3, cross_bw=1e3, intra_bw=1e4)
+    sim = ClusterSim(topo, K=9, cost_model=CostModel(
+        map=PhaseCoeffs(1e-3, 1e-8)), seed=0, telemetry=True)
+    sim.submit(JobSpec("histogram", 72, 18, 1), "hybrid", 2, time=0.0)
+    (stats,) = sim.run()
+    rep = obs_report.build_report(telemetry=sim.telemetry, stats=[stats])
+    resources = [u["resource"] for u in rep["link_utilization"]]
+    assert resources == ["root", "tor:0", "tor:1", "tor:2"]
+    assert rep["blame"]["jobs"][0]["jct"] == stats.jct
+    assert rep["blame"]["fleet"]["n"] == 1
+    md = obs_report.render_markdown(rep)
+    assert "## Link utilization" in md
+    assert "## JCT blame decomposition" in md
+    assert "shuffle_cross" in md
+    html = obs_report.render_html(rep)
+    assert "<h2>Link utilization</h2>" in html
+    assert "<h2>JCT blame decomposition</h2>" in html
+
+
+def test_report_surfaces_cancelled_flow_bytes():
+    from repro.obs import report as obs_report
+    metrics.reset()
+    metrics.counter("flow_cancelled_bytes_total").inc(
+        12.5, stage="cross", reason="crash")
+    rep = obs_report.build_report()
+    assert rep["wasted"] == [{"stage": "cross", "reason": "crash",
+                              "units": 12.5}]
+    md = obs_report.render_markdown(rep)
+    assert "## Wasted work (cancelled flows)" in md and "12.5" in md
+
+
 if __name__ == "__main__":          # regenerate the committed golden file
     doc = tracing.to_chrome_trace(_golden_sim().tracer.events)
     GOLDEN.write_text(json.dumps(doc, sort_keys=True, indent=1) + "\n")
